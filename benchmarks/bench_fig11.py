@@ -1,0 +1,53 @@
+"""Fig 11: batch-size latency prediction for b in {32, 64, 128} with (a) TRUE
+min/max latencies and (b) min/max PREDICTED by the cross-instance model."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.devices import PAPER_DEVICES
+from repro.core.ensemble import mape
+
+
+def run() -> dict:
+    ds = common.dataset().subset(PAPER_DEVICES)
+    train, test = common.split()
+    prophet = common.paper_profet()
+
+    mid_batches = (32, 64, 128)
+    true_mode = {b: [] for b in mid_batches}
+    pred_mode = {b: [] for b in mid_batches}
+
+    have = {c for c in ds.cases}
+    anchor = "T4"
+    for (m, b, p) in test:
+        if b not in mid_batches:
+            continue
+        lo_case, hi_case = (m, 16, p), (m, 256, p)
+        if lo_case not in have or hi_case not in have:
+            continue  # min/max config infeasible for this (model, pixel)
+        for gt in PAPER_DEVICES:
+            truth = ds.latency(gt, (m, b, p))
+            # (a) true min/max measured on the target
+            t_lo = ds.latency(gt, lo_case)
+            t_hi = ds.latency(gt, hi_case)
+            pa = prophet.predict_knob(gt, "batch", b, t_lo, t_hi)
+            true_mode[b].append((truth, float(pa)))
+            # (b) min/max predicted from the anchor profile
+            if gt != anchor:
+                pb = prophet.predict_two_phase(
+                    anchor, gt, "batch", b,
+                    ds.profile(anchor, lo_case), ds.profile(anchor, hi_case),
+                    case_min=lo_case, case_max=hi_case)
+                pred_mode[b].append((truth, float(pb)))
+
+    def tab(d):
+        return {b: {"mape": mape(*map(np.array, zip(*v))),
+                    "n": len(v)} for b, v in d.items() if v}
+
+    out = {"true_minmax": tab(true_mode), "pred_minmax": tab(pred_mode)}
+    common.save("fig11", out)
+    avg_true = np.mean([v["mape"] for v in out["true_minmax"].values()])
+    avg_pred = np.mean([v["mape"] for v in out["pred_minmax"].values()])
+    return {"true_minmax_avg_mape": avg_true,
+            "pred_minmax_avg_mape": avg_pred}

@@ -1,0 +1,43 @@
+"""Fig 12: order-1 vs order-2 polynomial knob model, per instance type."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import workloads
+from repro.core.devices import PAPER_DEVICES
+from repro.core.scaling import PolyScaler
+
+
+def run() -> dict:
+    ds = common.dataset().subset(PAPER_DEVICES)
+    train, test = common.split()
+
+    out = {}
+    for order in (1, 2):
+        per_dev = {}
+        for dev in PAPER_DEVICES:
+            kb, lat, grp = [], [], []
+            for (m, b, p) in train:
+                kb.append(b)
+                lat.append(ds.latency(dev, (m, b, p)))
+                grp.append(f"{m}|{p}")
+            sc = PolyScaler(order=order, min_knob=16, max_knob=256).fit(
+                np.array(kb, float), np.array(lat), np.array(grp))
+            have = set(ds.cases)
+            truths, preds = [], []
+            for (m, b, p) in test:
+                if b in (16, 256) or (m, 16, p) not in have \
+                        or (m, 256, p) not in have:
+                    continue
+                lo = ds.latency(dev, (m, 16, p))
+                hi = ds.latency(dev, (m, 256, p))
+                truths.append(ds.latency(dev, (m, b, p)))
+                preds.append(float(sc.predict(b, lo, hi)))
+            per_dev[dev] = common.metrics(np.array(truths), np.array(preds))
+        out[f"order{order}"] = per_dev
+
+    common.save("fig12", out)
+    avg = {o: np.mean([m["mape"] for m in per.values()])
+           for o, per in out.items()}
+    return {"order1_avg_mape": avg["order1"], "order2_avg_mape": avg["order2"]}

@@ -1,0 +1,67 @@
+"""Fig 2: CNN training latency/cost variation across GPU cloud instances.
+
+(a) LeNet5 vs AlexNet across instances (latency normalized to the best;
+    relative cost), (b) ResNet50 at 32 vs 128 px, (c) batch-scaling ratio
+    quantiles per instance — the non-linearity that motivates the order-2
+    knob model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import workloads
+from repro.core.devices import CATALOG, PAPER_DEVICES
+
+
+def run() -> dict:
+    ds = common.dataset()
+
+    def lat(d, case):
+        return ds.latency(d, case)
+
+    # --- (a) model x instance ---
+    fig2a = {}
+    for model, batch, pix in (("LeNet5", 16, 32), ("AlexNet", 16, 32)):
+        lats = {d: lat(d, (model, batch, pix)) for d in PAPER_DEVICES}
+        best = min(lats.values())
+        fig2a[model] = {
+            d: {"latency_ms": lats[d], "norm_latency": lats[d] / best,
+                "rel_cost": lats[d] * CATALOG[d].price_hr} for d in lats}
+
+    # --- (b) ResNet50 pixel sizes ---
+    fig2b = {}
+    for pix in (32, 128):
+        lats = {d: lat(d, ("ResNet50", 16, pix)) for d in PAPER_DEVICES}
+        fig2b[f"pix{pix}"] = {
+            d: {"latency_ms": lats[d],
+                "cost_per_1k_batches": lats[d] / 3.6e6 * 1e3
+                * CATALOG[d].price_hr} for d in lats}
+
+    # --- (c) batch scaling ratio quantiles per instance ---
+    fig2c = {}
+    for d in PAPER_DEVICES:
+        ratios = []
+        for (m, b, p) in ds.cases:
+            if b == 16:
+                continue
+            base = (m, 16, p)
+            if base in ds.measurements[d]:
+                ratios.append(lat(d, (m, b, p)) / lat(d, base))
+        q = np.quantile(ratios, [0.0, 0.25, 0.5, 0.75, 1.0])
+        fig2c[d] = {"min": q[0], "p25": q[1], "median": q[2], "p75": q[3],
+                    "max": q[4]}
+
+    # headline phenomena the paper calls out
+    mob = [lat("V100", ("MobileNetV2", b, 32)) for b in (16, 256)]
+    vgg = [lat("T4", ("VGG13", b, 128)) for b in (16, 256)]
+    summary = {
+        "alexnet_best_worst_spread":
+            max(v["norm_latency"] for v in fig2a["AlexNet"].values()),
+        "mobilenet_v100_16x_batch_ratio": mob[1] / mob[0],
+        "vgg13_t4_16x_batch_ratio": vgg[1] / vgg[0],
+    }
+    out = {"fig2a": fig2a, "fig2b": fig2b, "fig2c": fig2c,
+           "summary": summary}
+    common.save("fig2", out)
+    return summary

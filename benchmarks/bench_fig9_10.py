@@ -1,0 +1,69 @@
+"""Fig 9 (true-vs-predicted scatter per anchor) + Fig 10 (MAPE/RMSE/R2 of
+Linear / RandomForest / DNN vs the PROFET median ensemble), plus the member-
+selection counts the paper reports (25.8 / 32.8 / 41.4%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.devices import PAPER_DEVICES
+from repro.core.regressors import LinearRegressor
+
+
+def run() -> dict:
+    ds = common.dataset().subset(PAPER_DEVICES)
+    train, test = common.split()
+    prophet = common.paper_profet()
+
+    scatter = {}          # fig 9: per anchor, true/pred pairs over targets
+    member_preds = {m: [] for m in ("linear", "forest", "dnn")}
+    ens_preds, truths = [], []
+    scalar_linear_preds = []   # fig 10's "Linear": anchor latency -> target
+
+    counts = {m: 0 for m in ("linear", "forest", "dnn")}
+    for ga in PAPER_DEVICES:
+        pairs = []
+        for gt in PAPER_DEVICES:
+            if ga == gt:
+                continue
+            ens = prophet.cross[(ga, gt)]
+            X = prophet._matrix(ds, ga, test)
+            y = np.array([ds.latency(gt, c) for c in test])
+            mp = ens.predict_members(X)
+            pred = np.median(np.stack(list(mp.values())), axis=0)
+            for m in member_preds:
+                member_preds[m].append(mp[m])
+            ens_preds.append(pred)
+            truths.append(y)
+            for m, c in ens.member_selection_counts(X).items():
+                counts[m] += c
+            pairs += list(zip(y.tolist(), pred.tolist()))
+
+            # scalar-anchor-latency linear baseline (paper's Fig-10 Linear)
+            xa_tr = np.array([[ds.latency(ga, c)] for c in train])
+            ya_tr = np.array([ds.latency(gt, c) for c in train])
+            xa_te = np.array([[ds.latency(ga, c)] for c in test])
+            lin = LinearRegressor().fit(xa_tr, ya_tr)
+            scalar_linear_preds.append(lin.predict(xa_te))
+        scatter[ga] = pairs
+
+    y_all = np.concatenate(truths)
+    fig10 = {
+        "Linear": common.metrics(y_all, np.concatenate(scalar_linear_preds)),
+        "RandomForest": common.metrics(
+            y_all, np.concatenate(member_preds["forest"])),
+        "DNN": common.metrics(y_all, np.concatenate(member_preds["dnn"])),
+        "PROFET": common.metrics(y_all, np.concatenate(ens_preds)),
+    }
+    total = sum(counts.values())
+    selection = {m: 100.0 * c / total for m, c in counts.items()}
+
+    out = {"fig9_scatter": scatter, "fig10": fig10,
+           "member_selection_pct": selection}
+    common.save("fig9_10", out)
+    return {"profet_mape": fig10["PROFET"]["mape"],
+            "profet_r2": fig10["PROFET"]["r2"],
+            "dnn_mape": fig10["DNN"]["mape"],
+            "linear_mape": fig10["Linear"]["mape"],
+            "forest_mape": fig10["RandomForest"]["mape"],
+            **{f"sel_{k}": v for k, v in selection.items()}}

@@ -1,0 +1,48 @@
+"""§Perf before/after: compares results/dryrun_baseline (pre-optimization)
+against results/dryrun (optimized) per cell — the mechanized version of the
+EXPERIMENTS.md §Perf summary table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+BASE = pathlib.Path("results/dryrun_baseline")
+OPT = pathlib.Path("results/dryrun")
+
+
+def _load(d):
+    out = {}
+    for f in sorted(d.glob("*_single.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            out[(r["arch"], r["shape"])] = r["roofline"]
+    return out
+
+
+def run() -> dict:
+    if not BASE.exists():
+        print("  (no baseline snapshot — run the dry-run twice around the "
+              "perf changes)")
+        return {"cells": 0}
+    base, opt = _load(BASE), _load(OPT)
+    rows, speedups = [], {}
+    for key in sorted(opt):
+        if key not in base:
+            continue
+        b, o = base[key], opt[key]
+        bb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        ob = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        sp = bb / ob if ob else float("inf")
+        speedups["/".join(key)] = sp
+        rows.append(["/".join(key), f"{bb:.3f}", f"{ob:.3f}", f"{sp:.2f}x",
+                     f"{b['roofline_fraction']:.4f}",
+                     f"{o['roofline_fraction']:.4f}"])
+    rows.sort(key=lambda r: -float(r[3][:-1]))
+    print(common.fmt_table(rows, ["cell", "base_bound_s", "opt_bound_s",
+                                  "speedup", "base_roof", "opt_roof"]))
+    common.save("perf", {"speedups": speedups})
+    top = sorted(speedups.items(), key=lambda kv: -kv[1])[:3]
+    return {"cells": len(rows),
+            **{f"top_{i}_{k}": v for i, (k, v) in enumerate(top)}}

@@ -1,0 +1,57 @@
+"""§Roofline: the three-term roofline table for every (arch x shape x mesh)
+dry-run cell, read from results/dryrun/*.json (produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+DRYRUN = pathlib.Path("results/dryrun")
+
+
+def rows(mesh: str = None):
+    out = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def run() -> dict:
+    recs = rows()
+    if not recs:
+        print("  (no dry-run artifacts found — run repro.launch.dryrun first)")
+        return {"cells": 0}
+
+    table = []
+    for r in recs:
+        rl = r["roofline"]
+        table.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{rl['t_compute_s']*1e3:.2f}",
+            f"{rl['t_memory_s']*1e3:.2f}",
+            f"{rl['t_collective_s']*1e3:.2f}",
+            rl["bottleneck"],
+            f"{rl['useful_flops_ratio']:.3f}",
+            f"{rl['roofline_fraction']:.4f}",
+            f"{rl.get('per_device_memory', 0)/2**30:.1f}",
+        ])
+    headers = ["arch", "shape", "mesh", "t_comp_ms", "t_mem_ms", "t_coll_ms",
+               "bottleneck", "useful_flops", "roofline_frac", "GiB/dev"]
+    print(common.fmt_table(table, headers))
+
+    singles = [r for r in recs if r["mesh"] == "single"]
+    bottlenecks = {}
+    for r in singles:
+        b = r["roofline"]["bottleneck"]
+        bottlenecks[b] = bottlenecks.get(b, 0) + 1
+    common.save("roofline", {"table": table, "headers": headers,
+                             "bottleneck_histogram": bottlenecks})
+    return {"cells": len(recs), "single_pod_cells": len(singles),
+            **{f"bottleneck_{k}": v for k, v in bottlenecks.items()}}

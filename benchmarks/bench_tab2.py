@@ -1,0 +1,90 @@
+"""Table II: Joint vs Separate Modeling, same-information comparison.
+
+Task: from ONE anchor profile of the workload's base config (batch 16, the
+smallest feasible pixel size), predict the latency at (target instance,
+target batch, target pixel).
+
+  - Joint: a single model over [base profile ++ one-hot(target) ++ (b, p)].
+  - Separate (PROFET): phase-1 cross-instance min/max prediction -> phase-2
+    min-max poly interpolation, exactly the paper's two-model pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.devices import PAPER_DEVICES
+from repro.core.regressors import DNNRegressor, RandomForestRegressor
+
+ANCHOR = "T4"
+BASE_B = 16
+
+
+def _base_case(have, m, p):
+    return (m, BASE_B, p) if (m, BASE_B, p) in have else None
+
+
+def _joint_xy(ds, prophet, cases, have):
+    X, y = [], []
+    dev_index = {d: i for i, d in enumerate(PAPER_DEVICES)}
+    for (m, b, p) in cases:
+        base = _base_case(have, m, p)
+        if base is None:
+            continue
+        feats = prophet.features.transform(ds.profile(ANCHOR, base))
+        for gt in PAPER_DEVICES:
+            if gt == ANCHOR:
+                continue
+            onehot = np.zeros(len(PAPER_DEVICES))
+            onehot[dev_index[gt]] = 1.0
+            X.append(np.concatenate([feats, onehot, [b, p]]))
+            y.append(ds.latency(gt, (m, b, p)))
+    return np.stack(X), np.array(y)
+
+
+def run() -> dict:
+    ds = common.dataset().subset(PAPER_DEVICES)
+    train, test = common.split()
+    prophet = common.paper_profet()
+    have = set(ds.cases)
+
+    Xtr, ytr = _joint_xy(ds, prophet, train, have)
+    Xte, yte = _joint_xy(ds, prophet, test, have)
+
+    joint = {}
+    rf = RandomForestRegressor(n_estimators=60, seed=0).fit(Xtr, ytr)
+    joint["RandomForest"] = common.metrics(yte, rf.predict(Xte))
+    dnn = DNNRegressor(epochs=common.DNN_EPOCHS, seed=0).fit(Xtr, ytr)
+    joint["DNN"] = common.metrics(yte, dnn.predict(Xte))
+
+    # separate modeling (PROFET two-phase) on the same prediction task, one
+    # column per phase-1 regressor family (the paper's RF/DNN columns)
+    from repro.core.predictor import Profet, ProfetConfig
+    separate = {}
+    for col, member in (("RandomForest", "forest"), ("DNN", "dnn")):
+        p1 = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS,
+                                 members=(member,))).fit(
+            ds, train, anchors=(ANCHOR,), targets=PAPER_DEVICES)
+        sep_true, sep_pred = [], []
+        for (m, b, p) in test:
+            lo_case, hi_case = (m, 16, p), (m, 256, p)
+            if lo_case not in have or hi_case not in have:
+                continue
+            for gt in PAPER_DEVICES:
+                if gt == ANCHOR:
+                    continue
+                pred = p1.predict_two_phase(
+                    ANCHOR, gt, "batch", b,
+                    ds.profile(ANCHOR, lo_case), ds.profile(ANCHOR, hi_case),
+                    case_min=lo_case, case_max=hi_case)
+                sep_true.append(ds.latency(gt, (m, b, p)))
+                sep_pred.append(float(pred))
+        separate[col] = common.metrics(np.array(sep_true),
+                                       np.array(sep_pred))
+
+    out = {"joint": joint, "separate": separate}
+    common.save("tab2", out)
+    return {"joint_dnn_mape": joint["DNN"]["mape"],
+            "separate_dnn_mape": separate["DNN"]["mape"],
+            "joint_rf_mape": joint["RandomForest"]["mape"],
+            "separate_rf_mape": separate["RandomForest"]["mape"]}

@@ -1,0 +1,89 @@
+"""Tables III-V: PROFET vs Paleo, MLPredict, Habitat (all re-implemented in
+``repro.core.baselines`` — see DESIGN.md §7)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core.devices import PAPER_DEVICES
+from repro.core.ensemble import mape, r2, rmse
+
+
+def run() -> dict:
+    ds = common.dataset().subset(PAPER_DEVICES)
+    train, test = common.split()
+    prophet = common.paper_profet()
+
+    # ---- Table III: vs Paleo on the common models (AlexNet, VGG16) ----
+    pa = baselines.PaleoModel()
+    for d in PAPER_DEVICES:
+        pa.calibrate_many(d, train, [ds.latency(d, c) for c in train])
+    t3_cases = [c for c in test if c[0] in ("AlexNet", "VGG16")]
+    paleo_pred = np.array([pa.predict(d, c)
+                           for d in PAPER_DEVICES for c in t3_cases])
+    t3_true = np.array([ds.latency(d, c)
+                        for d in PAPER_DEVICES for c in t3_cases])
+    profet_t3_pred, profet_t3_true = [], []
+    for gt in PAPER_DEVICES:
+        for ga in PAPER_DEVICES:
+            if ga == gt:
+                continue
+            profet_t3_pred.append(prophet.predict_cross_many(
+                ga, gt, ds, t3_cases))
+            profet_t3_true.append([ds.latency(gt, c) for c in t3_cases])
+            break  # one anchor per target (the paper's protocol)
+    tab3 = {"PALEO": common.metrics(t3_true, paleo_pred),
+            "PROFET": common.metrics(np.concatenate(profet_t3_true),
+                                     np.concatenate(profet_t3_pred))}
+
+    # ---- Table IV: vs MLPredict, VGG16 by batch size ----
+    ml = baselines.MLPredictModel(epochs=common.DNN_EPOCHS, seed=0)
+    ml.fit(ds, train)
+    tab4 = {}
+    for b in (16, 32, 64, 128):
+        cases_b = [c for c in ds.cases if c[0] == "VGG16" and c[1] == b]
+        if not cases_b:
+            continue
+        true = np.array([ds.latency(d, c)
+                         for d in PAPER_DEVICES for c in cases_b])
+        ml_pred = np.array([ml.predict(d, c)
+                            for d in PAPER_DEVICES for c in cases_b])
+        pf_pred, pf_true = [], []
+        for gt in PAPER_DEVICES:
+            ga = "T4" if gt != "T4" else "V100"
+            pf_pred.append(prophet.predict_cross_many(ga, gt, ds, cases_b))
+            pf_true.append([ds.latency(gt, c) for c in cases_b])
+        tab4[b] = {
+            "MLPredict": {"mape": mape(true, ml_pred),
+                          "rmse": rmse(true, ml_pred)},
+            "PROFET": {"mape": mape(np.concatenate(pf_true),
+                                    np.concatenate(pf_pred)),
+                       "rmse": rmse(np.concatenate(pf_true),
+                                    np.concatenate(pf_pred))}}
+
+    # ---- Table V: vs Habitat, T4 <-> V100 on 3 models ----
+    hb = baselines.HabitatScaling()
+    t5_models = ("ResNet50", "InceptionV3", "VGG16")
+    tab5 = {}
+    for ga, gt in (("T4", "V100"), ("V100", "T4")):
+        cases5 = [c for c in test if c[0] in t5_models]
+        true = np.array([ds.latency(gt, c) for c in cases5])
+        hb_pred = np.array([hb.predict(ga, gt, c) for c in cases5])
+        pf_pred = prophet.predict_cross_many(ga, gt, ds, cases5)
+        tab5[f"{ga}->{gt}"] = {"Habitat": mape(true, hb_pred),
+                               "PROFET": mape(true, pf_pred)}
+
+    out = {"tab3": tab3, "tab4": tab4, "tab5": tab5}
+    common.save("tab3_4_5", out)
+
+    t4_impr = np.mean([1 - tab4[b]["PROFET"]["rmse"]
+                       / tab4[b]["MLPredict"]["rmse"] for b in tab4])
+    t5_impr = np.mean([1 - v["PROFET"] / v["Habitat"]
+                       for v in tab5.values()])
+    return {
+        "tab3_paleo_mape": tab3["PALEO"]["mape"],
+        "tab3_profet_mape": tab3["PROFET"]["mape"],
+        "tab4_rmse_improvement_vs_mlpredict_pct": 100 * float(t4_impr),
+        "tab5_mape_improvement_vs_habitat_pct": 100 * float(t5_impr),
+    }

@@ -1,0 +1,36 @@
+"""Table VI: predicting latency on NEW GPU devices (A10, P100) from the four
+existing anchors — the cloud-vendor-prepares-the-model-for-new-hardware
+scenario. Beyond paper: TPU v5e as a new target chip (GPU anchor -> TPU
+target), the cross-ISA case."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.devices import PAPER_DEVICES, TPU_DEVICES, UNSEEN_DEVICES
+from repro.core.ensemble import mape
+from repro.core.predictor import Profet, ProfetConfig
+
+
+def run() -> dict:
+    ds = common.dataset()  # full catalog
+    train, test = common.split()
+
+    targets = UNSEEN_DEVICES + ("TPUv5e",)
+    prophet = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0)).fit(
+        ds, train, anchors=PAPER_DEVICES, targets=targets)
+
+    tab6 = {}
+    for gt in targets:
+        tab6[gt] = {}
+        for ga in PAPER_DEVICES:
+            pred = prophet.predict_cross_many(ga, gt, ds, test)
+            true = np.array([ds.latency(gt, c) for c in test])
+            tab6[gt][ga] = mape(true, pred)
+
+    common.save("tab6", tab6)
+    flat = {f"{gt}_from_{ga}": v for gt, row in tab6.items()
+            for ga, v in row.items()}
+    return {"a10_avg_mape": float(np.mean(list(tab6["A10"].values()))),
+            "p100_avg_mape": float(np.mean(list(tab6["P100"].values()))),
+            "tpuv5e_avg_mape": float(np.mean(list(tab6["TPUv5e"].values())))}

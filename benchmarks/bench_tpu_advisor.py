@@ -1,0 +1,63 @@
+"""Beyond-paper: the PROFET technique applied to TPU chip selection.
+
+Cross-chip prediction across the TPU generations in the catalog (v4, v5e,
+v5p) from GPU or TPU anchors, plus a cost advisor sweep: for each assigned
+LM architecture's dry-run cell, combine the roofline step-time bound with
+chip pricing to rank chips — the TPU analogue of the paper's Lambda demo.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.devices import CATALOG, PAPER_DEVICES, TPU_DEVICES
+from repro.core.ensemble import mape
+from repro.core.predictor import Profet, ProfetConfig
+
+DRYRUN = pathlib.Path("results/dryrun")
+
+
+def run() -> dict:
+    ds = common.dataset()
+    train, test = common.split()
+
+    # ---- cross-chip prophet: TPU anchors <-> TPU targets ----
+    prophet = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0)).fit(
+        ds, train, anchors=TPU_DEVICES + ("V100",), targets=TPU_DEVICES)
+    cross = {}
+    for ga in TPU_DEVICES + ("V100",):
+        for gt in TPU_DEVICES:
+            if ga == gt:
+                continue
+            pred = prophet.predict_cross_many(ga, gt, ds, test)
+            true = np.array([ds.latency(gt, c) for c in test])
+            cross[f"{ga}->{gt}"] = mape(true, pred)
+
+    # ---- dry-run-driven chip advisor for the assigned archs ----
+    # scale the v5e roofline bound by peak-flops/bandwidth ratios per chip
+    advisor = {}
+    for f in sorted(DRYRUN.glob("*_train_4k_single.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        ranks = {}
+        for chip in TPU_DEVICES:
+            dev = CATALOG[chip]
+            t = max(rl["hlo_flops_per_dev"] / (dev.peak_tflops * 1e12),
+                    rl["hlo_bytes_per_dev"] / (dev.mem_bw_gbs * 1e9),
+                    rl["t_collective_s"])      # ICI assumed equal
+            ranks[chip] = {"step_s": t,
+                           "cost_per_step": t / 3600 * dev.price_hr * 256}
+        best = min(ranks, key=lambda c: ranks[c]["cost_per_step"])
+        advisor[r["arch"]] = {"ranks": ranks, "cheapest": best}
+
+    out = {"cross_chip_mape": cross, "advisor": advisor}
+    common.save("tpu_advisor", out)
+    cheap = {a: v["cheapest"] for a, v in advisor.items()}
+    return {"avg_cross_chip_mape": float(np.mean(list(cross.values()))),
+            "n_advised_archs": len(advisor),
+            **{f"cheapest_{a}": c for a, c in list(cheap.items())[:3]}}

@@ -1,0 +1,75 @@
+"""Shared state for the benchmark suite: one workload grid over the full
+device catalog and one fitted PROFET model, both cached on disk so the suite
+is re-runnable piecemeal."""
+from __future__ import annotations
+
+import json
+import pathlib
+import pickle
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import workloads
+from repro.core.devices import PAPER_DEVICES, TPU_DEVICES, UNSEEN_DEVICES
+from repro.core.ensemble import mape, r2, rmse
+from repro.core.predictor import Profet, ProfetConfig
+
+OUT = pathlib.Path("results/bench")
+CACHE = pathlib.Path("results/bench/_cache")
+
+ALL_DEVICES = PAPER_DEVICES + UNSEEN_DEVICES + TPU_DEVICES
+DNN_EPOCHS = 150
+SEED = 0
+
+
+def dataset() -> workloads.Dataset:
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / "dataset.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    ds = workloads.generate(devices=ALL_DEVICES)
+    with open(f, "wb") as fh:
+        pickle.dump(ds, fh)
+    return ds
+
+
+def split() -> Tuple[list, list]:
+    ds = dataset()
+    return workloads.split_cases(ds.cases, test_frac=0.2, seed=SEED)
+
+
+def paper_profet() -> Profet:
+    """PROFET fit on the paper's four instances (train split only)."""
+    f = CACHE / "profet_paper.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    ds = dataset().subset(PAPER_DEVICES)
+    train, _ = split()
+    p = Profet(ProfetConfig(dnn_epochs=DNN_EPOCHS, seed=SEED)).fit(ds, train)
+    with open(f, "wb") as fh:
+        pickle.dump(p, fh)
+    return p
+
+
+def metrics(y_true, y_pred) -> Dict[str, float]:
+    return {"mape": mape(y_true, y_pred), "rmse": rmse(y_true, y_pred),
+            "r2": r2(y_true, y_pred)}
+
+
+def save(name: str, payload: dict) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload, _benchmark=name, _timestamp=time.time())
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=float))
+
+
+def fmt_table(rows, headers) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    line = lambda r: " | ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])

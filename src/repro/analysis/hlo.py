@@ -1,0 +1,447 @@
+"""HLO text cost model: per-opcode FLOPs / bytes / collective traffic with
+while-loop trip-count weighting.
+
+Why this exists: ``compiled.cost_analysis()`` does NOT multiply while-loop
+bodies by their trip count (verified empirically — a 7-step scan reports one
+body's flops), so scanned-layer models would be under-counted 80x. The
+optimized HLO carries ``backend_config={"known_trip_count":{"n":...}}`` on
+while ops; we parse the computation graph and walk it with multipliers.
+
+The same per-opcode aggregation is PROFET's black-box feature source on TPU:
+``(operation name, aggregated cost)`` pairs with no model architecture
+exposed — the HLO analogue of the TF-Profiler rows in the paper (Fig. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^([\w\-]+)\((.*)$")
+
+
+def _split_instr(line: str):
+    """-> (name, type_str, opcode, rest) or None. Handles tuple types with
+    embedded /*index=N*/ comments (which defeat naive regexes)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name, rem = m.groups()
+    if rem.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rem):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, rem = rem[:i + 1], rem[i + 1:].strip()
+    else:
+        sp = rem.find(" ")
+        if sp < 0:
+            return None
+        type_str, rem = rem[:sp], rem[sp:].strip()
+    m2 = _OP_RE.match(rem)
+    if not m2:
+        return None
+    opcode, rest = m2.groups()
+    return name, type_str, opcode, rest
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """Total (bytes, elements) across all array shapes in a type string
+    (handles tuples)."""
+    bytes_, elems = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return bytes_, elems
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str                      # operand list + attributes
+    out_bytes: int
+    out_elems: int
+    operands: List[str]
+    called: List[str]
+    trip_count: int = 1            # for while ops
+    group_size: int = 1            # for collectives
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Operand names from the call segment up to the closing paren."""
+    depth, ops, cur, i = 1, [], [], 0
+    while i < len(rest) and depth > 0:
+        ch = rest[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        elif ch == "," and depth == 1:
+            ops.append("".join(cur).strip())
+            cur = []
+            i += 1
+            continue
+        cur.append(ch)
+        i += 1
+    if cur:
+        ops.append("".join(cur).strip())
+    out = []
+    for o in ops:
+        o = o.strip()
+        if o.startswith("%"):
+            o = o[1:]
+        if o:
+            out.append(o.split(" ")[0])
+    return out
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    """Split optimized HLO text into computations of parsed instructions."""
+    comps: Dict[str, List[Instr]] = {}
+    cur_name: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$",
+                          stripped)
+        if (stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY"))
+                and not stripped.startswith("//")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                cur_name = m.group(1)
+                comps[cur_name] = []
+            continue
+        if stripped.startswith("}"):
+            cur_name = None
+            continue
+        if cur_name is None:
+            continue
+        parsed = _split_instr(line)
+        if parsed is None:
+            continue
+        name, type_str, opcode, rest = parsed
+        out_bytes, out_elems = _shape_bytes_elems(type_str)
+        instr = Instr(
+            name=name, opcode=opcode, type_str=type_str, rest=rest,
+            out_bytes=out_bytes, out_elems=out_elems,
+            operands=_parse_operands(rest),
+            called=_CALL_RE.findall(rest),
+        )
+        tm = _TRIP_RE.search(rest)
+        if tm:
+            instr.trip_count = int(tm.group(1))
+        gm = _GROUPS_IOTA_RE.search(rest)
+        if gm:
+            instr.group_size = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(rest)
+            if gl:
+                instr.group_size = len([x for x in gl.group(1).split(",") if x.strip()])
+        comps[cur_name].append(instr)
+    return comps
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> int:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    _, out_elems = _shape_bytes_elems(instr.type_str)
+    lhs = instr.operands[0] if instr.operands else None
+    lhs_type = shapes.get(lhs, "")
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contract = 1
+    if mdims and lhs_type:
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",")]
+            for idx in mdims.group(1).split(","):
+                if idx.strip():
+                    i = int(idx)
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, shapes: Dict[str, str]) -> int:
+    """2 * out_elems * (kernel spatial * in_channels)."""
+    _, out_elems = _shape_bytes_elems(instr.type_str)
+    rhs = instr.operands[1] if len(instr.operands) > 1 else None
+    rhs_type = shapes.get(rhs, "")
+    sm = _SHAPE_RE.search(rhs_type)
+    k = 1
+    if sm and sm.group(2):
+        dims = [int(d) for d in sm.group(2).split(",")]
+        k = max(1, math.prod(dims) // max(dims[-1] if dims else 1, 1))
+    return 2 * out_elems * k
+
+
+# per-device bytes moved over ICI per collective (ring algorithms)
+def _collective_bytes(instr: Instr) -> int:
+    n = max(instr.group_size, 1)
+    b = instr.out_bytes
+    op = instr.opcode
+    if op == "all-reduce":
+        return int(2 * b * (n - 1) / n)
+    if op == "all-gather":
+        return int(b * (n - 1) / n)
+    if op == "reduce-scatter":
+        return int(b * (n - 1))
+    if op in ("all-to-all", "ragged-all-to-all"):
+        return int(b * (n - 1) / n)
+    if op in ("collective-permute", "collective-broadcast"):
+        return b
+    return b
+
+
+_ELEMENTWISE_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "reshape",
+    "transpose", "broadcast", "iota", "after-all", "partition-id",
+    "replica-id", "optimization-barrier", "custom-call", "rng-bit-generator",
+    "get-dimension-size",
+}
+
+# Ops that READ only a slice of their (possibly huge) first operand: HBM
+# traffic is ~the output size, NOT the operand size. Critical for
+# scan-over-layers models, where a dynamic-slice reads ONE layer's weights
+# out of the (L, ...) stacked parameter — counting the full stack per trip
+# would overcount weight traffic by L x.
+_SLICE_READS = {"dynamic-slice", "gather", "slice"}
+# dynamic-update-slice WRITES only the update (operand 1); the base array is
+# aliased in place.
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+
+
+def _operand_traffic(ins: Instr, shapes: Dict[str, str],
+                     comps: Dict[str, List[Instr]]) -> int:
+    """HBM read bytes for one op's operands, slice-aware.
+
+    For fusions, each operand is charged by how the corresponding fusion
+    parameter is consumed INSIDE the fused computation: if every consumer is
+    a slicing read, only the slices' bytes are charged.
+    """
+    if ins.opcode in _SLICE_READS:
+        return ins.out_bytes
+    if ins.opcode in _SLICE_WRITES:
+        # reads update (operand 1) + the overwritten region (~update size)
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        return 2 * _shape_bytes_elems(shapes.get(upd, ""))[0]
+    if ins.opcode != "fusion" or not ins.called:
+        return sum(_shape_bytes_elems(shapes.get(o, ""))[0]
+                   for o in ins.operands)
+
+    body = comps.get(ins.called[0], [])
+    body_shapes = {i.name: i.type_str for i in body}
+    # map parameter index -> parameter instr name
+    param_names: Dict[int, str] = {}
+    for bi in body:
+        if bi.opcode == "parameter":
+            m = re.match(r"^(\d+)\)", bi.rest)
+            if m:
+                param_names[int(m.group(1))] = bi.name
+    _TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "bitcast-convert"}
+
+    def consumers_of(name, depth=0):
+        """Consumers of a value, looking through dtype/layout-only ops."""
+        out = []
+        for bi in body:
+            if name in bi.operands:
+                if bi.opcode in _TRANSPARENT and depth < 4:
+                    out.extend(consumers_of(bi.name, depth + 1))
+                else:
+                    out.append(bi)
+        return out
+
+    total = 0
+    for idx, op_name in enumerate(ins.operands):
+        full = _shape_bytes_elems(shapes.get(op_name, ""))[0]
+        pname = param_names.get(idx)
+        if pname is None:
+            total += full
+            continue
+        consumers = consumers_of(pname)
+        if consumers and all(bi.opcode in _SLICE_READS
+                             or (bi.opcode in _SLICE_WRITES
+                                 and bi.operands)
+                             for bi in consumers):
+            sliced = 0
+            for bi in consumers:
+                if bi.opcode in _SLICE_READS:
+                    sliced += bi.out_bytes
+                else:  # DUS base: region read ~= update size
+                    upd = bi.operands[1] if len(bi.operands) > 1 else None
+                    sliced += _shape_bytes_elems(
+                        body_shapes.get(upd, ""))[0]
+            total += min(sliced, full)
+        else:
+            total += full
+    return total
+
+
+def _output_traffic(ins: Instr, shapes: Dict[str, str],
+                    comps: Dict[str, List[Instr]]) -> int:
+    """HBM write bytes for one op, slice-aware for in-place DUS roots."""
+    if ins.opcode in _SLICE_WRITES:
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        return _shape_bytes_elems(shapes.get(upd, ""))[0]
+    if ins.opcode == "fusion" and ins.called:
+        body = comps.get(ins.called[0], [])
+        body_shapes = {i.name: i.type_str for i in body}
+        # in-place DUS fusion: if a dynamic-update-slice in the body produces
+        # the fusion's output shape, only the update region is written (the
+        # scan activation stash pattern: updating one (1, B, S, D) layer slot
+        # of an (L, B, S, D) buffer writes B*S*D, not L*B*S*D)
+        for bi in body:
+            if bi.opcode in _SLICE_WRITES:
+                _, out_e = _shape_bytes_elems(bi.type_str)
+                fus_b, fus_e = _shape_bytes_elems(ins.type_str)
+                # element-count match (a convert may change the dtype
+                # between the DUS and the fusion root)
+                if out_e == fus_e and len(bi.operands) > 1:
+                    _, upd_e = _shape_bytes_elems(
+                        body_shapes.get(bi.operands[1], ""))
+                    return int(fus_b * upd_e / max(fus_e, 1))
+    return ins.out_bytes
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_opcode: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"count": 0.0, "flops": 0.0,
+                                                     "bytes": 0.0,
+                                                     "collective_bytes": 0.0}))
+    collectives: List[dict] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "by_opcode": {k: dict(v) for k, v in self.by_opcode.items()},
+            "collectives": self.collectives,
+        }
+
+
+def analyze(text: str) -> CostSummary:
+    comps = parse_hlo(text)
+    summary = CostSummary()
+    # the true entry: prefer ENTRY-style "main" names; otherwise the
+    # uncalled computation with the largest reachable instruction count
+    # (dead computations can also be uncalled).
+    called_names = {c for instrs in comps.values() for i in instrs for c in i.called}
+    roots = [n for n in comps if n not in called_names] or list(comps)
+    mains = [n for n in roots if n.startswith("main")]
+    if mains:
+        entry = mains[0]
+    else:
+        def reach_size(root):
+            seen, stack, total = set(), [root], 0
+            while stack:
+                n = stack.pop()
+                if n in seen or n not in comps:
+                    continue
+                seen.add(n)
+                total += len(comps[n])
+                for i in comps[n]:
+                    stack.extend(i.called)
+            return total
+        entry = max(roots, key=reach_size)
+
+    def shapes_map(instrs):
+        return {i.name: i.type_str for i in instrs}
+
+    def visit(comp_name: str, mult: float, count_bytes: bool):
+        instrs = comps.get(comp_name)
+        if not instrs:
+            return
+        shapes = shapes_map(instrs)
+        for ins in instrs:
+            op = ins.opcode
+            if op == "while":
+                trip = ins.trip_count
+                for c in ins.called:
+                    visit(c, mult * trip, count_bytes)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for c in ins.called:
+                    visit(c, mult, count_bytes)
+                continue
+            if op == "fusion":
+                # bytes at the fusion boundary (slice-aware); flops inside
+                if count_bytes:
+                    op_bytes = (_output_traffic(ins, shapes, comps)
+                                + _operand_traffic(ins, shapes, comps))
+                    summary.hbm_bytes += mult * op_bytes
+                    summary.by_opcode["fusion"]["bytes"] += mult * op_bytes
+                summary.by_opcode["fusion"]["count"] += mult
+                for c in ins.called:
+                    visit(c, mult, False)
+                continue
+
+            flops = 0.0
+            if op == "dot":
+                flops = _dot_flops(ins, shapes)
+            elif op == "convolution":
+                flops = _conv_flops(ins, shapes)
+            elif op in COLLECTIVE_OPS:
+                cbytes = mult * _collective_bytes(ins)
+                summary.collective_bytes += cbytes
+                summary.by_opcode[op]["collective_bytes"] += cbytes
+                summary.by_opcode[op]["count"] += mult
+                summary.collectives.append({
+                    "op": op, "bytes_moved": cbytes, "out_bytes": ins.out_bytes,
+                    "group_size": ins.group_size, "mult": mult,
+                    "name": ins.name})
+                continue
+            elif op in _ELEMENTWISE_SKIP:
+                summary.by_opcode[op]["count"] += mult
+                continue
+            else:
+                flops = float(ins.out_elems)  # elementwise/reduce ~1 flop/elem
+
+            summary.flops += mult * flops
+            summary.by_opcode[op]["flops"] += mult * flops
+            summary.by_opcode[op]["count"] += mult
+            if count_bytes:
+                op_bytes = (_output_traffic(ins, shapes, comps)
+                            + _operand_traffic(ins, shapes, comps))
+                summary.hbm_bytes += mult * op_bytes
+                summary.by_opcode[op]["bytes"] += mult * op_bytes
+
+    visit(entry, 1.0, True)
+    return summary

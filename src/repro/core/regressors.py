@@ -1,0 +1,258 @@
+"""The three base regressors of PROFET's median ensemble (paper §III-C1),
+implemented from scratch (no sklearn in this environment):
+
+  - LinearRegressor: least squares with bias (order-1, the paper's "Linear")
+  - RandomForestRegressor: bagged variance-reduction CART trees
+  - DNNRegressor: 128x64x32x16x1 ReLU MLP, Adam(1e-3), MAPE+RMSE loss (JAX)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class LinearRegressor:
+    """Ordinary least squares with intercept (ridge-stabilized)."""
+
+    def __init__(self, l2: float = 1e-8):
+        self.l2 = l2
+        self.coef_: Optional[np.ndarray] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "LinearRegressor":
+        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        A = Xb.T @ Xb + self.l2 * np.eye(Xb.shape[1])
+        self.coef_ = np.linalg.solve(A, Xb.T @ y)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        return Xb @ self.coef_
+
+
+# ---------------------------------------------------------------------------
+# Random forest
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: float = 0.0
+
+
+class _Tree:
+    def __init__(self, max_depth, min_samples_leaf, max_features, rng):
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.rng = rng
+        self.nodes = []
+
+    def _best_split(self, X, y, feat_ids):
+        n = len(y)
+        best = (None, None, 0.0)  # (feat, thr, gain)
+        base = y.var() * n
+        for f in feat_ids:
+            order = np.argsort(X[:, f], kind="stable")
+            xs, ys = X[order, f], y[order]
+            csum = np.cumsum(ys)
+            csq = np.cumsum(ys * ys)
+            tot, totsq = csum[-1], csq[-1]
+            idx = np.arange(1, n)
+            valid = xs[1:] > xs[:-1]
+            if not valid.any():
+                continue
+            nl = idx.astype(np.float64)
+            nr = n - nl
+            sl, sq_l = csum[:-1], csq[:-1]
+            sse = (sq_l - sl * sl / nl) + ((totsq - sq_l) - (tot - sl) ** 2 / nr)
+            sse = np.where(valid, sse, np.inf)
+            ml = self.min_samples_leaf
+            if ml > 1:
+                bad = (nl < ml) | (nr < ml)
+                sse = np.where(bad, np.inf, sse)
+            k = int(np.argmin(sse))
+            gain = base - sse[k]
+            if np.isfinite(sse[k]) and gain > best[2] + 1e-12:
+                thr = 0.5 * (xs[k] + xs[k + 1])
+                best = (f, thr, gain)
+        return best
+
+    def _build(self, X, y, depth):
+        node_id = len(self.nodes)
+        self.nodes.append(_Node(value=float(y.mean())))
+        if depth >= self.max_depth or len(y) < 2 * self.min_samples_leaf \
+                or y.var() < 1e-18:
+            return node_id
+        nfeat = X.shape[1]
+        k = self.max_features(nfeat)
+        feat_ids = self.rng.choice(nfeat, size=min(k, nfeat), replace=False)
+        f, thr, _ = self._best_split(X, y, feat_ids)
+        if f is None:
+            return node_id
+        mask = X[:, f] <= thr
+        node = self.nodes[node_id]
+        node.feature, node.threshold = int(f), float(thr)
+        node.left = self._build(X[mask], y[mask], depth + 1)
+        node.right = self._build(X[~mask], y[~mask], depth + 1)
+        return node_id
+
+    def fit(self, X, y):
+        self.nodes = []
+        self._build(X, y, 0)
+        return self
+
+    def predict(self, X):
+        out = np.empty(len(X))
+        for i, x in enumerate(X):
+            nid = 0
+            while self.nodes[nid].feature >= 0:
+                n = self.nodes[nid]
+                nid = n.left if x[n.feature] <= n.threshold else n.right
+            out[i] = self.nodes[nid].value
+        return out
+
+
+class RandomForestRegressor:
+    """Bagging + per-node feature subsampling (sklearn-default-like:
+    n_estimators=100, max_features=1.0 for regression, bootstrap)."""
+
+    def __init__(self, n_estimators: int = 100, max_depth: int = 24,
+                 min_samples_leaf: int = 1, max_features: str = "all",
+                 seed: int = 0):
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.seed = seed
+        self.trees = []
+
+    def _mf(self, nfeat: int) -> int:
+        if self.max_features == "sqrt":
+            return max(1, int(np.sqrt(nfeat)))
+        if self.max_features == "third":
+            return max(1, nfeat // 3)
+        return nfeat
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
+        rng = np.random.default_rng(self.seed)
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        self.trees = []
+        n = len(y)
+        for _ in range(self.n_estimators):
+            idx = rng.integers(0, n, size=n)
+            t = _Tree(self.max_depth, self.min_samples_leaf, self._mf,
+                      np.random.default_rng(rng.integers(1 << 31)))
+            t.fit(X[idx], y[idx])
+            self.trees.append(t)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        return np.mean([t.predict(X) for t in self.trees], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DNN regressor (JAX)
+# ---------------------------------------------------------------------------
+
+
+class DNNRegressor:
+    """Paper's MLP: dense 128-64-32-16-1 with ReLU, Adam(lr=1e-3), loss =
+    MAPE + RMSE (combined, as in §III-C1). Inputs are z-scored and the target
+    scaled by its mean internally."""
+
+    LAYERS = (128, 64, 32, 16, 1)
+
+    def __init__(self, epochs: int = 400, batch_size: int = 128,
+                 lr: float = 1e-3, seed: int = 0):
+        self.epochs = epochs
+        self.batch_size = batch_size
+        self.lr = lr
+        self.seed = seed
+        self.params = None
+        self._stats = None
+
+    def _init(self, d):
+        import jax
+        import jax.numpy as jnp
+        key = jax.random.PRNGKey(self.seed)
+        sizes = (d,) + self.LAYERS
+        params = []
+        for i in range(len(sizes) - 1):
+            key, k = jax.random.split(key)
+            w = jax.random.normal(k, (sizes[i], sizes[i + 1])) * \
+                jnp.sqrt(2.0 / sizes[i])
+            params.append({"w": w, "b": jnp.zeros(sizes[i + 1])})
+        return params
+
+    @staticmethod
+    def _apply(params, x):
+        import jax.numpy as jnp
+        h = x
+        for i, layer in enumerate(params):
+            h = h @ layer["w"] + layer["b"]
+            if i < len(params) - 1:
+                import jax
+                h = jax.nn.relu(h)
+        return h[..., 0]
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "DNNRegressor":
+        import jax
+        import jax.numpy as jnp
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        mu, sd = X.mean(0), X.std(0) + 1e-9
+        ys = max(float(np.mean(np.abs(y))), 1e-9)
+        self._stats = (mu, sd, ys)
+        Xn = ((X - mu) / sd).astype(np.float32)
+        yn = (y / ys).astype(np.float32)
+
+        params = self._init(X.shape[1])
+        opt = {"m": jax.tree.map(jnp.zeros_like, params),
+               "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+        def loss_fn(params, xb, yb):
+            pred = self._apply(params, xb)
+            mape = jnp.mean(jnp.abs(pred - yb) / jnp.maximum(jnp.abs(yb), 1e-3))
+            rmse = jnp.sqrt(jnp.mean((pred - yb) ** 2) + 1e-12)
+            return mape + rmse
+
+        @jax.jit
+        def step(params, opt, xb, yb):
+            g = jax.grad(loss_fn)(params, xb, yb)
+            t = opt["t"] + 1
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, opt["m"], g)
+            v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_,
+                             opt["v"], g)
+            mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+            vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+            params = jax.tree.map(
+                lambda p, m_, v_: p - self.lr * m_ / (jnp.sqrt(v_) + eps),
+                params, mh, vh)
+            return params, {"m": m, "v": v, "t": t}
+
+        n = len(Xn)
+        rng = np.random.default_rng(self.seed)
+        Xd, yd = jnp.asarray(Xn), jnp.asarray(yn)
+        bs = min(self.batch_size, n)
+        for _ in range(self.epochs):
+            perm = rng.permutation(n)
+            for s in range(0, n - bs + 1, bs):
+                idx = perm[s:s + bs]
+                params, opt = step(params, opt, Xd[idx], yd[idx])
+        self.params = params
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        mu, sd, ys = self._stats
+        Xn = jnp.asarray(((np.asarray(X) - mu) / sd).astype(np.float32))
+        return np.asarray(self._apply(self.params, Xn)) * ys

@@ -1,0 +1,93 @@
+"""Int8 error-feedback gradient compression for the cross-pod axis.
+
+At 512+ chips the cross-pod data-parallel all-reduce runs over the slowest
+links (DCN / optical inter-pod), so we compress the pod-level gradient
+exchange 4x (f32->int8) with error feedback (Seide et al. / EF-SGD): the
+quantization error is carried in a residual buffer and re-added next step,
+so compression introduces no asymptotic bias.
+
+Two entry points:
+  - :func:`ef_quantize` / :func:`dequantize` — pure, unit-testable pieces.
+  - :func:`compressed_psum` — drop-in ``jax.lax.psum`` replacement used
+    inside ``shard_map`` over the ``pod`` axis: quantizes per-leaf, sums the
+    int8 payload in int32, dequantizes with the max scale.
+
+The trainer enables this only across ``pod`` (intra-pod reductions stay
+full-precision over fast ICI — compressing those would cost accuracy for
+bandwidth we aren't short of).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q, scale) with x ~= q * scale."""
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(g: jnp.ndarray, residual: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback quantization of one gradient leaf.
+
+    Returns (q, scale, new_residual) where new_residual = (g + residual) -
+    dequant(q) is fed back into the next step's gradient.
+    """
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = quantize_int8(corrected)
+    new_residual = corrected - dequantize(q, scale)
+    return q, scale, new_residual
+
+
+def compressed_psum(tree: Any, residuals: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """All-reduce-mean a gradient pytree over ``axis_name`` in int8.
+
+    Per leaf: EF-quantize locally -> psum the int8 payload (accumulated in
+    int32 — 256 pods cannot overflow int32 at +-127/pod) -> dequantize with
+    the psum-max scale -> divide by axis size.
+
+    Returns (mean_gradients, new_residuals).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, r):
+        corrected = g.astype(jnp.float32) + r
+        # payloads are summed, so every pod must quantize with the SAME
+        # scale — agree on the global absmax first (a scalar pmax)
+        scale = jnp.maximum(jax.lax.pmax(jnp.max(jnp.abs(corrected)),
+                                         axis_name), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+        new_r = corrected - dequantize(q, scale)
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = q_sum.astype(jnp.float32) * scale / n
+        return mean.astype(g.dtype), new_r
+
+    flat_g, tdef = jax.tree.flatten(tree)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_residuals(grads_like: Any) -> Any:
+    return jax.tree.map(
+        lambda g: jnp.zeros(getattr(g, "shape", ()), jnp.float32), grads_like)
+
+
+def compression_error(g: jnp.ndarray) -> float:
+    """Relative L2 error of one quantize/dequantize round trip (diagnostics)."""
+    q, s = quantize_int8(g)
+    err = jnp.linalg.norm(dequantize(q, s) - g) / jnp.maximum(
+        jnp.linalg.norm(g), 1e-30)
+    return float(err)

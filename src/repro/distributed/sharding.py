@@ -1,0 +1,197 @@
+"""Logical-axis sharding: map logical parameter/activation axes to mesh axes.
+
+Models annotate every parameter with a tuple of *logical* axis names; a rule
+table maps logical names to physical mesh axes. Activations are constrained
+inside model code via :func:`constrain`, which is a no-op outside a mesh
+context (so smoke tests on one CPU device run unchanged).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# ---------------------------------------------------------------------------
+# Rule tables (logical axis name -> mesh axis / axes)
+# ---------------------------------------------------------------------------
+
+# Parameters: FSDP over 'data', tensor parallel over 'model'. Parameters are
+# replicated across pods ('pod' carries pure data parallelism + the cross-pod
+# gradient all-reduce).
+PARAM_RULES = {
+    "embed": "data",        # FSDP axis (d_model dims)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,       # 8 kv heads don't divide model=16 -> replicate
+    "kv_head_dim": "model", # shard KV projections on head_dim instead
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",      # expert parallelism (when divisible)
+    "expert_mlp": "model",  # per-expert d_ff TP (when experts don't divide)
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "rglru_width": "model",
+    "conv_width": None,
+    "layers": None,
+    "groups": None,
+    None: None,
+}
+
+# Activations.
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "model",   # sequence-parallel sections / sharded KV cache seq
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "kv_head_dim": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "rglru_width": "model",
+    "layers": None,
+    None: None,
+}
+
+_local = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Activate a mesh for :func:`constrain` / :func:`named_sharding`."""
+    prev = getattr(_local, "mesh", None)
+    _local.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _local.mesh = prev
+
+
+def _resolve(rules: dict, logical: Sequence[Optional[str]], mesh: Mesh) -> P:
+    names = set(mesh.axis_names)
+    out = []
+    for ax in logical:
+        phys = rules.get(ax, None)
+        if isinstance(phys, tuple):
+            phys = tuple(p for p in phys if p in names) or None
+            if phys is not None and len(phys) == 1:
+                phys = phys[0]
+        elif phys is not None and phys not in names:
+            phys = None
+        out.append(phys)
+    # trim trailing Nones for cleanliness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_spec(logical: Sequence[Optional[str]], mesh: Mesh) -> P:
+    return _resolve(PARAM_RULES, logical, mesh)
+
+
+def act_spec(logical: Sequence[Optional[str]], mesh: Mesh) -> P:
+    return _resolve(ACT_RULES, logical, mesh)
+
+
+def named_sharding(logical: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+                   *, rules: str = "param") -> NamedSharding:
+    mesh = mesh or current_mesh()
+    spec = (param_spec if rules == "param" else act_spec)(logical, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        out = 1
+        for p in phys:
+            out *= mesh.shape[p]
+        return out
+    return mesh.shape[phys]
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim —
+    keeps tiny/odd dims (batch=1 decode, 6-head models) replicated instead
+    of tripping uneven-sharding paths."""
+    out = []
+    for i, phys in enumerate(spec):
+        if phys is not None and (i >= len(shape)
+                                 or shape[i] % _axis_size(mesh, phys) != 0):
+            phys = None
+        out.append(phys)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Apply a logical-axes sharding constraint if a mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = fit_spec(act_spec(logical, mesh), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def is_axes_leaf(t) -> bool:
+    return isinstance(t, tuple) and all(a is None or isinstance(a, str) for a in t)
+
+
+def tree_param_shardings(axes_tree, mesh: Mesh, shapes_tree=None):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings.
+    With ``shapes_tree`` (matching pytree of shaped values), non-divisible
+    axes are dropped per-leaf via :func:`fit_spec`."""
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, param_spec(axes, mesh)),
+            axes_tree, is_leaf=is_axes_leaf)
+    flat_axes, tdef = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes = tdef.flatten_up_to(shapes_tree)
+    out = [NamedSharding(mesh, fit_spec(param_spec(a, mesh), s.shape, mesh))
+           for a, s in zip(flat_axes, flat_shapes)]
+    return tdef.unflatten(out)
+
+
+def tree_act_shardings(axes_tree, mesh: Mesh, shapes_tree=None):
+    """Same as tree_param_shardings but with the activation rule table."""
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, act_spec(axes, mesh)),
+            axes_tree, is_leaf=is_axes_leaf)
+    flat_axes, tdef = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes = tdef.flatten_up_to(shapes_tree)
+    out = [NamedSharding(mesh, fit_spec(act_spec(a, mesh), s.shape, mesh))
+           for a, s in zip(flat_axes, flat_shapes)]
+    return tdef.unflatten(out)
+
+
+def validate_axes(params_tree, axes_tree) -> None:
+    """Check the axes tree matches the params tree leaf-for-leaf (rank too)."""
+    p_leaves, p_def = jax.tree.flatten(params_tree)
+    is_leaf = lambda t: isinstance(t, tuple) and all(
+        a is None or isinstance(a, str) for a in t)
+    a_leaves, a_def = jax.tree.flatten(axes_tree, is_leaf=is_leaf)
+    if len(p_leaves) != len(a_leaves):
+        raise ValueError(
+            f"params/axes mismatch: {len(p_leaves)} params vs {len(a_leaves)} axes")
+    for p, a in zip(p_leaves, a_leaves):
+        if hasattr(p, "ndim") and len(a) != p.ndim:
+            raise ValueError(f"axes {a} rank != param shape {p.shape}")

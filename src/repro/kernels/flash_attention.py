@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (causal, GQA) — the train/prefill hot spot.
+
+TPU adaptation notes (vs the CUDA FlashAttention algorithm):
+  - Tiling targets VMEM (~16 MiB/core) instead of SMEM: default blocks are
+    (block_q=512) x (block_kv=512) x head_dim, all multiples of the 128-lane
+    MXU tile; a bf16 working set of q/k/v/acc blocks is ~2.6 MiB.
+  - The KV loop is the innermost *sequential grid dimension* (TPU grids
+    iterate in order), with the online-softmax running state (m, l, acc)
+    carried in VMEM scratch across grid steps — no atomics, no shared-memory
+    reductions, which is exactly how the MXU wants this dataflow.
+  - Causality is exploited at block granularity: KV blocks strictly above
+    the diagonal are skipped via ``@pl.when`` (half the work), and only
+    diagonal blocks apply the element mask.
+  - GQA is handled by the k/v BlockSpec index_map (q-head -> kv-head), so no
+    materialized head repetition ever hits HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_kv: int, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-causal: process only kv blocks whose start <= q block end
+    @pl.when(ikv * block_kv <= iq * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kv_pos = ikv * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ikv == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool = False):
+    """Causal GQA attention. q: (B,S,H,D); k,v: (B,S,KV,D), H % KV == 0.
+
+    Layout: transposed to (B,H,S,D) so the lane dimension is head_dim
+    (128-aligned) and the sublane dimension is the sequence block.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    nq, nkv = S // block_q, S // block_kv
+    group = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    qt = jnp.swapaxes(q, 1, 2)   # (B, H, S, D)
+    kt = jnp.swapaxes(k, 1, 2)   # (B, KV, S, D)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        num_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max
+            pltpu.VMEM((block_q,), jnp.float32),        # running sum
+            pltpu.VMEM((block_q, D), jnp.float32),      # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

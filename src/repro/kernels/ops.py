@@ -1,0 +1,59 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to auto: compiled Mosaic on TPU backends, Python
+interpreter (bit-accurate dataflow emulation) elsewhere — so the same call
+site runs in this CPU container and on a real v5e pod.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_kv: int = _fa.DEFAULT_BLOCK_KV,
+                    interpret: bool | None = None):
+    """Causal GQA attention. q: (B,S,H,D); k, v: (B,S,KV,D)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _fa.flash_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(X, Adt, Bc, Cc, *, chunk: int = _ssd.DEFAULT_CHUNK,
+             interpret: bool | None = None):
+    """Mamba-2 chunked SSD scan. X: (B,S,H,P); Adt: (B,S,H); Bc/Cc: (B,S,N)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _ssd.ssd_scan(X, Adt, Bc, Cc, chunk=chunk, interpret=interpret)
+
+
+def vmem_bytes_attention(block_q: int, block_kv: int, head_dim: int,
+                         dtype=jnp.bfloat16) -> int:
+    """Structural VMEM budget check for the attention BlockSpecs."""
+    itemsize = jnp.dtype(dtype).itemsize
+    inputs = (block_q + 2 * block_kv) * head_dim * itemsize
+    scratch = (block_q * head_dim + 2 * block_q) * 4      # f32 acc + m + l
+    out = block_q * head_dim * itemsize
+    return inputs + scratch + out
+
+
+def vmem_bytes_ssd(chunk: int, head_dim: int, state: int,
+                   dtype=jnp.bfloat16) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    inputs = (chunk * head_dim + chunk + 2 * chunk * state) * itemsize
+    scratch = head_dim * state * 4 + chunk * chunk * 4    # state + L matrix
+    out = chunk * head_dim * itemsize
+    return inputs + scratch + out

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """Causal GQA attention, materialized scores (the O(S^2) oracle).
+
+    q: (B, S, H, D); k, v: (B, S, KV, D) with H % KV == 0.
+    Returns (B, S, H, D) in q.dtype; softmax/accumulate in f32.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(X, Adt, Bc, Cc, init_state=None):
+    """Sequential SSD recurrence (Mamba-2), the linear-time oracle.
+
+    X:   (B, S, H, P) inputs (pre-multiplied by dt)
+    Adt: (B, S, H)    log-decay per step (negative)
+    Bc:  (B, S, N)    write projection (shared across heads)
+    Cc:  (B, S, N)    read projection
+    Returns (Y: (B, S, H, P) in X.dtype, final_state: (B, H, P, N) f32).
+    """
+    B, S, H, P = X.shape
+    N = Bc.shape[-1]
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = state * jnp.exp(a_t)[..., None, None] + \
+            jnp.einsum("bhp,bn->bhpn", x_t, b_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (jnp.moveaxis(X, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Adt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(X.dtype), final

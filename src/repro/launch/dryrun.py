@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes, record memory/cost/roofline artifacts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo as hlo_analysis
+from repro.analysis import roofline as RL
+from repro.configs import base as CB
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             *, verbose: bool = True) -> dict:
+    cfg = CB.get_config(arch)
+    shape = CB.get_shape(shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{CB.canonical_arch(arch)}_{shape_name}_{mesh_name}"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_devices": mesh.size, "status": "ok"}
+    try:
+        with SH.use_mesh(mesh):
+            spec = ST.build_cell(cfg, shape, mesh)
+            jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                             out_shardings=spec.out_shardings,
+                             donate_argnums=spec.donate_argnums)
+            lowered = jitted.lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                    if hasattr(ma, k):
+                        mem[k] = int(getattr(ma, k))
+            except Exception as e:  # pragma: no cover
+                mem["error"] = str(e)
+            cost = {}
+            try:
+                cost = {k: float(v) for k, v in compiled.cost_analysis().items()
+                        if isinstance(v, (int, float))}
+            except Exception as e:  # pragma: no cover
+                cost["error"] = str(e)
+
+            summary = hlo_analysis.analyze(compiled.as_text())
+            rl = RL.Roofline(
+                arch=arch, shape=shape_name, mesh=mesh_name,
+                n_devices=mesh.size,
+                hlo_flops_per_dev=summary.flops,
+                hlo_bytes_per_dev=summary.hbm_bytes,
+                collective_bytes_per_dev=summary.collective_bytes,
+                model_flops_global=RL.model_flops(cfg, shape),
+                per_device_memory=float(
+                    mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)),
+            )
+            record.update({
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory_analysis": mem,
+                "cost_analysis": {k: v for k, v in cost.items()
+                                  if "bytes access" in k or "flops" in k},
+                "hlo_summary": summary.to_json(),
+                "roofline": rl.to_json(),
+            })
+            if verbose:
+                gb = 1 << 30
+                print(f"[{tag}] ok lower={t_lower:.1f}s compile={t_compile:.1f}s "
+                      f"arg+temp={rl.per_device_memory/gb:.2f}GiB/dev "
+                      f"t_comp={rl.t_compute*1e3:.2f}ms t_mem={rl.t_memory*1e3:.2f}ms "
+                      f"t_coll={rl.t_collective*1e3:.2f}ms "
+                      f"bottleneck={rl.bottleneck} "
+                      f"roofline_frac={rl.roofline_fraction:.3f}",
+                      flush=True)
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[{tag}] FAILED: {type(e).__name__}: {str(e)[:400]}", flush=True)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # strip the big per-collective list for the saved summary if huge
+    rec = dict(record)
+    hs = rec.get("hlo_summary")
+    if hs and len(hs.get("collectives", [])) > 200:
+        hs = dict(hs, collectives=hs["collectives"][:200])
+        rec["hlo_summary"] = hs
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = CB.cells()
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = [args.shape] if args.shape else [
+            s for (a, s) in CB.cells() if a == CB.canonical_arch(args.arch)]
+        cells = [(args.arch, s) for s in shapes]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = (f"{CB.canonical_arch(arch)}_{shape_name}_"
+                   f"{'multi' if multi else 'single'}")
+            if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                prev = json.loads((out_dir / f"{tag}.json").read_text())
+                if prev.get("status") == "ok":
+                    print(f"[{tag}] skip (exists)", flush=True)
+                    continue
+            rec = run_cell(arch, shape_name, multi, out_dir)
+            failures += rec["status"] != "ok"
+    print(f"dryrun complete: {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

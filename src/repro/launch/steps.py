@@ -1,0 +1,151 @@
+"""Step functions (train / prefill / decode) + abstract input specs +
+shardings — shared by the dry-run, the trainer, and the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.models import layers as L
+from repro.models import model as M
+from repro.train import optimizer as OPT
+
+BIG_MODEL_PARAMS = 1.5e11  # above this, store Adam moments in bf16
+
+
+def make_opt_hparams(cfg: ModelConfig, **overrides) -> OPT.OptHParams:
+    state_dtype = "bfloat16" if cfg.param_count() > BIG_MODEL_PARAMS else "float32"
+    return OPT.OptHParams(state_dtype=state_dtype, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, hp: OPT.OptHParams):
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(M.loss_fn, has_aux=True)
+        (loss, metrics), grads = grad_fn(params, cfg, batch)
+        params, opt_state, opt_metrics = OPT.apply_updates(
+            params, grads, opt_state, hp)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = M.forward(params, cfg, batch)
+        return jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, cur_len):
+        logits, cache = M.decode_step(params, cfg, cache, tokens, cur_len)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    gb, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((gb, s), jnp.int32)}
+    axes = {"tokens": ("batch", "seq")}
+    if with_labels:
+        specs["labels"] = _sds((gb, s), jnp.int32)
+        axes["labels"] = ("batch", "seq")
+    if cfg.family == "vlm":
+        specs["patches"] = _sds((gb, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        axes["patches"] = ("batch", None, None)
+    if cfg.family == "audio":
+        specs["frames"] = _sds((gb, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", None, None)
+    return specs, axes
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(dtype))
+                        if jnp.issubdtype(s.dtype, jnp.floating) else s, tree)
+
+
+@dataclasses.dataclass
+class DryrunSpec:
+    """Everything needed to ``jax.jit(fn, ...).lower(*args)`` one cell."""
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> DryrunSpec:
+    """Build the (step fn, abstract args, shardings) for one (arch × shape)."""
+    params_sds, params_axes = M.abstract_init(cfg)
+    p_sh = SH.tree_param_shardings(params_axes, mesh, params_sds)
+
+    def act_sh(axes_tree, shapes_tree):
+        return SH.tree_act_shardings(axes_tree, mesh, shapes_tree)
+
+    if shape.kind == "train":
+        hp = make_opt_hparams(cfg)
+        opt_sds = OPT.init_state(params_sds, hp)
+        opt_axes = OPT.state_axes(params_axes)
+        o_sh = {"m": SH.tree_param_shardings(opt_axes["m"], mesh, opt_sds["m"]),
+                "v": SH.tree_param_shardings(opt_axes["v"], mesh, opt_sds["v"]),
+                "step": NamedSharding(mesh, P())}
+        b_sds, b_axes = batch_specs(cfg, shape, with_labels=True)
+        b_sh = act_sh(b_axes, b_sds)
+        fn = make_train_step(cfg, hp)
+        return DryrunSpec(
+            fn=fn,
+            args=(params_sds, opt_sds, b_sds),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        b_sds, b_axes = batch_specs(cfg, shape, with_labels=False)
+        serve_params = _cast_tree(params_sds, jnp.bfloat16)
+        return DryrunSpec(
+            fn=make_prefill_step(cfg),
+            args=(serve_params, b_sds),
+            in_shardings=(p_sh, act_sh(b_axes, b_sds)),
+            out_shardings=None,
+        )
+
+    # decode: one new token against a seq_len-deep cache
+    cache_sds, cache_axes = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_sh = act_sh(cache_axes, cache_sds)
+    tok_sds = _sds((shape.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, SH.fit_spec(
+        SH.act_spec(("batch", None), mesh), tok_sds.shape, mesh))
+    len_sds = _sds((), jnp.int32)
+    len_sh = NamedSharding(mesh, P())
+    serve_params = _cast_tree(params_sds, jnp.bfloat16)
+    return DryrunSpec(
+        fn=make_decode_step(cfg),
+        args=(serve_params, cache_sds, tok_sds, len_sds),
+        in_shardings=(p_sh, c_sh, tok_sh, len_sh),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(1,),
+    )

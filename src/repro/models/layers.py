@@ -1,0 +1,490 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (full / chunked /
+local-window / decode), SwiGLU MLP, embeddings, cross-entropy.
+
+All layers are pure functions over explicit parameter pytrees. Every init
+function returns ``(params, axes)`` — two pytrees of identical structure where
+``axes`` leaves are tuples of logical axis names consumed by
+``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# init helpers (with a no-allocation "abstract" mode for the dry-run)
+# ---------------------------------------------------------------------------
+
+_ABSTRACT_MODE = [False]
+
+
+@contextlib.contextmanager
+def abstract_mode():
+    """Inside this context, init functions return ShapeDtypeStructs instead of
+    allocating arrays — used to describe multi-billion-param models for
+    ``.lower().compile()`` without touching device memory."""
+    prev = _ABSTRACT_MODE[0]
+    _ABSTRACT_MODE[0] = True
+    try:
+        yield
+    finally:
+        _ABSTRACT_MODE[0] = prev
+
+
+def is_abstract() -> bool:
+    return _ABSTRACT_MODE[0]
+
+
+def make_param(thunk, shape, dtype):
+    if is_abstract():
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return thunk()
+
+
+def dense_init(key, shape, axes, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init; returns (param, axes)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+
+    def thunk():
+        w = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return w.astype(dtype)
+
+    return make_param(thunk, shape, dtype), axes
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return make_param(lambda: jnp.zeros(shape, dtype), shape, dtype), axes
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return make_param(lambda: jnp.ones(shape, dtype), shape, dtype), axes
+
+
+def const_init(thunk, shape, axes, dtype=jnp.float32):
+    return make_param(thunk, shape, dtype), axes
+
+
+def cache_zeros(shape, dtype):
+    """Zeros (or abstract shapes in abstract mode) for decode caches."""
+    return make_param(lambda: jnp.zeros(shape, dtype), shape, dtype)
+
+
+def split_tree(pairs: dict):
+    """{'name': (param, axes)} -> (params_dict, axes_dict)."""
+    params = {k: v[0] for k, v in pairs.items()}
+    axes = {k: v[1] for k, v in pairs.items()}
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def remat_wrap(fn, cfg):
+    """Apply the config's remat policy to a scan body."""
+    if not cfg.remat:
+        return fn
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        import jax
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    import jax
+    return jax.checkpoint(fn)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention parameter init
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim,
+                   qkv_bias=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    pairs = {
+        "wq": dense_init(ks[0], (d_model, num_heads, head_dim),
+                         ("embed", "heads", "head_dim"), dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads, head_dim),
+                         ("embed", "kv_heads", "kv_head_dim"), dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads, head_dim),
+                         ("embed", "kv_heads", "kv_head_dim"), dtype),
+        "wo": dense_init(ks[3], (num_heads, head_dim, d_model),
+                         ("heads", "head_dim", "embed"), dtype,
+                         scale=1.0 / math.sqrt(num_heads * head_dim)),
+    }
+    if qkv_bias:
+        pairs["bq"] = zeros_init((num_heads, head_dim), ("heads", "head_dim"), dtype)
+        pairs["bk"] = zeros_init((num_kv_heads, head_dim),
+                                 ("kv_heads", "kv_head_dim"), dtype)
+        pairs["bv"] = zeros_init((num_kv_heads, head_dim),
+                                 ("kv_heads", "kv_head_dim"), dtype)
+    return split_tree(pairs)
+
+
+def _project_qkv(p, x, positions, theta, *, rope=True, decode=False):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    if decode:
+        # One-token decode: the KV cache is SEQ-sharded over the model axis,
+        # so q/k/v keep heads replicated — sharding q's heads over the same
+        # axis would force the partitioner to re-shard (all-gather) the
+        # whole cache per layer (measured 2 x 8 GB/layer on decode_32k).
+        q = constrain(q, "batch", None, None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    else:
+        q = constrain(q, "batch", "seq", "heads", None)
+        k = constrain(k, "batch", "seq", "kv_heads", None)
+        v = constrain(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _repeat_kv(k, num_heads):
+    """(B,S,KV,hd) -> (B,S,H,hd) by repeating each kv head."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Plain attention. q:(B,Sq,H,hd) k,v:(B,Sk,H,hd) mask:(Sq,Sk) or None."""
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def causal_attention(q, k, v, *, block_q: int = 512, block_kv: int = 1024):
+    """Memory-efficient causal attention (online-softmax over KV blocks).
+
+    Pure-jnp flash-style reference; the Pallas kernel in
+    ``repro.kernels.flash_attention`` mirrors this computation.
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    if S <= max(block_q, block_kv):
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        return _sdpa(q, k, v, mask, scale)
+
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    nq, nkv = S // block_q, S // block_kv
+    qb = q.reshape(B, nq, block_q, H, hd)
+    kb = k.reshape(B, nkv, block_kv, H, hd)
+    vb = v.reshape(B, nkv, block_kv, H, hd)
+
+    q_pos = (jnp.arange(nq) * block_q)[:, None] + jnp.arange(block_q)  # (nq, bq)
+    kv_pos = (jnp.arange(nkv) * block_kv)[:, None] + jnp.arange(block_kv)
+
+    @jax.checkpoint
+    def kv_step(carry, inp):
+        acc, m, l, qi, qp = carry
+        kv_i, k_i, v_i, kvp = inp
+        s = jnp.einsum("bqhk,bshk->bhqs", qi, k_i).astype(jnp.float32) * scale
+        mask = qp[None, None, :, None] >= kvp[None, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshk->bhqk", p.astype(qi.dtype), v_i).astype(jnp.float32)
+        return (acc, m_new, l, qi, qp), None
+
+    def per_q_block(qi, qp):
+        acc0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+        m0 = jnp.full((B, H, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        inps = (jnp.arange(nkv), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                kv_pos)
+        (acc, m, l, _, _), _ = jax.lax.scan(kv_step, (acc0, m0, l0, qi, qp), inps)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, bq, H, hd)
+
+    out = jax.lax.map(lambda args: per_q_block(*args),
+                      (jnp.moveaxis(qb, 1, 0), q_pos))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def local_attention(q, k, v, window: int):
+    """Sliding-window causal attention. Requires S % window == 0.
+
+    Each query block of size ``window`` attends to its own block and the
+    previous one — exactly a causal window of ``window`` tokens.
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    if S <= window:
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        return _sdpa(q, k, v, mask, scale)
+    assert S % window == 0, (S, window)
+    nb = S // window
+    qb = q.reshape(B, nb, window, H, hd)
+    kb = k.reshape(B, nb, window, H, hd)
+    vb = v.reshape(B, nb, window, H, hd)
+    # previous block (block 0's "previous" is zeros and fully masked)
+    k_prev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2w, H, hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    i = jnp.arange(window)[:, None]            # query offset within block
+    j = jnp.arange(2 * window)[None, :]        # key offset within 2-block
+    base = (j - window) <= i                   # causal
+    inwin = (i + window - j) < window          # within sliding window
+    mask = base & inwin                        # (w, 2w)
+    first_mask = mask & (j >= window)          # block 0: no previous block
+
+    @jax.checkpoint
+    def blk(qi, ki, vi, m):
+        s = jnp.einsum("bqhk,bshk->bhqs", qi, ki).astype(jnp.float32) * scale
+        s = jnp.where(m[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(qi.dtype)
+        return jnp.einsum("bhqs,bshk->bqhk", p, vi)
+
+    masks = jnp.concatenate([first_mask[None], jnp.broadcast_to(mask, (nb - 1,) + mask.shape)])
+    out = jax.lax.map(lambda args: blk(*args),
+                      (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(k2, 1, 0),
+                       jnp.moveaxis(v2, 1, 0), masks))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def cross_attention(q, k, v):
+    """Full (unmasked) attention to a fixed context, e.g. encoder outputs."""
+    B, S, H, hd = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    return _sdpa(q, k, v, None, 1.0 / math.sqrt(hd))
+
+
+def decode_attention(q, cache_k, cache_v, cur_len):
+    """One-token decode vs a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, hd); cache_k/v: (B, Smax, KV, hd); cur_len: () or (B,)
+    int32 — number of valid cache positions per sequence (the new token's
+    K/V must already be written at cur_len - 1).
+    """
+    B, _, H, hd = q.shape
+    S = cache_k.shape[1]
+    k = _repeat_kv(cache_k, H)
+    v = _repeat_kv(cache_v, H)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    # scores stay sharded along the cache's seq axis; softmax over the
+    # sharded dim lowers to local reduce + tiny stat all-reduces
+    s = constrain(s, "batch", None, None, "seq_shard")
+    lens = jnp.reshape(jnp.asarray(cur_len, jnp.int32), (-1, 1, 1, 1))
+    valid = jnp.arange(S)[None, None, None, :] < lens
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", p, v)
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (train / decode)
+# ---------------------------------------------------------------------------
+
+
+def attention_apply(p, x, cfg, *, positions, window: int = 0):
+    """Training/prefill attention over full sequences."""
+    q, k, v = _project_qkv(p, x, positions, cfg.rope_theta)
+    if window:
+        ctx = local_attention(q, k, v, window)
+    else:
+        ctx = causal_attention(q, k, v)
+    ctx = constrain(ctx, "batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+    return constrain(out, "batch", "seq", None)
+
+
+def _onehot_cache_write(cache, new, write_at):
+    """Write ``new`` (B,1,KV,hd) at seq position ``write_at`` via a one-hot
+    select instead of dynamic_update_slice.
+
+    Sharding rationale: the cache's seq dim is sharded over the model axis;
+    a DUS at a *dynamic* index into a sharded dim forces the SPMD partitioner
+    to all-gather the whole cache (measured: 2 x 8 GB moved per layer on
+    llama3.2-1b decode_32k). The one-hot select is elementwise over seq, so
+    every shard updates locally — collective-free at the cost of one cache
+    rewrite (~HBM-bandwidth, not ICI).
+
+    ``write_at``: scalar, or (B,) for per-slot positions (continuous
+    batching) — the one-hot form vectorizes over the batch for free, which a
+    DUS cannot.
+    """
+    S = cache.shape[1]
+    write_at = jnp.reshape(jnp.asarray(write_at, jnp.int32), (-1, 1, 1, 1))
+    hot = (jax.lax.broadcasted_iota(jnp.int32, (1, S, 1, 1), 1) == write_at)
+    return jnp.where(hot, new.astype(cache.dtype), cache)
+
+
+def attention_decode_apply(p, x, cfg, *, cache_k, cache_v, cur_len, window: int = 0):
+    """One-token decode; ``cur_len`` scalar or (B,) per-slot (continuous
+    batching). Returns (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    cur_len = jnp.asarray(cur_len, jnp.int32)
+    pos = (jnp.broadcast_to(cur_len, (B, 1)) if cur_len.ndim == 0
+           else cur_len[:, None])
+    q, k, v = _project_qkv(p, x, pos, cfg.rope_theta, decode=True)
+    S = cache_k.shape[1]
+    if window and S == window:
+        write_at = jnp.mod(cur_len, window)  # rolling buffer
+    else:
+        write_at = cur_len
+    cache_k = _onehot_cache_write(cache_k, k, write_at)
+    cache_v = _onehot_cache_write(cache_v, v, write_at)
+    n_valid = jnp.minimum(cur_len + 1, S)
+    ctx = decode_attention(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                           n_valid)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def cross_attention_init(key, d_model, num_heads, num_kv_heads, head_dim,
+                         dtype=jnp.float32):
+    return attention_init(key, d_model, num_heads, num_kv_heads, head_dim,
+                          qkv_bias=False, dtype=dtype)
+
+
+def cross_attention_apply(p, x, context):
+    """x: (B,S,D) queries; context: (B,Sc,D) keys/values source."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", context, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", context, p["wv"].astype(x.dtype))
+    q = constrain(q, "batch", "seq", "heads", None)
+    ctx = cross_attention(q, k, v)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x.dtype))
+    return constrain(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return split_tree({
+        "wi": dense_init(ks[0], (d_model, d_ff), ("embed", "mlp"), dtype),
+        "wu": dense_init(ks[1], (d_model, d_ff), ("embed", "mlp"), dtype),
+        "wd": dense_init(ks[2], (d_ff, d_model), ("mlp", "embed"), dtype),
+    })
+
+
+def mlp_apply(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+    return constrain(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding / loss
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD_MULTIPLE = 256
+
+
+def padded_vocab(vocab_size: int) -> int:
+    m = VOCAB_PAD_MULTIPLE
+    return (vocab_size + m - 1) // m * m
+
+
+def embedding_init(key, vocab_size, d_model, tie: bool, dtype=jnp.float32):
+    pv = padded_vocab(vocab_size)
+    ks = jax.random.split(key, 2)
+    # 1/sqrt(d) keeps tied-unembedding logits O(1) at init (a scale-1.0 table
+    # makes the self-token logit ~d, which inflates the initial loss).
+    #
+    # Sharding: vocab over 'model' ONLY (d_model replicated). Sharding the
+    # d_model dim over 'data' (FSDP-style) makes the token-lookup gather
+    # unpartitionable — XLA falls back to a batch-REPLICATED gather + f32
+    # all-reduce (the "involuntary full rematerialization" warning). With a
+    # vocab-only sharded table the gather partitions as local-lookup+mask
+    # +psum, and the (tied) unembedding matmul contracts the replicated d
+    # dim with vocab-sharded output — collective-free.
+    pairs = {"tok": dense_init(ks[0], (pv, d_model), ("vocab", None), dtype,
+                               scale=1.0 / math.sqrt(d_model))}
+    if not tie:
+        pairs["out"] = dense_init(ks[1], (d_model, pv), ("embed", "vocab"), dtype)
+    return split_tree(pairs)
+
+
+def embed_apply(p, tokens, dtype):
+    x = p["tok"].astype(dtype)[tokens]
+    return constrain(x, "batch", "seq", None)
+
+
+def unembed_apply(p, x, vocab_size):
+    if "out" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["out"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy_loss(logits, labels, vocab_size):
+    """Mean NLL over tokens; logits may carry padded-vocab tail (masked)."""
+    pv = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if pv != vocab_size:
+        pad_mask = jnp.arange(pv) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

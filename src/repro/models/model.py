@@ -1,0 +1,65 @@
+"""Model dispatcher: family -> (init, forward, init_cache, decode_step).
+
+Also provides ``abstract_init`` (no-allocation param shapes via eval_shape)
+and ``loss_fn`` (next-token cross entropy with MoE aux losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+AUX_COEFS = {"load_balance": 0.01, "router_z": 0.001}
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as mod
+    elif cfg.family == "ssm":
+        from repro.models import ssm as mod
+    elif cfg.family == "hybrid":
+        from repro.models import rglru as mod
+    elif cfg.family == "audio":
+        from repro.models import whisper as mod
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return mod
+
+
+def init(key, cfg: ModelConfig):
+    return _family_module(cfg).init(key, cfg)
+
+
+def abstract_init(cfg: ModelConfig):
+    """(ShapeDtypeStruct params, axes) — never allocates. For the dry-run."""
+    with L.abstract_mode():
+        return _family_module(cfg).init(jax.random.PRNGKey(0), cfg)
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    with L.abstract_mode():
+        return _family_module(cfg).init_cache(cfg, batch_size, max_len)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    return _family_module(cfg).forward(params, cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    return _family_module(cfg).init_cache(cfg, batch_size, max_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    return _family_module(cfg).decode_step(params, cfg, cache, tokens, cur_len)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token loss. batch: {"tokens", "labels", + modality extras}."""
+    logits, aux = forward(params, cfg, batch)
+    loss = L.cross_entropy_loss(logits, batch["labels"], cfg.vocab_size)
+    for name, coef in AUX_COEFS.items():
+        if name in aux:
+            loss = loss + coef * aux[name] / max(cfg.num_layers, 1)
+    return loss, {"nll": loss, **aux}

@@ -1,0 +1,273 @@
+"""Mamba-2 (SSD — state-space duality) blocks, attention-free LM.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear recurrence across chunks) — the same computation as the Pallas
+``ssd_scan`` kernel; decode is a constant-memory recurrent state update,
+which is what makes the ``long_500k`` shape feasible for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import dense_init, ones_init, split_tree, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core (pure jnp; mirrors the Mamba-2 "ssd_minimal" reference)
+# ---------------------------------------------------------------------------
+
+
+def segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[i, j] = sum_{j < k <= i} x[k], -inf above diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(X, A, Bc, Cc, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    X:  (b, l, h, p)  inputs (already multiplied by dt)
+    A:  (b, l, h)     per-step log decay (dt * A, negative)
+    Bc: (b, l, n)     input projection onto state (shared across heads)
+    Cc: (b, l, n)     state read-out
+    Returns (Y: (b, l, h, p), final_state: (b, h, p, n)).
+    """
+    b, l, h, p = X.shape
+    n = Bc.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c, q = l // chunk, chunk
+    Xc = X.reshape(b, c, q, h, p)
+    Ac = jnp.moveaxis(A.reshape(b, c, q, h), -1, 1)        # (b, h, c, q)
+    Bb = Bc.reshape(b, c, q, n)
+    Cb = Cc.reshape(b, c, q, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                        # (b, h, c, q)
+    Lm = jnp.exp(segsum(Ac))                               # (b, h, c, q, q)
+
+    # intra-chunk (quadratic, "attention-like")
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cb, Bb, Lm, Xc)
+
+    # chunk -> state contributions
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)        # (b, h, c, q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bb, decay_states, Xc)
+    states = states.astype(jnp.float32)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1]).astype(jnp.float32)  # (b, h, c)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                   # (b,h,p,n), (b,h)
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry                                   # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, -1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b, c, h, p, n)
+
+    state_decay_out = jnp.exp(A_cum)                        # (b, h, c, q)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cb, prev_states, state_decay_out)
+    Y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return Y.astype(X.dtype), final
+
+
+def ssd_reference(X, A, Bc, Cc, init_state=None):
+    """Sequential recurrence oracle (used by tests to validate ssd_chunked
+    and the Pallas kernel)."""
+    b, l, h, p = X.shape
+    n = Bc.shape[-1]
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        state = state * jnp.exp(a_t)[..., None, None] + \
+            jnp.einsum("bhp,bn->bhpn", x_t, b_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (jnp.moveaxis(X, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(A, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(X.dtype), final.astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def _ssm_block_init(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    conv_ch = di + 2 * n
+    return split_tree({
+        "w_x": dense_init(ks[0], (d, di), ("embed", "ssm_inner")),
+        "w_z": dense_init(ks[1], (d, di), ("embed", "ssm_inner")),
+        "w_B": dense_init(ks[2], (d, n), ("embed", "ssm_state")),
+        "w_C": dense_init(ks[3], (d, n), ("embed", "ssm_state")),
+        "w_dt": dense_init(ks[4], (d, h), ("embed", "ssm_heads")),
+        "b_dt": L.const_init(
+            lambda: jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[5], (h,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1))))),
+            (h,), ("ssm_heads",)),
+        "conv_w": dense_init(ks[6], (w, conv_ch), ("conv_width", "ssm_inner"),
+                             scale=1.0),
+        "conv_b": zeros_init((conv_ch,), ("ssm_inner",)),
+        "A_log": L.const_init(
+            lambda: jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+            (h,), ("ssm_heads",)),
+        "D": ones_init((h,), ("ssm_heads",)),
+        "norm": ones_init((di,), ("ssm_inner",)),
+        "w_out": dense_init(ks[7], (di, d), ("ssm_inner", "embed")),
+        "ln": ones_init((d,), ("embed",)),
+    })
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _ssm_pre(p, x, cfg):
+    """Shared projections. x: (B,S,D) -> (xs, z, Bc, Cc, dt)."""
+    dtype = x.dtype
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dtype))
+    Bc = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dtype))
+    Cc = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["b_dt"])
+    return xin, z, Bc, Cc, dt
+
+
+def _ssm_block_apply(p, x, cfg: ModelConfig):
+    """Full-sequence (train / prefill) Mamba-2 block."""
+    h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    xin, z, Bc, Cc, dt = _ssm_pre(p, h_in, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype)))
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    xin = constrain(xin, "batch", "seq", "ssm_inner")
+
+    H, P_ = cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, _ = x.shape
+    Xh = xin.reshape(B, S, H, P_)
+    A = -jnp.exp(p["A_log"])                                # (H,)
+    Adt = (dt * A).astype(jnp.float32)                      # (B,S,H), negative
+    Xdt = (Xh * dt[..., None].astype(Xh.dtype))
+    Y, _ = ssd_chunked(Xdt, Adt, Bc, Cc, min(cfg.ssm_chunk, S))
+    Y = Y + Xh * p["D"].astype(Xh.dtype)[None, None, :, None]
+    y = Y.reshape(B, S, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return x + constrain(out, "batch", "seq", None).astype(x.dtype)
+
+
+def _ssm_block_decode(p, x, cfg, conv_state, ssm_state):
+    """Single-token decode. conv_state: (B, W-1, C); ssm_state: (B,H,P,N)."""
+    h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    xin, z, Bc, Cc, dt = _ssm_pre(p, h_in, cfg)
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)       # (B,1,C)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+                           + p["conv_b"].astype(x.dtype)[None, None, :])
+    new_conv_state = window[:, 1:, :]
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    H, P_ = cfg.ssm_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    Xh = xin.reshape(B, H, P_)
+    A = -jnp.exp(p["A_log"])
+    dt1 = dt[:, 0, :]                                       # (B,H)
+    decay = jnp.exp((dt1 * A).astype(jnp.float32))          # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", Xh * dt1[..., None].astype(Xh.dtype),
+                     Bc[:, 0, :])
+    ssm_state = ssm_state * decay[..., None, None].astype(ssm_state.dtype) \
+        + upd.astype(ssm_state.dtype)
+    Yh = jnp.einsum("bhpn,bn->bhp", ssm_state.astype(Xh.dtype), Cc[:, 0, :])
+    Yh = Yh + Xh * p["D"].astype(Xh.dtype)[None, :, None]
+    y = Yh.reshape(B, 1, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return x + out.astype(x.dtype), new_conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_blocks = jax.random.split(key)
+    emb_p, emb_a = L.embedding_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings)
+    from repro.models.transformer import _stack_init
+    blk_p, blk_a = _stack_init(_ssm_block_init, k_blocks, cfg.num_layers, cfg)
+    fn_p, fn_a = ones_init((cfg.d_model,), ("embed",))
+    return ({"embed": emb_p, "blocks": blk_p, "final_norm": fn_p},
+            {"embed": emb_a, "blocks": blk_a, "final_norm": fn_a})
+
+
+def forward(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(x, blk_p):
+        return _ssm_block_apply(blk_p, x, cfg), None
+
+    body_fn = L.remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], x, cfg.vocab_size), {}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    del max_len  # constant-size state — the point of the SSM family
+    Lr = cfg.num_layers
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    cache = {
+        "conv": L.cache_zeros((Lr, batch_size, cfg.ssm_conv_width - 1, conv_ch),
+                              jnp.bfloat16),
+        "ssm": L.cache_zeros((Lr, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+    }
+    axes = {"conv": ("layers", "batch", None, "ssm_inner"),
+            "ssm": ("layers", "batch", "ssm_heads", None, None)}
+    return cache, axes
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    del cur_len  # state carries all history
+    x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def body(x, inp):
+        blk_p, conv_s, ssm_s = inp
+        x, conv_s, ssm_s = _ssm_block_decode(blk_p, x, cfg, conv_s, ssm_s)
+        return x, (conv_s, ssm_s)
+
+    x, (conv_s, ssm_s) = jax.lax.scan(
+        body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+    cache = dict(cache, conv=conv_s, ssm=ssm_s)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], x, cfg.vocab_size), cache

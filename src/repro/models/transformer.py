@@ -1,0 +1,222 @@
+"""Decoder-only transformer LM covering the ``dense``, ``moe`` and ``vlm``
+families. Layers are stacked (leading ``layers`` axis) and executed with
+``jax.lax.scan`` (+ optional remat) so HLO size is O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+
+def _stack_init(fn, key, n, *args, **kwargs):
+    """vmap an init fn over a leading layer axis; prepend 'layers' to axes."""
+    if L.is_abstract():
+        p1, axes = fn(key, *args, **kwargs)
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), p1)
+    else:
+        keys = jax.random.split(key, n)
+        params = jax.vmap(lambda k: fn(k, *args, **kwargs)[0])(keys)
+        _, axes = fn(key, *args, **kwargs)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            x is None or isinstance(x, str) for x in t))
+    return params, axes
+
+
+def _block_init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    attn_p, attn_a = L.attention_init(
+        k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        qkv_bias=cfg.qkv_bias)
+    if cfg.family == "moe":
+        ffn_p, ffn_a = MOE.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.num_experts)
+    else:
+        ffn_p, ffn_a = L.mlp_init(k2, cfg.d_model, cfg.d_ff)
+    ln1, ln1_a = L.ones_init((cfg.d_model,), ("embed",))
+    ln2, ln2_a = L.ones_init((cfg.d_model,), ("embed",))
+    return ({"attn": attn_p, "ffn": ffn_p, "ln1": ln1, "ln2": ln2},
+            {"attn": attn_a, "ffn": ffn_a, "ln1": ln1_a, "ln2": ln2_a})
+
+
+def _cross_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key, 2)
+    x_p, x_a = L.cross_attention_init(
+        k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    m_p, m_a = L.mlp_init(k2, cfg.d_model, cfg.d_ff)
+    ln1, ln1_a = L.ones_init((cfg.d_model,), ("embed",))
+    ln2, ln2_a = L.ones_init((cfg.d_model,), ("embed",))
+    g1, g1_a = L.zeros_init((), ())          # tanh gates (llama-vision style)
+    g2, g2_a = L.zeros_init((), ())
+    return ({"xattn": x_p, "mlp": m_p, "ln1": ln1, "ln2": ln2,
+             "gate_attn": g1, "gate_mlp": g2},
+            {"xattn": x_a, "mlp": m_a, "ln1": ln1_a, "ln2": ln2_a,
+             "gate_attn": g1_a, "gate_mlp": g2_a})
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_cross, k_fn = jax.random.split(key, 4)
+    emb_p, emb_a = L.embedding_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings)
+    blk_p, blk_a = _stack_init(_block_init, k_blocks, cfg.num_layers, cfg)
+    fn_p, fn_a = L.ones_init((cfg.d_model,), ("embed",))
+    params = {"embed": emb_p, "blocks": blk_p, "final_norm": fn_p}
+    axes = {"embed": emb_a, "blocks": blk_a, "final_norm": fn_a}
+    if cfg.family == "vlm":
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        cp, ca = _stack_init(_cross_block_init, k_cross, n_cross, cfg)
+        params["cross_blocks"], axes["cross_blocks"] = cp, ca
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(p, x, cfg, positions):
+    sp = cfg.seq_parallel
+
+    def to_sp(t):    # residual-stream layout (seq sharded over model)
+        return constrain(t, "batch", "seq_shard", None) if sp else t
+
+    def to_full(t):  # attention/MLP layout (seq replicated, TP inside)
+        return constrain(t, "batch", "seq", None) if sp else t
+
+    x = to_sp(x)
+    h = to_full(L.rms_norm(x, p["ln1"], cfg.norm_eps))
+    x = x + to_sp(L.attention_apply(p["attn"], h, cfg, positions=positions,
+                                    window=cfg.attn_window))
+    h = to_full(L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    if cfg.family == "moe":
+        out, aux = MOE.moe_apply(p["ffn"], h, cfg)
+        return x + to_sp(out), aux
+    return x + to_sp(L.mlp_apply(p["ffn"], h)), {}
+
+
+def _cross_block_apply(p, x, cfg, context):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * \
+        L.cross_attention_apply(p["xattn"], h, context)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * L.mlp_apply(p["mlp"], h)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": (B,S) int32, optional "patches": (B,P,D)}.
+    Returns (logits, aux_losses)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, blk_p):
+        x, aux_acc = carry
+        x, aux = _block_apply(blk_p, x, cfg, positions)
+        for k_, v_ in aux.items():
+            aux_acc = dict(aux_acc, **{k_: aux_acc.get(k_, 0.0) + v_})
+        return (x, aux_acc), None
+
+    body_fn = L.remat_wrap(body, cfg)
+    aux0 = ({"load_balance": jnp.float32(0), "router_z": jnp.float32(0)}
+            if cfg.family == "moe" else {})
+
+    if cfg.family == "vlm":
+        context = batch["patches"].astype(dtype)
+        every, n_cross = cfg.cross_attn_every, cfg.num_layers // cfg.cross_attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_cross, every) + a.shape[1:]), params["blocks"])
+
+        def group_body(carry, gp):
+            self_p, cross_p = gp
+            (x, aux), _ = jax.lax.scan(body_fn, carry, self_p)
+            x = _cross_block_apply(cross_p, x, cfg, context)
+            return (x, aux), None
+
+        grp_fn = L.remat_wrap(group_body, cfg)
+        (x, aux), _ = jax.lax.scan(grp_fn, (x, aux0),
+                                   (grouped, params["cross_blocks"]))
+    else:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux0), params["blocks"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, cfg.vocab_size)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    """Zero KV cache; seq dim is sharded over the model axis ('seq_shard')."""
+    kv_shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    kv_axes = ("layers", "batch", "seq_shard", "kv_heads", None)
+    cache = {"k": L.cache_zeros(kv_shape, jnp.bfloat16),
+             "v": L.cache_zeros(kv_shape, jnp.bfloat16)}
+    axes = {"k": kv_axes, "v": kv_axes}
+    if cfg.family == "vlm":
+        cache["context"] = L.cache_zeros(
+            (batch_size, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        axes["context"] = ("batch", None, None)
+    return cache, axes
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    """tokens: (B,1) int32; cur_len: scalar int32. Returns (logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens, dtype)
+
+    def body(x, inp):
+        blk_p, ck, cv = inp
+        h = L.rms_norm(x, blk_p["ln1"], cfg.norm_eps)
+        a, ck, cv = L.attention_decode_apply(
+            blk_p["attn"], h, cfg, cache_k=ck, cache_v=cv, cur_len=cur_len,
+            window=cfg.attn_window)
+        x = x + a
+        h = L.rms_norm(x, blk_p["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            out, _ = MOE.moe_apply(blk_p["ffn"], h, cfg)
+            x = x + out
+        else:
+            x = x + L.mlp_apply(blk_p["ffn"], h)
+        return x, (ck, cv)
+
+    if cfg.family == "vlm":
+        context = cache["context"].astype(dtype)
+        every = cfg.cross_attn_every
+        n_cross = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_cross, every) + a.shape[1:]), params["blocks"])
+        gck = cache["k"].reshape((n_cross, every) + cache["k"].shape[1:])
+        gcv = cache["v"].reshape((n_cross, every) + cache["v"].shape[1:])
+
+        def group_body(x, inp):
+            self_p, cross_p, ck, cv = inp
+            x, (ck, cv) = jax.lax.scan(body, x, (self_p, ck, cv))
+            x = _cross_block_apply(cross_p, x, cfg, context)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(group_body, x,
+                                   (grouped, params["cross_blocks"], gck, gcv))
+        cache = dict(cache, k=ck.reshape(cache["k"].shape),
+                     v=cv.reshape(cache["v"].shape))
+    else:
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ck, v=cv)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x, cfg.vocab_size)
+    return logits, cache

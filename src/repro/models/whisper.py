@@ -1,0 +1,136 @@
+"""Whisper-style encoder-decoder transformer (audio family).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model) as if the two
+conv layers had already run; the transformer backbone is fully implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ones_init, split_tree
+
+
+def _enc_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    a_p, a_a = L.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim)
+    m_p, m_a = L.mlp_init(k2, cfg.d_model, cfg.d_ff)
+    ln1, ln1_a = ones_init((cfg.d_model,), ("embed",))
+    ln2, ln2_a = ones_init((cfg.d_model,), ("embed",))
+    return ({"attn": a_p, "mlp": m_p, "ln1": ln1, "ln2": ln2},
+            {"attn": a_a, "mlp": m_a, "ln1": ln1_a, "ln2": ln2_a})
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    a_p, a_a = L.attention_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim)
+    x_p, x_a = L.cross_attention_init(k2, cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, cfg.head_dim)
+    m_p, m_a = L.mlp_init(k3, cfg.d_model, cfg.d_ff)
+    lns = {f"ln{i}": ones_init((cfg.d_model,), ("embed",)) for i in (1, 2, 3)}
+    p = {"attn": a_p, "xattn": x_p, "mlp": m_p}
+    a = {"attn": a_a, "xattn": x_a, "mlp": m_a}
+    for k_, (pp, aa) in lns.items():
+        p[k_], a[k_] = pp, aa
+    return p, a
+
+
+def init(key, cfg: ModelConfig):
+    from repro.models.transformer import _stack_init
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    emb_p, emb_a = L.embedding_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings)
+    enc_p, enc_a = _stack_init(_enc_block_init, k_enc, cfg.encoder_layers, cfg)
+    dec_p, dec_a = _stack_init(_dec_block_init, k_dec, cfg.num_layers, cfg)
+    enc_n, enc_n_a = ones_init((cfg.d_model,), ("embed",))
+    fn_p, fn_a = ones_init((cfg.d_model,), ("embed",))
+    return ({"embed": emb_p, "encoder": enc_p, "enc_norm": enc_n,
+             "decoder": dec_p, "final_norm": fn_p},
+            {"embed": emb_a, "encoder": enc_a, "enc_norm": enc_n_a,
+             "decoder": dec_a, "final_norm": fn_a})
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, F, D) stub frontend output -> (B, F, D) encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"].astype(x.dtype))
+        ctx = L.cross_attention(q, k, v)  # bidirectional (unmasked)
+        x = x + jnp.einsum("bshk,hkd->bsd", ctx, p["attn"]["wo"].astype(x.dtype))
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h), None
+
+    body_fn = L.remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_apply(p, x, cfg, positions, enc_out):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attention_apply(p["attn"], h, cfg, positions=positions)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.cross_attention_apply(p["xattn"], h, enc_out)
+    h = L.rms_norm(x, p["ln3"], cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": (B,S), "frames": (B,F,D)}."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, batch["frames"])
+    x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, p):
+        return _dec_block_apply(p, x, cfg, positions, enc_out), None
+
+    body_fn = L.remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], x, cfg.vocab_size), {}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    kv = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    cache = {
+        "k": L.cache_zeros(kv, jnp.bfloat16),
+        "v": L.cache_zeros(kv, jnp.bfloat16),
+        "enc_out": L.cache_zeros((batch_size, cfg.encoder_seq, cfg.d_model),
+                                 jnp.bfloat16),
+    }
+    axes = {"k": ("layers", "batch", "seq_shard", "kv_heads", None),
+            "v": ("layers", "batch", "seq_shard", "kv_heads", None),
+            "enc_out": ("batch", None, None)}
+    return cache, axes
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    x = L.embed_apply(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    enc_out = cache["enc_out"].astype(x.dtype)
+
+    def body(x, inp):
+        p, ck, cv = inp
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, ck, cv = L.attention_decode_apply(p["attn"], h, cfg, cache_k=ck,
+                                             cache_v=cv, cur_len=cur_len)
+        x = x + a
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.cross_attention_apply(p["xattn"], h, enc_out)
+        h = L.rms_norm(x, p["ln3"], cfg.norm_eps)
+        return x + L.mlp_apply(p["mlp"], h), (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["decoder"], cache["k"],
+                                         cache["v"]))
+    cache = dict(cache, k=ck, v=cv)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed_apply(params["embed"], x, cfg.vocab_size), cache

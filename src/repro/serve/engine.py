@@ -1,0 +1,249 @@
+"""Batched serving engine: slot-based scheduler over the decode step.
+
+Design (TPU-friendly static-shape serving):
+  - A fixed pool of ``batch_slots`` decode slots shares ONE compiled
+    ``decode_step`` (shape-stable: the cache is (L, B, Smax, KV, hd) and every
+    call decodes one token for all B slots).
+  - Requests are admitted in *waves*: whenever slots free up, queued prompts
+    are aligned to a common start position and prefilled token-by-token
+    through the same decode path (teacher forcing), so prefill and decode
+    share one executable — no recompiles, ever.
+  - Greedy sampling; per-slot stop on EOS or max_new_tokens.
+
+On a production mesh the cache is sequence-sharded over the ``model`` axis
+and the slots over ``(pod, data)`` — the same rule tables as the dry-run's
+``decode_32k`` cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as SH
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    waves: int = 0
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+
+
+class Engine:
+    """Batched engine with two schedulers:
+
+    - ``continuous`` (default): Orca-style inflight batching. Every step
+      decodes ONE token for all slots with PER-SLOT cache positions
+      (vectorized ``cur_len``); finished slots are refilled immediately, and
+      prefill tokens of new requests ride in the same batched step as other
+      slots' decode tokens — no wave barrier, no recompilation.
+    - ``wave``: aligned static batching (admit up to B requests, left-pad to
+      a common start, run to completion) — kept for comparison/testing.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 512, mesh=None, mode: str = "continuous"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        assert mode in ("continuous", "wave")
+        self.mode = mode
+        with SH.use_mesh(mesh):
+            self.params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+            def _step(params, cache, toks, cur):
+                logits, cache = M.decode_step(params, cfg, cache, toks, cur)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                return nxt, cache
+
+            self._decode = jax.jit(_step)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.stats = EngineStats()
+        self._uid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(uid=self._uid, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      t_submit=time.time())
+        self._uid += 1
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: List[Request]) -> None:
+        """Serve up to ``batch_slots`` requests through one shared cache."""
+        B = self.batch_slots
+        cfg = self.cfg
+        max_prompt = max(len(r.prompt) for r in wave)
+        budget = max(r.max_new_tokens for r in wave)
+        need = max_prompt + budget + 1
+        assert need <= self.max_len, (need, self.max_len)
+
+        with SH.use_mesh(self.mesh):
+            cache, _ = M.init_cache(cfg, B, self.max_len)
+            # left-pad prompts to a common length so every slot shares cur_len
+            toks = np.zeros((B, max_prompt), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, max_prompt - len(r.prompt):] = r.prompt
+            # prefill through the decode path (teacher forcing)
+            last = None
+            for t in range(max_prompt):
+                last, cache = self._decode(
+                    self.params, cache, jnp.asarray(toks[:, t:t + 1]),
+                    jnp.int32(t))
+                self.stats.prefill_tokens += len(wave)
+                self.stats.decode_steps += 1  # one model invocation
+            # decode
+            cur = np.asarray(last)
+            active = np.array([not r.done for r in wave] +
+                              [False] * (B - len(wave)))
+            for step in range(budget):
+                for i, r in enumerate(wave):
+                    if active[i]:
+                        tok = int(cur[i])
+                        r.output.append(tok)
+                        self.stats.generated_tokens += 1
+                        if ((r.eos_id is not None and tok == r.eos_id)
+                                or len(r.output) >= r.max_new_tokens):
+                            active[i] = False
+                            r.done = True
+                            r.t_finish = time.time()
+                if not active.any():
+                    break
+                nxt, cache = self._decode(
+                    self.params, cache, jnp.asarray(cur[:, None]),
+                    jnp.int32(max_prompt + step))
+                self.stats.decode_steps += 1
+                cur = np.asarray(nxt)
+            for r in wave:
+                if not r.done:
+                    r.done = True
+                    r.t_finish = time.time()
+
+    # ------------------------------------------------------------------
+    def _reset_slot(self, cache, cache_axes, slot: int):
+        """Zero one slot's state across every cache leaf (batch dim located
+        via the 'batch' logical axis). The attention mask hides stale KV,
+        but recurrent families (SSM / RG-LRU) carry cumulative state that
+        MUST be cleared when a slot is reassigned."""
+        flat_c, tdef = jax.tree.flatten(cache)
+        flat_a = tdef.flatten_up_to(cache_axes)
+
+        def leaf(arr, axes):
+            if "batch" not in axes:
+                return arr
+            d = axes.index("batch")
+            idx = jax.lax.broadcasted_iota(jnp.int32, arr.shape, d)
+            return jnp.where(idx == slot, jnp.zeros_like(arr), arr)
+
+        return tdef.unflatten([leaf(c, a) for c, a in zip(flat_c, flat_a)])
+
+    def _run_continuous(self) -> None:
+        """Inflight batching: per-slot positions, immediate slot refill."""
+        B, cfg = self.batch_slots, self.cfg
+        with SH.use_mesh(self.mesh):
+            cache, cache_axes = M.init_cache(cfg, B, self.max_len)
+            if cfg.family == "vlm":
+                cache = dict(cache, context=jnp.zeros_like(cache["context"]))
+            slots: List[Optional[Request]] = [None] * B
+            phase = ["idle"] * B          # idle | prefill | decode
+            ppos = [0] * B                # next prompt token to feed
+            cur_lens = np.zeros(B, np.int32)
+            feed = np.zeros(B, np.int32)
+
+            while self.queue or any(s is not None for s in slots):
+                # admit new requests into idle slots
+                for i in range(B):
+                    if slots[i] is None and self.queue:
+                        req = self.queue.pop(0)
+                        assert len(req.prompt) + req.max_new_tokens                             <= self.max_len
+                        slots[i] = req
+                        phase[i] = "prefill"
+                        ppos[i] = 0
+                        cur_lens[i] = 0
+                        cache = self._reset_slot(cache, cache_axes, i)
+                # choose this step's input token per slot
+                for i, r in enumerate(slots):
+                    if r is None:
+                        feed[i] = 0
+                    elif phase[i] == "prefill":
+                        feed[i] = r.prompt[ppos[i]]
+                        self.stats.prefill_tokens += 1
+                    else:
+                        feed[i] = r.output[-1]
+                nxt, cache = self._decode(
+                    self.params, cache, jnp.asarray(feed[:, None]),
+                    jnp.asarray(cur_lens))
+                self.stats.decode_steps += 1
+                nxt = np.asarray(nxt)
+                # advance per-slot state machines
+                for i, r in enumerate(slots):
+                    if r is None:
+                        continue
+                    cur_lens[i] += 1
+                    if phase[i] == "prefill":
+                        ppos[i] += 1
+                        if ppos[i] == len(r.prompt):
+                            phase[i] = "decode"
+                            r.output.append(int(nxt[i]))
+                            self.stats.generated_tokens += 1
+                    else:
+                        r.output.append(int(nxt[i]))
+                        self.stats.generated_tokens += 1
+                    if phase[i] == "decode" and (
+                            len(r.output) >= r.max_new_tokens
+                            or (r.eos_id is not None
+                                and r.output[-1] == r.eos_id)):
+                        r.output = r.output[:r.max_new_tokens]
+                        r.done = True
+                        r.t_finish = time.time()
+                        self.finished.append(r)
+                        slots[i] = None
+                        phase[i] = "idle"
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Request]:
+        """Drain the queue; returns finished requests in completion order."""
+        t0 = time.time()
+        if self.mode == "continuous":
+            self._run_continuous()
+        else:
+            while self.queue:
+                wave = self.queue[:self.batch_slots]
+                self.queue = self.queue[self.batch_slots:]
+                self._run_wave(wave)
+                self.stats.waves += 1
+                self.finished.extend(wave)
+        self.stats.wall_s += time.time() - t0
+        return self.finished

@@ -1,0 +1,201 @@
+"""Trainer: sharded train loop with gradient accumulation, checkpointing,
+fault tolerance hooks, and straggler monitoring.
+
+Works at both extremes:
+  - CPU smoke configs (mesh=None): everything runs un-sharded on one device.
+  - Production meshes: params/optimizer/batch shardings come from the same
+    logical-axis rule tables the dry-run compiles with, so a trainer step IS
+    the dry-run cell with real buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import pipeline as data_pipeline
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+from repro.models import model as M
+from repro.train import checkpoint as CKPT
+from repro.train import optimizer as OPT
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    seq_len: int = 256
+    global_batch: int = 8
+    microbatches: int = 1           # gradient accumulation factor
+    num_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    seed: int = 0
+    straggler_slack: float = 3.0    # x median step time -> flagged
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker. On real pods this watches per-host heartbeat
+    gaps; here it watches wall-clock per step. A step slower than
+    ``slack x median`` is flagged — the trainer records the event and (in a
+    multi-host deployment) the launcher would rebalance/evict that host."""
+
+    def __init__(self, slack: float = 3.0):
+        self.slack = slack
+        self.times = []
+        self.flagged = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) >= 5:
+            med = float(np.median(self.times[-50:]))
+            if dt > self.slack * med:
+                self.flagged.append((step, dt, med))
+                return True
+        return False
+
+
+def _accumulate_train_step(cfg: ModelConfig, hp: OPT.OptHParams,
+                           microbatches: int):
+    """Gradient-accumulation train step: grads averaged over ``microbatches``
+    sequential microbatches (lax.scan keeps HLO size O(1))."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            grad_fn = jax.value_and_grad(M.loss_fn, has_aux=True)
+            (loss, metrics), grads = grad_fn(params, cfg, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, one):
+                grad_fn = jax.value_and_grad(M.loss_fn, has_aux=True)
+                (l, met), g = grad_fn(params, cfg, one)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), met
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        params, opt_state, opt_metrics = OPT.apply_updates(
+            params, grads, opt_state, hp)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 hp: Optional[OPT.OptHParams] = None, mesh=None,
+                 data: Optional[Iterator] = None):
+        self.cfg, self.tc = cfg, tc
+        self.hp = hp or OPT.OptHParams(warmup_steps=10,
+                                       decay_steps=max(tc.num_steps, 2))
+        self.mesh = mesh
+        self.data = data or data_pipeline.make_pipeline(
+            cfg, seq_len=tc.seq_len, global_batch=tc.global_batch,
+            seed=tc.seed)
+        self.monitor = StragglerMonitor(tc.straggler_slack)
+        self.step = 0
+        self.history: list = []
+
+        key = jax.random.PRNGKey(tc.seed)
+        with SH.use_mesh(mesh):
+            self.params, self.axes = M.init(key, cfg)
+            self.opt_state = OPT.init_state(self.params, self.hp)
+            step_fn = _accumulate_train_step(cfg, self.hp, tc.microbatches)
+            if mesh is not None:
+                p_sh = SH.tree_param_shardings(self.axes, mesh, self.params)
+                o_axes = OPT.state_axes(self.axes)
+                o_sh = {"m": SH.tree_param_shardings(o_axes["m"], mesh,
+                                                     self.opt_state["m"]),
+                        "v": SH.tree_param_shardings(o_axes["v"], mesh,
+                                                     self.opt_state["v"]),
+                        "step": jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec())}
+                self.params = jax.device_put(self.params, p_sh)
+                self.opt_state = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), self.opt_state, o_sh,
+                    is_leaf=lambda t: isinstance(t, jnp.ndarray))
+                self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1),
+                                        in_shardings=(p_sh, o_sh, None),
+                                        out_shardings=(p_sh, o_sh, None))
+            else:
+                self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def _device_batch(self, batch: Dict[str, np.ndarray]):
+        dtype_map = {"patches": self.cfg.dtype, "frames": self.cfg.dtype}
+        return {k: jnp.asarray(v, dtype=dtype_map.get(k)) if k in dtype_map
+                else jnp.asarray(v) for k, v in batch.items()}
+
+    def train_one(self, batch=None) -> Dict[str, float]:
+        if batch is None:
+            batch = next(self.data)
+        t0 = time.time()
+        with SH.use_mesh(self.mesh):
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, self._device_batch(batch))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        self.step += 1
+        dt = time.time() - t0
+        self.monitor.observe(self.step, dt)
+        metrics["step_time_s"] = dt
+        self.history.append({"step": self.step, **metrics})
+        return metrics
+
+    # ------------------------------------------------------------------
+    def save(self) -> None:
+        if not self.tc.ckpt_dir:
+            return
+        CKPT.save(self.tc.ckpt_dir, self.step,
+                  {"params": self.params, "opt": self.opt_state,
+                   "data_index": jnp.int32(getattr(self.data, "index", 0))},
+                  keep=self.tc.ckpt_keep)
+
+    def maybe_restore(self) -> bool:
+        """Resume from the newest checkpoint if one exists."""
+        if not self.tc.ckpt_dir:
+            return False
+        like = {"params": self.params, "opt": self.opt_state,
+                "data_index": jnp.int32(0)}
+        step, tree = CKPT.restore_latest(self.tc.ckpt_dir, like)
+        if step is None:
+            return False
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        if hasattr(self.data, "skip_to"):
+            self.data.skip_to(int(tree["data_index"]))
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: Optional[int] = None,
+            on_step: Optional[Callable[[int, Dict], None]] = None
+            ) -> Dict[str, float]:
+        num_steps = num_steps or self.tc.num_steps
+        last = {}
+        while self.step < num_steps:
+            last = self.train_one()
+            if on_step:
+                on_step(self.step, last)
+            if self.tc.log_every and self.step % self.tc.log_every == 0:
+                print(f"step {self.step:5d} loss {last['loss']:.4f} "
+                      f"lr {last['lr']:.2e} gnorm {last['grad_norm']:.3f} "
+                      f"({last['step_time_s']*1e3:.0f} ms)", flush=True)
+            if (self.tc.ckpt_dir and self.tc.ckpt_every
+                    and self.step % self.tc.ckpt_every == 0):
+                self.save()
+        if self.tc.ckpt_dir:
+            self.save()
+        return last

@@ -1,0 +1,70 @@
+"""Paleo / MLPredict / Habitat baseline sanity (paper Tables III-V)."""
+import numpy as np
+
+from repro.core import baselines, simulator, workloads
+
+
+def test_paleo_exact_on_single_calibration_case():
+    case = ("VGG16", 64, 128)
+    m = simulator.measure("T4", *case)
+    pa = baselines.PaleoModel().calibrate("T4", case, m.latency_ms)
+    assert abs(pa.predict("T4", case) - m.latency_ms) / m.latency_ms < 1e-6
+
+
+def test_paleo_reasonable_after_geometric_calibration():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("VGG16", "AlexNet", "ResNet50"))
+    pa = baselines.PaleoModel()
+    for d in ds.devices:
+        pa.calibrate_many(d, ds.cases, [ds.latency(d, c) for c in ds.cases])
+    errs = [abs(pa.predict(d, c) - ds.latency(d, c)) / ds.latency(d, c)
+            for d in ds.devices for c in ds.cases]
+    assert np.mean(errs) < 2.0  # analytic model: coarse but sane
+
+
+def test_habitat_direction_of_scaling():
+    """Scaling a big compute-bound workload from T4 to V100 must predict a
+    speedup (V100 has ~1.7x peak and ~2.8x bandwidth)."""
+    hb = baselines.HabitatScaling()
+    case = ("VGG16", 128, 128)
+    t4 = simulator.measure("T4", *case).latency_ms
+    pred_v100 = hb.predict("T4", "V100", case)
+    assert pred_v100 < t4
+
+
+def test_mlpredict_trains_and_predicts():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet"),
+                            batches=(16, 64), pixels=(32, 64))
+    ml = baselines.MLPredictModel(epochs=40).fit(ds, ds.cases)
+    p = ml.predict("T4", ds.cases[0])
+    assert np.isfinite(p)
+
+
+def test_profet_beats_baselines_small_grid():
+    """The paper's headline: PROFET's MAPE beats the white-box baselines.
+    Checked on a reduced grid to keep test time sane."""
+    from repro.core.ensemble import mape
+    from repro.core.predictor import Profet, ProfetConfig
+
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "VGG11", "ResNet18"))
+    train, test = workloads.split_cases(ds.cases, test_frac=0.25, seed=0)
+    prophet = Profet(ProfetConfig(dnn_epochs=40, n_trees=20)).fit(ds, train)
+
+    def profet_mape():
+        errs = []
+        for ga, gt in (("T4", "V100"), ("V100", "T4")):
+            pred = prophet.predict_cross_many(ga, gt, ds, test)
+            true = np.array([ds.latency(gt, c) for c in test])
+            errs.append(mape(true, pred))
+        return np.mean(errs)
+
+    hb = baselines.HabitatScaling()
+    hb_errs = []
+    for ga, gt in (("T4", "V100"), ("V100", "T4")):
+        pred = np.array([hb.predict(ga, gt, c) for c in test])
+        true = np.array([ds.latency(gt, c) for c in test])
+        hb_errs.append(mape(true, pred))
+
+    assert profet_mape() < np.mean(hb_errs)

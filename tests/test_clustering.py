@@ -1,0 +1,116 @@
+"""PROFET §III-B: Levenshtein, average-linkage HAC, dendrogram cut,
+unseen-op routing. Includes hypothesis property tests for the metric."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.clustering import (FeatureClustering, average_linkage,
+                                   distance_matrix, identity_features,
+                                   levenshtein)
+
+words = st.text(alphabet=st.characters(min_codepoint=48, max_codepoint=122),
+                max_size=12)
+
+
+# ---------------------------------------------------------------------------
+# Levenshtein
+# ---------------------------------------------------------------------------
+
+
+def test_levenshtein_paper_examples():
+    assert levenshtein("ReLU", "ReLU6") == 1          # paper's example
+    assert levenshtein("ReLU", "Conv2D") == 6         # paper's example
+    assert levenshtein("MaxPoolGrad", "AvgPoolGrad") == 3
+
+
+def test_levenshtein_basic():
+    assert levenshtein("", "") == 0
+    assert levenshtein("abc", "") == 3
+    assert levenshtein("kitten", "sitting") == 3
+    assert levenshtein("flaw", "lawn") == 2
+
+
+@given(words, words)
+@settings(max_examples=200, deadline=None)
+def test_levenshtein_symmetric(a, b):
+    assert levenshtein(a, b) == levenshtein(b, a)
+
+
+@given(words, words)
+@settings(max_examples=200, deadline=None)
+def test_levenshtein_bounds(a, b):
+    d = levenshtein(a, b)
+    assert abs(len(a) - len(b)) <= d <= max(len(a), len(b))
+    assert (d == 0) == (a == b)
+
+
+@given(words, words, words)
+@settings(max_examples=100, deadline=None)
+def test_levenshtein_triangle(a, b, c):
+    assert levenshtein(a, c) <= levenshtein(a, b) + levenshtein(b, c)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical clustering
+# ---------------------------------------------------------------------------
+
+
+def test_average_linkage_paper_example():
+    """MaxPoolGrad/AvgPoolGrad merge first (d=3); ArgMax joins at the average
+    of its distances to both (paper: (10+8)/2 = 9)."""
+    names = ["MaxPoolGrad", "AvgPoolGrad", "ArgMax"]
+    dend = average_linkage(distance_matrix(names), names)
+    heights = dend.merges[:, 2]
+    assert heights[0] == 3.0
+    assert heights[1] == pytest.approx(
+        (levenshtein("ArgMax", "MaxPoolGrad")
+         + levenshtein("ArgMax", "AvgPoolGrad")) / 2)
+
+
+def test_cut_height():
+    names = ["ReLU", "ReLU6", "Conv2D", "Conv2DBackpropInput"]
+    fc = FeatureClustering.fit(names, max_height=2.0)
+    cl = {frozenset(names[i] for i in c) for c in fc.clusters}
+    assert frozenset({"ReLU", "ReLU6"}) in cl
+    assert frozenset({"Conv2D"}) in cl  # backprop variant is >2 away
+
+    fc_all = FeatureClustering.fit(names, max_height=100.0)
+    assert len(fc_all.clusters) == 1
+
+
+def test_transform_aggregates_by_sum():
+    fc = FeatureClustering.fit(["ReLU", "ReLU6", "Conv2D"], max_height=2.0)
+    x = fc.transform({"ReLU": 1.0, "ReLU6": 2.0, "Conv2D": 5.0})
+    by_name = dict(zip(fc.cluster_names, x))
+    assert by_name["ReLU+ReLU6"] == 3.0
+    assert by_name["Conv2D"] == 5.0
+
+
+def test_unseen_op_routed_to_nearest_cluster():
+    """The paper's generalization case: an op never seen in training lands in
+    the closest cluster if within max_height, else it is dropped."""
+    fc = FeatureClustering.fit(["ReLU", "Conv2D", "MaxPool"], max_height=3.0)
+    x_with = fc.transform({"ReLU6": 4.0})
+    relu_idx = next(i for i, c in enumerate(fc.clusters) if 0 in c)
+    assert x_with[relu_idx] == 4.0
+    # a totally alien name is dropped, not misattributed
+    x_alien = fc.transform({"XlaWhileLoopCondWrapper": 1.0})
+    assert np.all(x_alien == 0.0)
+
+
+def test_identity_features_no_clustering():
+    names = ["ReLU", "ReLU6"]
+    fc = identity_features(names)
+    assert len(fc.clusters) == 2
+    x = fc.transform({"ReLU": 1.0, "ReLU6": 2.0})
+    assert sorted(x.tolist()) == [1.0, 2.0]
+
+
+@given(st.lists(words.filter(lambda w: len(w) > 0), min_size=2, max_size=8,
+                unique=True), st.floats(0.0, 12.0))
+@settings(max_examples=50, deadline=None)
+def test_clusters_partition_names(names, h):
+    fc = FeatureClustering.fit(names, max_height=h)
+    flat = sorted(i for c in fc.clusters for i in c)
+    assert flat == list(range(len(names)))  # exact partition

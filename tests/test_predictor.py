@@ -1,0 +1,79 @@
+"""End-to-end PROFET predictor (paper §III-C): cross-instance + knob scaling
+on a reduced grid (full-grid accuracy lives in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core import workloads
+from repro.core.ensemble import mape
+from repro.core.predictor import Profet, ProfetConfig
+
+
+@pytest.fixture(scope="module")
+def small():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "VGG11", "ResNet18",
+                                    "MobileNetV2"))
+    train, test = workloads.split_cases(ds.cases, test_frac=0.25, seed=0)
+    prophet = Profet(ProfetConfig(dnn_epochs=60, n_trees=30)).fit(ds, train)
+    return ds, train, test, prophet
+
+
+def test_cross_instance_accuracy(small):
+    ds, train, test, prophet = small
+    for ga, gt in (("T4", "V100"), ("V100", "T4")):
+        pred = prophet.predict_cross_many(ga, gt, ds, test)
+        true = np.array([ds.latency(gt, c) for c in test])
+        assert mape(true, pred) < 30.0, (ga, gt)
+
+
+def test_knob_prediction_true_minmax(small):
+    """Fig 11a: with TRUE min/max latencies the batch predictor is tight."""
+    ds, train, test, prophet = small
+    errs = []
+    for (m, b, p) in test:
+        if b in (16, 256):
+            continue
+        lo = ds.latency("T4", (m, 16, p))
+        hi = ds.latency("T4", (m, 256, p))
+        pred = prophet.predict_knob("T4", "batch", b, lo, hi)
+        errs.append(abs(pred - ds.latency("T4", (m, b, p)))
+                    / ds.latency("T4", (m, b, p)))
+    # reduced 5-model grid; the full-grid Fig-11 MAPE lives in benchmarks/
+    assert np.mean(errs) < 0.45
+
+
+def test_two_phase_prediction_runs(small):
+    """Fig 11b "Predict" mode: phase-1 min/max -> phase-2 interpolation."""
+    ds, train, test, prophet = small
+    m, b, p = next(c for c in test if c[1] not in (16, 256))
+    pred = prophet.predict_two_phase(
+        "T4", "V100", "batch", b,
+        ds.profile("T4", (m, 16, p)), ds.profile("T4", (m, 256, p)),
+        case_min=(m, 16, p), case_max=(m, 256, p))
+    true = ds.latency("V100", (m, b, p))
+    assert np.isfinite(pred) and pred > 0
+    assert abs(pred - true) / true < 1.0
+
+
+def test_clustering_helps_unseen_ops(small):
+    """Fig 13's mechanism: a model whose profile contains an op name never
+    seen in training still predicts sanely WITH clustering (the unseen op is
+    routed to its nearest cluster instead of dropped)."""
+    ds, train, test, prophet = small
+    case = test[0]
+    profile = dict(ds.profile("T4", case))
+    # rename a feature to an unseen variant (ReLU -> ReLU6-style drift)
+    for k in list(profile):
+        if k == "Relu":
+            profile["Relu6"] = profile.pop(k)
+    pred = prophet.predict_cross("T4", "V100", profile, case)
+    true = ds.latency("V100", case)
+    assert abs(pred - true) / true < 0.8
+
+
+def test_feature_vector_stable_under_op_order(small):
+    ds, train, test, prophet = small
+    prof = ds.profile("T4", test[0])
+    x1 = prophet.features.transform(dict(prof))
+    x2 = prophet.features.transform(dict(reversed(list(prof.items()))))
+    np.testing.assert_allclose(x1, x2, rtol=1e-12)  # f64 sum-order slack

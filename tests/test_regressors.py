@@ -1,0 +1,73 @@
+"""The three base regressors + median ensemble (paper §III-C1)."""
+import numpy as np
+import pytest
+
+from repro.core.ensemble import MedianEnsemble, mape, r2, rmse
+from repro.core.regressors import (DNNRegressor, LinearRegressor,
+                                   RandomForestRegressor)
+
+
+def _linear_data(n=200, d=5, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    w = rng.normal(size=d)
+    y = X @ w + 3.0 + noise * rng.normal(size=n)
+    return X, y, w
+
+
+def test_linear_exact_recovery():
+    X, y, w = _linear_data()
+    m = LinearRegressor().fit(X, y)
+    np.testing.assert_allclose(m.coef_[:-1], w, atol=1e-6)
+    np.testing.assert_allclose(m.coef_[-1], 3.0, atol=1e-6)
+    np.testing.assert_allclose(m.predict(X), y, atol=1e-6)
+
+
+def test_forest_fits_nonlinear():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, size=(400, 2))
+    y = np.sin(X[:, 0] * 2) + np.abs(X[:, 1])
+    m = RandomForestRegressor(n_estimators=30, seed=0).fit(X, y)
+    assert r2(y, m.predict(X)) > 0.9
+
+
+def test_forest_deterministic_given_seed():
+    X, y, _ = _linear_data(noise=0.1)
+    p1 = RandomForestRegressor(n_estimators=10, seed=7).fit(X, y).predict(X)
+    p2 = RandomForestRegressor(n_estimators=10, seed=7).fit(X, y).predict(X)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_dnn_fits_linear_well():
+    X, y, _ = _linear_data(n=300)
+    m = DNNRegressor(epochs=150, seed=0).fit(X, y)
+    assert mape(y, m.predict(X)) < 25.0
+
+
+def test_dnn_architecture_is_papers():
+    assert DNNRegressor.LAYERS == (128, 64, 32, 16, 1)
+
+
+def test_median_ensemble_takes_median():
+    X, y, _ = _linear_data(noise=0.05)
+    ens = MedianEnsemble(seed=0, dnn_epochs=30, n_trees=10).fit(X, y)
+    members = ens.predict_members(X)
+    stacked = np.stack(list(members.values()))
+    np.testing.assert_allclose(ens.predict(X), np.median(stacked, axis=0))
+
+
+def test_member_selection_counts_sum_to_n():
+    X, y, _ = _linear_data(n=100, noise=0.1)
+    ens = MedianEnsemble(seed=0, dnn_epochs=20, n_trees=5).fit(X, y)
+    counts = ens.member_selection_counts(X)
+    assert sum(counts.values()) == len(X)
+    assert set(counts) == {"linear", "forest", "dnn"}
+
+
+def test_metrics():
+    y = np.array([1.0, 2.0, 4.0])
+    p = np.array([1.1, 1.8, 4.4])
+    assert mape(y, p) == pytest.approx(100 * np.mean([.1, .1, .1]))
+    assert rmse(y, y) == 0.0
+    assert r2(y, y) == 1.0
+    assert r2(y, np.full(3, y.mean())) == pytest.approx(0.0)

@@ -1,0 +1,83 @@
+"""Batch/pixel scaling predictor (paper §III-C2): min-max + order-2 poly."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scaling import PolyScaler
+
+KNOBS = np.array([16, 32, 64, 128, 256], float)
+
+
+def _series(a2, a1, a0):
+    """Latency series that IS a quadratic in the normalized knob."""
+    xn = (KNOBS - 16) / (256 - 16)
+    return a2 * xn ** 2 + a1 * xn + a0
+
+
+def test_recovers_quadratic_exactly():
+    lat = _series(2.0, 1.0, 5.0)  # min=5, max=8
+    sc = PolyScaler(order=2, min_knob=16, max_knob=256).fit(
+        KNOBS, lat, np.zeros(len(KNOBS)))
+    pred = sc.predict(KNOBS, t_min=lat[0], t_max=lat[-1])
+    np.testing.assert_allclose(pred, lat, rtol=1e-10)
+
+
+def test_eq1_denormalization_endpoints():
+    """T_O(min_knob) == T_O(min), T_O(max_knob) == T_O(max) by construction
+    when the fit is exact."""
+    lat = _series(0.5, 0.5, 10.0)
+    sc = PolyScaler(order=2, min_knob=16, max_knob=256).fit(
+        KNOBS, lat, np.zeros(len(KNOBS)))
+    assert sc.predict(16, 100.0, 300.0) == pytest.approx(100.0, abs=1e-9)
+    assert sc.predict(256, 100.0, 300.0) == pytest.approx(300.0, abs=1e-9)
+
+
+def test_multiple_groups_normalized_independently():
+    """Two series with very different absolute scale but the same normalized
+    shape must produce an exact shared fit."""
+    shape = _series(1.0, 0.0, 0.0)           # normalized 0..1 shape
+    lat_a = 10.0 + 50.0 * shape
+    lat_b = 1000.0 + 9000.0 * shape
+    knobs = np.concatenate([KNOBS, KNOBS])
+    lats = np.concatenate([lat_a, lat_b])
+    groups = np.array(["a"] * 5 + ["b"] * 5)
+    sc = PolyScaler(order=2, min_knob=16, max_knob=256).fit(knobs, lats, groups)
+    np.testing.assert_allclose(
+        sc.predict(KNOBS, lat_a[0], lat_a[-1]), lat_a, rtol=1e-8)
+    np.testing.assert_allclose(
+        sc.predict(KNOBS, lat_b[0], lat_b[-1]), lat_b, rtol=1e-8)
+
+
+def test_order1_worse_than_order2_on_curved_data():
+    """Fig 12's point: a curved latency profile needs the order-2 model."""
+    lat = _series(3.0, 0.2, 1.0)  # strongly curved
+    groups = np.zeros(len(KNOBS))
+    p2 = PolyScaler(order=2, min_knob=16, max_knob=256).fit(KNOBS, lat, groups)
+    p1 = PolyScaler(order=1, min_knob=16, max_knob=256).fit(KNOBS, lat, groups)
+    e2 = np.abs(p2.predict(KNOBS, lat[0], lat[-1]) - lat).max()
+    e1 = np.abs(p1.predict(KNOBS, lat[0], lat[-1]) - lat).max()
+    assert e2 < e1
+
+
+def test_groups_missing_extremes_are_skipped():
+    knobs = np.array([32, 64, 128], float)  # no 16/256 -> unusable group
+    lat = np.array([1.0, 2.0, 3.0])
+    ok = _series(1.0, 0.0, 0.0)
+    sc = PolyScaler(order=2, min_knob=16, max_knob=256).fit(
+        np.concatenate([knobs, KNOBS]), np.concatenate([lat, ok]),
+        np.array(["bad"] * 3 + ["good"] * 5))
+    assert sc.coef is not None  # fit succeeded using the good group
+
+
+@given(st.floats(-3, 3), st.floats(-3, 3), st.floats(0.1, 100))
+@settings(max_examples=50, deadline=None)
+def test_property_exact_quadratics_always_recovered(a2, a1, a0):
+    lat = _series(a2, a1, a0)
+    # the scaler requires a non-flat series (min_range filter)
+    if lat[-1] - lat[0] <= 0.05 * abs(lat[0]):
+        return
+    sc = PolyScaler(order=2, min_knob=16, max_knob=256).fit(
+        KNOBS, lat, np.zeros(len(KNOBS)))
+    pred = sc.predict(KNOBS, lat[0], lat[-1])
+    np.testing.assert_allclose(pred, lat, rtol=1e-6, atol=1e-8)

@@ -1,0 +1,153 @@
+"""Sharding rule tables, fit_spec divisibility, HLO analyzer, engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import hlo as HLO
+from repro.distributed import sharding as SH
+from repro.launch.mesh import data_axis_size, make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_rules(mesh):
+    assert SH.param_spec(("embed", "mlp"), mesh) == P("data", "model")
+    assert SH.param_spec(("vocab", "embed"), mesh) == P("model", "data")
+    assert SH.param_spec(("layers", "embed", "heads", "head_dim"), mesh) == \
+        P(None, "data", "model")
+
+
+def test_act_rules_pod_axis_collapses(mesh):
+    # mesh has no 'pod' axis -> batch maps to just 'data'
+    assert SH.act_spec(("batch", "seq"), mesh) == P("data")
+
+
+def test_fit_spec_drops_nondivisible():
+    from jax.sharding import AbstractMesh
+    m = AbstractMesh((1, 2), ("data", "model"))
+    spec = P("model", None)
+    assert SH.fit_spec(spec, (6, 3), m) == P("model")   # 6 % 2 == 0 kept
+    assert SH.fit_spec(spec, (5, 3), m) == P()          # 5 % 2 != 0 dropped
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    out = SH.constrain(x, "batch", None)
+    np.testing.assert_array_equal(out, x)
+
+
+def test_validate_axes_catches_rank_mismatch():
+    params = {"w": jnp.zeros((2, 3))}
+    with pytest.raises(ValueError):
+        SH.validate_axes(params, {"w": ("embed",)})
+    SH.validate_axes(params, {"w": ("embed", "mlp")})  # ok
+
+
+def test_data_axis_size():
+    from jax.sharding import AbstractMesh
+    assert data_axis_size(AbstractMesh((2, 2), ("data", "model"))) == 2
+    assert data_axis_size(
+        AbstractMesh((2, 2, 1), ("pod", "data", "model"))) == 4
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+_TOY_HLO = """
+HloModule toy
+
+%body (p: (f32[8,8])) -> (f32[8,8]) {
+  %p = (f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p), index=0
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (f32[8,8]) tuple(%d)
+}
+
+%cond (p: (f32[8,8])) -> pred[] {
+  %p = (f32[8,8]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %w = (f32[8,8]) tuple(%a)
+  %l = (f32[8,8]) while(%w), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %g = f32[8,8] get-tuple-element(%l), index=0
+  ROOT %ar = f32[8,8] all-reduce(%g), replica_groups=[4,8]<=[32], to_apply=%body
+}
+"""
+
+
+def test_hlo_trip_count_weighting():
+    s = HLO.analyze(_TOY_HLO)
+    # dot inside the while: 2*8*8*8 flops x trip count 5
+    assert s.flops == pytest.approx(5 * 2 * 8 * 8 * 8)
+
+
+def test_hlo_collective_bytes_ring_allreduce():
+    s = HLO.analyze(_TOY_HLO)
+    n = 8  # group size from replica_groups=[4,8]
+    expect = 2 * (8 * 8 * 4) * (n - 1) / n
+    assert s.collective_bytes == pytest.approx(int(expect))
+    assert s.by_opcode["all-reduce"]["count"] == 1
+
+
+def test_hlo_real_compiled_module():
+    """Parse a real lowered module and sanity-check dot flops."""
+    def f(a, b):
+        return (a @ b).sum()
+
+    lowered = jax.jit(f).lower(jnp.zeros((64, 32)), jnp.zeros((32, 16)))
+    text = lowered.compile().as_text()
+    s = HLO.analyze(text)
+    assert s.flops >= 2 * 64 * 32 * 16  # at least the matmul
+    assert s.hbm_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_serves_all_requests():
+    from repro.configs import base as CB
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+
+    cfg = CB.get_config("llama3_2_1b", smoke=True)
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=2, max_len=64, mode="wave")
+    reqs = [eng.submit([1, 2, 3], max_new_tokens=4),
+            eng.submit([4, 5], max_new_tokens=6),
+            eng.submit([6], max_new_tokens=2)]
+    done = eng.run()
+    assert len(done) == 3
+    assert all(r.done for r in reqs)
+    assert len(reqs[0].output) == 4
+    assert len(reqs[1].output) == 6
+    assert len(reqs[2].output) == 2
+    assert eng.stats.waves == 2
+    assert eng.stats.generated_tokens == 12
+
+
+def test_engine_deterministic():
+    from repro.configs import base as CB
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+
+    cfg = CB.get_config("mamba2_130m", smoke=True)
+    params, _ = M.init(jax.random.PRNGKey(1), cfg)
+
+    def run_once():
+        eng = Engine(cfg, params, batch_slots=1, max_len=32)
+        r = eng.submit([3, 1, 4, 1, 5], max_new_tokens=6)
+        eng.run()
+        return r.output
+
+    assert run_once() == run_once()

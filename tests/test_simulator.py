@@ -1,0 +1,87 @@
+"""Measurement-plane simulator invariants (the paper's Fig-2 phenomena)."""
+import numpy as np
+import pytest
+
+from repro.core import cnn_zoo, simulator, workloads
+from repro.core.devices import CATALOG, PAPER_DEVICES
+
+
+def test_deterministic():
+    a = simulator.measure("T4", "VGG16", 32, 64)
+    b = simulator.measure("T4", "VGG16", 32, 64)
+    assert a.latency_ms == b.latency_ms
+    assert a.profile == b.profile
+
+
+def test_profiling_overhead_20_to_30_percent():
+    """§III-A: profiling-enabled runs are 20-30% slower than the clean Y."""
+    m = simulator.measure("V100", "ResNet50", 64, 64)
+    ratio = sum(m.profile.values()) / m.latency_ms
+    assert 1.10 < ratio < 1.45  # 1.2-1.3 profiling factor x run noise
+
+
+def test_latency_monotone_in_batch():
+    lats = [simulator.measure("T4", "AlexNet", b, 64).latency_ms
+            for b in (16, 64, 256)]
+    assert lats[0] < lats[1] < lats[2]
+
+
+def test_nonlinear_batch_scaling_fig2c():
+    """Fig 2c: on V100 a 16x batch increase costs far less than 16x for a
+    small model (occupancy saturation), while a saturated workload scales
+    nearly linearly."""
+    small = [simulator.measure("V100", "MobileNetV2", b, 32).latency_ms
+             for b in (16, 256)]
+    big = [simulator.measure("T4", "VGG13", b, 128).latency_ms
+           for b in (16, 256)]
+    assert small[1] / small[0] < 6.0       # far sub-linear
+    assert big[1] / big[0] > 8.0           # near-linear
+
+
+def test_instance_spread_fig2a():
+    """Fig 2a's two phenomena: (1) the best instance FLIPS with the workload
+    (T4/g4dn wins small models, V100/p3 wins big ones), (2) the best/worst
+    spread is large for heavy workloads."""
+    small = {d: simulator.measure(d, "LeNet5", 16, 32).latency_ms
+             for d in PAPER_DEVICES}
+    big = {d: simulator.measure(d, "AlexNet", 256, 224).latency_ms
+           for d in PAPER_DEVICES}
+    assert min(small, key=small.get) == "T4"
+    assert min(big, key=big.get) == "V100"
+    assert max(big.values()) / min(big.values()) > 3.0
+
+
+def test_feasibility_filters_oom():
+    dev = CATALOG["M60"]  # 8 GB
+    assert simulator.feasible(dev, "LeNet5", 16, 32)
+    assert not simulator.feasible(dev, "VGG19", 256, 256)
+
+
+def test_workload_grid_properties():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet"),
+                            batches=(16, 256), pixels=(32, 64))
+    assert ds.devices == ("T4", "V100")
+    assert 0 < len(ds.cases) <= 8
+    for d in ds.devices:
+        for c in ds.cases:
+            assert ds.latency(d, c) > 0
+            assert len(ds.profile(d, c)) > 3
+
+
+def test_split_by_model_holds_out_families():
+    cases = [(m, b, 32) for m in ("A", "B", "C", "D", "E")
+             for b in (16, 32)]
+    train, test = workloads.split_cases(cases, test_frac=0.2, seed=0,
+                                        by_model=True)
+    train_models = {c[0] for c in train}
+    test_models = {c[0] for c in test}
+    assert not (train_models & test_models)
+    assert len(train) + len(test) == len(cases)
+
+
+def test_op_names_are_tf_style():
+    names = {op.name for op in cnn_zoo.build_ops("MobileNetV2", 16, 32)}
+    assert "DepthwiseConv2dNative" in names
+    assert "Relu6" in names
+    assert "Conv2DBackpropFilter" in names
