@@ -5,6 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core.devices import PAPER_DEVICES
 from repro.core.ensemble import mape
 
@@ -12,34 +13,35 @@ from repro.core.ensemble import mape
 def run() -> dict:
     ds = common.dataset().subset(PAPER_DEVICES)
     train, test = common.split()
-    prophet = common.paper_profet()
+    oracle = common.paper_oracle()
 
     mid_batches = (32, 64, 128)
     true_mode = {b: [] for b in mid_batches}
     pred_mode = {b: [] for b in mid_batches}
 
-    have = {c for c in ds.cases}
     anchor = "T4"
     for (m, b, p) in test:
         if b not in mid_batches:
             continue
-        lo_case, hi_case = (m, 16, p), (m, 256, p)
-        if lo_case not in have or hi_case not in have:
+        w = api.Workload(m, b, p)
+        pair = oracle.minmax_cases(w, api.KNOB_BATCH, anchor)
+        if pair is None:
             continue  # min/max config infeasible for this (model, pixel)
+        lo_case, hi_case = pair
         for gt in PAPER_DEVICES:
             truth = ds.latency(gt, (m, b, p))
             # (a) true min/max measured on the target
-            t_lo = ds.latency(gt, lo_case)
-            t_hi = ds.latency(gt, hi_case)
-            pa = prophet.predict_knob(gt, "batch", b, t_lo, t_hi)
-            true_mode[b].append((truth, float(pa)))
-            # (b) min/max predicted from the anchor profile
+            pa = oracle.interpolate(gt, api.KNOB_BATCH, b,
+                                    ds.latency(gt, lo_case),
+                                    ds.latency(gt, hi_case))
+            true_mode[b].append((truth, pa))
+            # (b) min/max predicted from the anchor profile (the oracle
+            # chooses the min/max anchor configs itself)
             if gt != anchor:
-                pb = prophet.predict_two_phase(
-                    anchor, gt, "batch", b,
-                    ds.profile(anchor, lo_case), ds.profile(anchor, hi_case),
-                    case_min=lo_case, case_max=hi_case)
-                pred_mode[b].append((truth, float(pb)))
+                r = oracle.predict(api.PredictRequest(
+                    anchor, gt, w, mode=api.MODE_TWO_PHASE,
+                    knob=api.KNOB_BATCH))
+                pred_mode[b].append((truth, r.latency_ms))
 
     def tab(d):
         return {b: {"mape": mape(*map(np.array, zip(*v))),

@@ -15,10 +15,11 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core import workloads
 from repro.core.devices import PAPER_DEVICES
 from repro.core.ensemble import mape
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.predictor import ProfetConfig
 
 # models whose profiles contain op names unique to them in OUR zoo:
 # MobileNetV2 (Relu6*, DepthwiseConv2dNative*), AlexNet (LRN*), LeNet5
@@ -40,16 +41,19 @@ def _holdout_mape(ds, model_name, clustering, *, drift=False,
     test = [c for c in ds.cases if c[0] == model_name]
     kw = {} if max_height is None else {"max_height": max_height}
     cfg = ProfetConfig(clustering=clustering, dnn_epochs=80, seed=0, **kw)
-    prophet = Profet(cfg).fit(ds, train, anchors=(ANCHOR,), targets=TARGETS)
+    oracle = api.LatencyOracle.fit(ds, cfg, train, anchors=(ANCHOR,),
+                                   targets=TARGETS)
     errs = []
     for gt in TARGETS:
         for c in test:
             prof = dict(ds.profile(ANCHOR, c))
             if drift:
                 prof = {_DRIFT.get(k, k): v for k, v in prof.items()}
-            pred = prophet.predict_cross(ANCHOR, gt, prof, c)
+            r = oracle.predict(api.PredictRequest(
+                ANCHOR, gt, api.Workload.from_case(c), profile=prof,
+                mode=api.MODE_CROSS))
             true = ds.latency(gt, c)
-            errs.append(abs(pred - true) / true)
+            errs.append(abs(r.latency_ms - true) / true)
     return 100.0 * float(np.mean(errs))
 
 

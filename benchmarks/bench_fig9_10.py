@@ -13,7 +13,7 @@ from repro.core.regressors import LinearRegressor
 def run() -> dict:
     ds = common.dataset().subset(PAPER_DEVICES)
     train, test = common.split()
-    prophet = common.paper_profet()
+    oracle = common.paper_oracle()
 
     scatter = {}          # fig 9: per anchor, true/pred pairs over targets
     member_preds = {m: [] for m in ("linear", "forest", "dnn")}
@@ -26,8 +26,8 @@ def run() -> dict:
         for gt in PAPER_DEVICES:
             if ga == gt:
                 continue
-            ens = prophet.cross[(ga, gt)]
-            X = prophet._matrix(ds, ga, test)
+            ens = oracle.ensemble(ga, gt)
+            X = oracle.feature_matrix(ga, test)
             y = np.array([ds.latency(gt, c) for c in test])
             mp = ens.predict_members(X)
             pred = np.median(np.stack(list(mp.values())), axis=0)

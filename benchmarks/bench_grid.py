@@ -1,0 +1,110 @@
+"""``predict_grid`` vectorization speedup: the advisor's hot path.
+
+Baseline = the pre-``repro.api`` call pattern: one ``predict`` (one
+``MedianEnsemble.predict`` on a (1, D) row) per grid cell per target.
+Vectorized = one ``GridRequest``: a single feature matrix and ONE ensemble
+call per (anchor, target) pair. Both run the same fitted oracle; results
+must agree to float tolerance. Acceptance floor: >= 5x.
+
+    PYTHONPATH=src python -m benchmarks.bench_grid           # full
+    PYTHONPATH=src python -m benchmarks.bench_grid --smoke   # ~5 s CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+
+TARGET_SPEEDUP = 5.0
+
+
+def _fit_oracle(smoke: bool) -> api.LatencyOracle:
+    if smoke:
+        ds = workloads.generate(devices=("T4", "V100"),
+                                models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(members=("linear", "forest"), n_trees=30, seed=0)
+    else:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60"),
+            models=("LeNet5", "AlexNet", "ResNet18", "VGG11", "ResNet50",
+                    "MobileNetV2"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=60, seed=0)
+    return api.LatencyOracle.fit(ds, anchors=("T4",), config=cfg)
+
+
+def _loop_baseline(oracle: api.LatencyOracle, req: api.GridRequest):
+    """Per-cell prediction, exactly what callers hand-rolled before."""
+    out = np.full((len(req.targets), len(req.batches), len(req.pixels)),
+                  np.nan)
+    for i, target in enumerate(req.targets):
+        for j, b in enumerate(req.batches):
+            for k, p in enumerate(req.pixels):
+                try:
+                    r = oracle.predict(api.PredictRequest(
+                        req.anchor, target, api.Workload(req.model, b, p),
+                        mode=(api.MODE_AUTO if target == req.anchor
+                              else api.MODE_CROSS)))
+                except api.ApiError:
+                    continue
+                out[i, j, k] = r.latency_ms
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    req = api.GridRequest(
+        anchor="T4", model="ResNet18",
+        targets=("T4",) + oracle.targets_from("T4"),
+        batches=tuple(workloads.BATCHES), pixels=tuple(workloads.PIXELS))
+
+    # warm both paths once (jax dispatch caches, lazy tree packing)
+    grid = oracle.predict_grid(req)
+    loop = _loop_baseline(oracle, req)
+    # rtol floor: the DNN member is float32, and batched vs per-row matmul
+    # accumulate in different orders
+    np.testing.assert_allclose(grid.latency_ms, loop, rtol=1e-5,
+                               equal_nan=True)
+
+    reps = 3
+    t_loop = min(_timed(_loop_baseline, oracle, req, reps=reps))
+    t_grid = min(_timed(oracle.predict_grid, req, reps=reps))
+    n_cells = int(np.isfinite(grid.latency_ms).sum())
+    speedup = t_loop / t_grid
+    out = {"smoke": smoke, "n_cells": n_cells,
+           "loop_ms": 1e3 * t_loop, "grid_ms": 1e3 * t_grid,
+           "speedup": speedup, "target_speedup": TARGET_SPEEDUP}
+    from benchmarks import common
+    common.save("grid", out)
+    return {"n_cells": n_cells, "loop_ms": out["loop_ms"],
+            "grid_ms": out["grid_ms"], "speedup": speedup}
+
+
+def _timed(fn, *args, reps: int):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    r = run(smoke=smoke)
+    print(f"predict_grid: {r['n_cells']} cells  "
+          f"loop {r['loop_ms']:.1f} ms  grid {r['grid_ms']:.1f} ms  "
+          f"speedup {r['speedup']:.1f}x (target >= {TARGET_SPEEDUP:.0f}x)")
+    if r["speedup"] < TARGET_SPEEDUP:
+        print("FAIL: vectorized grid prediction under the speedup floor")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core.devices import PAPER_DEVICES
 from repro.core.regressors import DNNRegressor, RandomForestRegressor
 
@@ -24,14 +25,14 @@ def _base_case(have, m, p):
     return (m, BASE_B, p) if (m, BASE_B, p) in have else None
 
 
-def _joint_xy(ds, prophet, cases, have):
+def _joint_xy(ds, oracle, cases, have):
     X, y = [], []
     dev_index = {d: i for i, d in enumerate(PAPER_DEVICES)}
     for (m, b, p) in cases:
         base = _base_case(have, m, p)
         if base is None:
             continue
-        feats = prophet.features.transform(ds.profile(ANCHOR, base))
+        feats = oracle.features.transform(ds.profile(ANCHOR, base))
         for gt in PAPER_DEVICES:
             if gt == ANCHOR:
                 continue
@@ -45,11 +46,11 @@ def _joint_xy(ds, prophet, cases, have):
 def run() -> dict:
     ds = common.dataset().subset(PAPER_DEVICES)
     train, test = common.split()
-    prophet = common.paper_profet()
+    oracle = common.paper_oracle()
     have = set(ds.cases)
 
-    Xtr, ytr = _joint_xy(ds, prophet, train, have)
-    Xte, yte = _joint_xy(ds, prophet, test, have)
+    Xtr, ytr = _joint_xy(ds, oracle, train, have)
+    Xte, yte = _joint_xy(ds, oracle, test, have)
 
     joint = {}
     rf = RandomForestRegressor(n_estimators=60, seed=0).fit(Xtr, ytr)
@@ -58,27 +59,27 @@ def run() -> dict:
     joint["DNN"] = common.metrics(yte, dnn.predict(Xte))
 
     # separate modeling (PROFET two-phase) on the same prediction task, one
-    # column per phase-1 regressor family (the paper's RF/DNN columns)
-    from repro.core.predictor import Profet, ProfetConfig
+    # column per phase-1 regressor family (the paper's RF/DNN columns). The
+    # oracle picks the min/max anchor configs itself.
+    from repro.core.predictor import ProfetConfig
     separate = {}
     for col, member in (("RandomForest", "forest"), ("DNN", "dnn")):
-        p1 = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS,
-                                 members=(member,))).fit(
-            ds, train, anchors=(ANCHOR,), targets=PAPER_DEVICES)
+        o1 = api.LatencyOracle.fit(
+            ds, ProfetConfig(dnn_epochs=common.DNN_EPOCHS, members=(member,)),
+            train, anchors=(ANCHOR,), targets=PAPER_DEVICES)
         sep_true, sep_pred = [], []
         for (m, b, p) in test:
-            lo_case, hi_case = (m, 16, p), (m, 256, p)
-            if lo_case not in have or hi_case not in have:
+            w = api.Workload(m, b, p)
+            if o1.minmax_cases(w, api.KNOB_BATCH, ANCHOR) is None:
                 continue
             for gt in PAPER_DEVICES:
                 if gt == ANCHOR:
                     continue
-                pred = p1.predict_two_phase(
-                    ANCHOR, gt, "batch", b,
-                    ds.profile(ANCHOR, lo_case), ds.profile(ANCHOR, hi_case),
-                    case_min=lo_case, case_max=hi_case)
+                r = o1.predict(api.PredictRequest(
+                    ANCHOR, gt, w, mode=api.MODE_TWO_PHASE,
+                    knob=api.KNOB_BATCH))
                 sep_true.append(ds.latency(gt, (m, b, p)))
-                sep_pred.append(float(pred))
+                sep_pred.append(r.latency_ms)
         separate[col] = common.metrics(np.array(sep_true),
                                        np.array(sep_pred))
 

@@ -13,7 +13,7 @@ from repro.core.ensemble import mape, r2, rmse
 def run() -> dict:
     ds = common.dataset().subset(PAPER_DEVICES)
     train, test = common.split()
-    prophet = common.paper_profet()
+    oracle = common.paper_oracle()
 
     # ---- Table III: vs Paleo on the common models (AlexNet, VGG16) ----
     pa = baselines.PaleoModel()
@@ -29,8 +29,7 @@ def run() -> dict:
         for ga in PAPER_DEVICES:
             if ga == gt:
                 continue
-            profet_t3_pred.append(prophet.predict_cross_many(
-                ga, gt, ds, t3_cases))
+            profet_t3_pred.append(oracle.predict_cases(ga, gt, t3_cases))
             profet_t3_true.append([ds.latency(gt, c) for c in t3_cases])
             break  # one anchor per target (the paper's protocol)
     tab3 = {"PALEO": common.metrics(t3_true, paleo_pred),
@@ -52,7 +51,7 @@ def run() -> dict:
         pf_pred, pf_true = [], []
         for gt in PAPER_DEVICES:
             ga = "T4" if gt != "T4" else "V100"
-            pf_pred.append(prophet.predict_cross_many(ga, gt, ds, cases_b))
+            pf_pred.append(oracle.predict_cases(ga, gt, cases_b))
             pf_true.append([ds.latency(gt, c) for c in cases_b])
         tab4[b] = {
             "MLPredict": {"mape": mape(true, ml_pred),
@@ -70,7 +69,7 @@ def run() -> dict:
         cases5 = [c for c in test if c[0] in t5_models]
         true = np.array([ds.latency(gt, c) for c in cases5])
         hb_pred = np.array([hb.predict(ga, gt, c) for c in cases5])
-        pf_pred = prophet.predict_cross_many(ga, gt, ds, cases5)
+        pf_pred = oracle.predict_cases(ga, gt, cases5)
         tab5[f"{ga}->{gt}"] = {"Habitat": mape(true, hb_pred),
                                "PROFET": mape(true, pf_pred)}
 

@@ -7,9 +7,10 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core.devices import PAPER_DEVICES, TPU_DEVICES, UNSEEN_DEVICES
 from repro.core.ensemble import mape
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.predictor import ProfetConfig
 
 
 def run() -> dict:
@@ -17,14 +18,15 @@ def run() -> dict:
     train, test = common.split()
 
     targets = UNSEEN_DEVICES + ("TPUv5e",)
-    prophet = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0)).fit(
-        ds, train, anchors=PAPER_DEVICES, targets=targets)
+    oracle = api.LatencyOracle.fit(
+        ds, ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0), train,
+        anchors=PAPER_DEVICES, targets=targets)
 
     tab6 = {}
     for gt in targets:
         tab6[gt] = {}
         for ga in PAPER_DEVICES:
-            pred = prophet.predict_cross_many(ga, gt, ds, test)
+            pred = oracle.predict_cases(ga, gt, test)
             true = np.array([ds.latency(gt, c) for c in test])
             tab6[gt][ga] = mape(true, pred)
 

@@ -13,9 +13,10 @@ import pathlib
 import numpy as np
 
 from benchmarks import common
+from repro import api
 from repro.core.devices import CATALOG, PAPER_DEVICES, TPU_DEVICES
 from repro.core.ensemble import mape
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.predictor import ProfetConfig
 
 DRYRUN = pathlib.Path("results/dryrun")
 
@@ -25,14 +26,15 @@ def run() -> dict:
     train, test = common.split()
 
     # ---- cross-chip prophet: TPU anchors <-> TPU targets ----
-    prophet = Profet(ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0)).fit(
-        ds, train, anchors=TPU_DEVICES + ("V100",), targets=TPU_DEVICES)
+    oracle = api.LatencyOracle.fit(
+        ds, ProfetConfig(dnn_epochs=common.DNN_EPOCHS, seed=0), train,
+        anchors=TPU_DEVICES + ("V100",), targets=TPU_DEVICES)
     cross = {}
     for ga in TPU_DEVICES + ("V100",):
         for gt in TPU_DEVICES:
             if ga == gt:
                 continue
-            pred = prophet.predict_cross_many(ga, gt, ds, test)
+            pred = oracle.predict_cases(ga, gt, test)
             true = np.array([ds.latency(gt, c) for c in test])
             cross[f"{ga}->{gt}"] = mape(true, pred)
 

@@ -11,10 +11,11 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro import api
 from repro.core import workloads
 from repro.core.devices import PAPER_DEVICES, TPU_DEVICES, UNSEEN_DEVICES
 from repro.core.ensemble import mape, r2, rmse
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.predictor import ProfetConfig
 
 OUT = pathlib.Path("results/bench")
 CACHE = pathlib.Path("results/bench/_cache")
@@ -41,18 +42,17 @@ def split() -> Tuple[list, list]:
     return workloads.split_cases(ds.cases, test_frac=0.2, seed=SEED)
 
 
-def paper_profet() -> Profet:
-    """PROFET fit on the paper's four instances (train split only)."""
-    f = CACHE / "profet_paper.pkl"
-    if f.exists():
-        with open(f, "rb") as fh:
-            return pickle.load(fh)
-    ds = dataset().subset(PAPER_DEVICES)
-    train, _ = split()
-    p = Profet(ProfetConfig(dnn_epochs=DNN_EPOCHS, seed=SEED)).fit(ds, train)
-    with open(f, "wb") as fh:
-        pickle.dump(p, fh)
-    return p
+def paper_oracle() -> api.LatencyOracle:
+    """Oracle fit on the paper's four instances (train split only), cached
+    through the versioned artifact store (stale configs refit, not reused)."""
+    cfg = ProfetConfig(dnn_epochs=DNN_EPOCHS, seed=SEED)
+
+    def fit():
+        ds = dataset().subset(PAPER_DEVICES)
+        train, _ = split()
+        return api.LatencyOracle.fit(ds, cfg, train)
+
+    return api.fit_or_load(CACHE / "oracle_paper.pkl", cfg, fit_fn=fit)
 
 
 def metrics(y_true, y_pred) -> Dict[str, float]:

@@ -4,47 +4,45 @@ The paper's end-to-end scenario (Fig 3 + the serverless demo of §IV): a
 client profiles a CNN training workload ONCE on the instance they already
 have, and PROFET predicts latency + cost on every other instance in the
 catalog — including devices newer than anything in the training set
-(Table VI) and TPU chips (beyond paper).
+(Table VI) and TPU chips (beyond paper). All prediction goes through the
+``repro.api`` facade: one ``advise`` call replaces the per-device
+``predict_cross`` loop.
 
     PYTHONPATH=src python examples/advisor.py
 """
-import numpy as np
-
+from repro import api
 from repro.core import simulator, workloads
-from repro.core.devices import CATALOG, PAPER_DEVICES, TPU_DEVICES, UNSEEN_DEVICES
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.devices import PAPER_DEVICES, UNSEEN_DEVICES
+from repro.core.predictor import ProfetConfig
 
 ANCHOR = "T4"
-WORKLOAD = ("ResNet50", 64, 128)   # model, batch, pixels
+WORKLOAD = api.Workload("ResNet50", 64, 128)
 TRAIN_STEPS = 50_000
 
 
 def main():
     print(f"fitting PROFET on the offline grid (anchors={ANCHOR}) ...")
-    ds = workloads.generate()  # paper's 4 instances + unseen + TPU
-    train, _ = workloads.split_cases(ds.cases, test_frac=0.2, seed=0)
     targets = PAPER_DEVICES + UNSEEN_DEVICES + ("TPUv5e",)
-    prophet = Profet(ProfetConfig(dnn_epochs=100)).fit(
-        ds, train, anchors=(ANCHOR,), targets=targets)
+    # the seed version called generate() with its 4-device default and then
+    # KeyError'd on the unseen targets — the grid must cover every target
+    ds = workloads.generate(devices=targets)
+    train, _ = workloads.split_cases(ds.cases, test_frac=0.2, seed=0)
+    oracle = api.LatencyOracle.fit(ds, ProfetConfig(dnn_epochs=100), train,
+                                   anchors=(ANCHOR,), targets=targets)
 
-    meas = simulator.measure(ANCHOR, *WORKLOAD)
-    print(f"\nworkload {WORKLOAD} profiled on {ANCHOR}: "
+    meas = simulator.measure(ANCHOR, *WORKLOAD.case)
+    print(f"\nworkload {WORKLOAD.case} profiled on {ANCHOR}: "
           f"{meas.latency_ms:.1f} ms/batch\n")
     print(f"{'device':8s} {'ms/batch':>9s} {'$/hr':>7s} "
           f"{'$/{:,} steps'.format(TRAIN_STEPS):>15s}")
-    rows = []
-    for name in targets:
-        if name == ANCHOR:
-            lat = meas.latency_ms
-        else:
-            lat = prophet.predict_cross(ANCHOR, name, meas.profile, WORKLOAD)
-        cost = lat / 1e3 / 3600 * TRAIN_STEPS * CATALOG[name].price_hr
-        rows.append((name, lat, cost))
-        print(f"{name:8s} {lat:9.1f} {CATALOG[name].price_hr:7.3f} "
-              f"{cost:15.3f}")
-    fastest = min(rows, key=lambda r: r[1])
-    cheapest = min(rows, key=lambda r: r[2])
-    print(f"\n-> fastest: {fastest[0]}  |  cheapest: {cheapest[0]}")
+    rows = oracle.advise(ANCHOR, WORKLOAD, profile=meas.profile,
+                         measured_ms=meas.latency_ms, targets=targets)
+    for r in rows:
+        print(f"{r.target:8s} {r.latency_ms:9.1f} {r.price_hr:7.3f} "
+              f"{r.cost_usd(TRAIN_STEPS):15.3f}")
+    fastest = min(rows, key=lambda r: r.latency_ms)
+    cheapest = min(rows, key=lambda r: r.cost_usd(TRAIN_STEPS))
+    print(f"\n-> fastest: {fastest.target}  |  cheapest: {cheapest.target}")
     print("(the anchor profile reveals only (op name, aggregated ms) rows —")
     print(" the client's model architecture stays private)")
 

@@ -2,16 +2,30 @@
 
 1. The FRAMEWORK: build an assigned architecture (reduced config), run a few
    training steps, decode a few tokens.
-2. The PAPER (PROFET): profile a CNN workload on an anchor device, predict
-   its latency on a device it never ran on.
+2. The PAPER (PROFET), through the public ``repro.api`` service layer. The
+   whole prediction surface is three calls:
+
+       oracle = api.LatencyOracle.fit(dataset, config)      # fit once
+       api.save(oracle, path)                               # persist (versioned)
+       api.load(path).predict(api.PredictRequest(...))      # query anywhere
+
+   ``PredictRequest`` routes itself: given an exact-case anchor profile it
+   runs phase-1 cross-instance prediction; without one it falls back to
+   two-phase min/max interpolation — callers never pick min/max configs or
+   thread raw tuples. ``predict_grid`` answers whole device x batch x pixel
+   sweeps with one vectorized ensemble call per device.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import pathlib
+import tempfile
+
 import jax
 
+from repro import api
 from repro.configs import base as CB
 from repro.core import simulator, workloads
-from repro.core.predictor import Profet, ProfetConfig
+from repro.core.predictor import ProfetConfig
 from repro.models import model as M
 from repro.serve.engine import Engine
 from repro.train.trainer import Trainer, TrainConfig
@@ -33,21 +47,29 @@ def framework_quickstart():
 
 
 def profet_quickstart():
-    print("=== PROFET: cross-instance latency prediction ===")
-    # offline phase (the cloud vendor's job): measure a small workload grid
+    print("=== PROFET: cross-instance latency prediction (repro.api) ===")
+    # offline phase (the cloud vendor's job): fit an oracle on a small
+    # workload grid and persist it through the versioned artifact store
     ds = workloads.generate(devices=("T4", "V100"),
                             models=("LeNet5", "AlexNet", "ResNet18", "VGG11"))
     train, test = workloads.split_cases(ds.cases, test_frac=0.2, seed=0)
-    prophet = Profet(ProfetConfig(dnn_epochs=60, n_trees=30)).fit(ds, train)
+    cfg = ProfetConfig(dnn_epochs=60, n_trees=30)
+    oracle = api.LatencyOracle.fit(ds, cfg, train)
+    path = pathlib.Path(tempfile.gettempdir()) / "profet_quickstart.pkl"
+    api.save(oracle, path)
 
-    # online phase (the client's job): profile ONCE on the anchor instance
-    case = test[0]
-    meas = simulator.measure("T4", *case)
-    pred = prophet.predict_cross("T4", "V100", meas.profile, case)
-    true = ds.latency("V100", case)
-    print(f"workload {case}: profiled on T4 ({meas.latency_ms:.1f} ms)")
-    print(f"predicted on V100: {pred:.1f} ms | actual: {true:.1f} ms "
-          f"({100*abs(pred-true)/true:.1f}% error)")
+    # online phase (the client's job): profile ONCE on the anchor instance,
+    # then query the stored oracle (fingerprint-checked against the config)
+    oracle = api.load(path, expect_config=cfg)
+    workload = api.Workload.from_case(test[0])
+    meas = simulator.measure("T4", *workload.case)
+    r = oracle.predict(api.PredictRequest("T4", "V100", workload,
+                                          profile=meas.profile))
+    true = ds.latency("V100", workload.case)
+    print(f"workload {workload.case}: profiled on T4 "
+          f"({meas.latency_ms:.1f} ms)")
+    print(f"predicted on V100: {r.latency_ms:.1f} ms | actual: {true:.1f} ms "
+          f"({100*abs(r.latency_ms-true)/true:.1f}% error)")
     print("(no model architecture was ever revealed — only op-name latency"
           " aggregates)")
 

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full test suite plus the predict_grid smoke benchmark
+# (which fails if the vectorized grid path drops under the 5x speedup floor
+# or diverges from the per-case loop).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.bench_grid --smoke

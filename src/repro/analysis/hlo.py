@@ -101,13 +101,18 @@ class Instr:
 
 
 def _parse_operands(rest: str) -> List[str]:
-    """Operand names from the call segment up to the closing paren."""
+    """Operand names from the call segment up to the closing paren.
+
+    Compiled HLO writes typed operands (``f32[64,32]{1,0} %Arg_0.1``), so
+    commas inside shape/layout brackets must not split, and the name is the
+    ``%``-token, not the first token.
+    """
     depth, ops, cur, i = 1, [], [], 0
     while i < len(rest) and depth > 0:
         ch = rest[i]
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
             if depth == 0:
                 break
@@ -122,11 +127,11 @@ def _parse_operands(rest: str) -> List[str]:
         ops.append("".join(cur).strip())
     out = []
     for o in ops:
-        o = o.strip()
-        if o.startswith("%"):
-            o = o[1:]
-        if o:
-            out.append(o.split(" ")[0])
+        toks = o.strip().split()
+        if not toks:
+            continue
+        name = next((t for t in reversed(toks) if t.startswith("%")), toks[0])
+        out.append(name.lstrip("%"))
     return out
 
 

@@ -1,0 +1,35 @@
+"""``repro.api`` — the public prediction-service layer over PROFET.
+
+The three-call flow every consumer (advisor CLI, examples, benchmarks,
+future serving layer) goes through:
+
+    from repro import api
+
+    oracle = api.LatencyOracle.fit(dataset, config)          # 1. fit
+    api.save(oracle, "results/oracle.pkl")                   # 2. persist
+    oracle = api.load("results/oracle.pkl", expect_config=config)
+    r = oracle.predict(api.PredictRequest(                   # 3. query
+            anchor="T4", target="V100",
+            workload=api.Workload("ResNet50", 64, 128)))
+    r.latency_ms, r.cost_usd(steps=50_000)
+
+See ``src/repro/api/README.md`` for the full surface.
+"""
+from repro.api.artifacts import (ArtifactError, FingerprintMismatchError,
+                                 SchemaVersionError, config_fingerprint,
+                                 fit_or_load, load, save)
+from repro.api.oracle import LatencyOracle
+from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
+                             MODE_MEASURED, MODE_TWO_PHASE, ApiError,
+                             GridRequest, GridResult, PredictRequest,
+                             PredictResult, UnknownDeviceError,
+                             UnsupportedRequestError, Workload)
+
+__all__ = [
+    "ApiError", "ArtifactError", "FingerprintMismatchError",
+    "GridRequest", "GridResult", "KNOB_BATCH", "KNOB_PIXEL",
+    "LatencyOracle", "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED",
+    "MODE_TWO_PHASE", "PredictRequest", "PredictResult",
+    "SchemaVersionError", "UnknownDeviceError", "UnsupportedRequestError",
+    "Workload", "config_fingerprint", "fit_or_load", "load", "save",
+]

@@ -1,0 +1,113 @@
+"""Versioned on-disk artifacts for fitted oracles.
+
+Replaces the ad-hoc ``pickle.dump((profet, ds))`` caches: every artifact is
+an envelope carrying a schema version and a :class:`ProfetConfig`
+fingerprint, so a cache written under different settings (``dnn_epochs``,
+``seed``, member set, ...) is rejected instead of silently reused — the
+stale-cache bug the old ``launch/profet_advise.py`` pickle had.
+
+    from repro import api
+    api.save(oracle, "results/oracle.pkl")
+    oracle = api.load("results/oracle.pkl", expect_config=cfg)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import pickle
+from typing import Optional, Union
+
+from repro.core.predictor import ProfetConfig
+from repro.api.oracle import LatencyOracle
+from repro.api.types import ApiError
+
+SCHEMA_VERSION = 1
+MAGIC = "profet-oracle"
+
+
+class ArtifactError(ApiError):
+    """Artifact missing, malformed, or incompatible with this code."""
+
+
+class SchemaVersionError(ArtifactError):
+    """Artifact written by an incompatible schema version."""
+
+
+class FingerprintMismatchError(ArtifactError):
+    """Artifact was fit under a different ProfetConfig than expected."""
+
+
+def config_fingerprint(config: ProfetConfig) -> str:
+    """Stable digest over every config field (member set, epochs, seed, ...)."""
+    payload = json.dumps(dataclasses.asdict(config), sort_keys=True,
+                         default=str)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def save(oracle: LatencyOracle, path: Union[str, pathlib.Path]) -> dict:
+    """Write the oracle under a versioned envelope; returns the manifest."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "magic": MAGIC,
+        "schema_version": SCHEMA_VERSION,
+        "fingerprint": config_fingerprint(oracle.config),
+        "config": dataclasses.asdict(oracle.config),
+        "devices": list(oracle.dataset.devices),
+        "n_cases": len(oracle.dataset.cases),
+        "pairs": [list(p) for p in oracle.pairs()],
+    }
+    with open(path, "wb") as f:
+        pickle.dump({**manifest,
+                     "payload": (oracle.profet, oracle.dataset)}, f)
+    return manifest
+
+
+def load(path: Union[str, pathlib.Path],
+         expect_config: Optional[ProfetConfig] = None) -> LatencyOracle:
+    """Load an oracle, validating the envelope.
+
+    ``expect_config`` (when given) must fingerprint-match the stored config;
+    a mismatch raises :class:`FingerprintMismatchError` — callers treat that
+    as a cache miss and refit.
+    """
+    path = pathlib.Path(path)
+    if not path.exists():
+        raise ArtifactError(f"no artifact at {path}")
+    try:
+        with open(path, "rb") as f:
+            env = pickle.load(f)
+    except Exception as e:
+        raise ArtifactError(f"unreadable artifact {path}: {e}") from e
+    if not isinstance(env, dict) or env.get("magic") != MAGIC:
+        raise ArtifactError(
+            f"{path} is not a {MAGIC} artifact (legacy unversioned cache?)")
+    if env.get("schema_version") != SCHEMA_VERSION:
+        raise SchemaVersionError(
+            f"{path}: schema v{env.get('schema_version')} != "
+            f"supported v{SCHEMA_VERSION}")
+    if expect_config is not None:
+        want = config_fingerprint(expect_config)
+        if env.get("fingerprint") != want:
+            raise FingerprintMismatchError(
+                f"{path}: artifact config {env.get('fingerprint')} != "
+                f"expected {want} — refit required")
+    profet, dataset = env["payload"]
+    return LatencyOracle(profet, dataset)
+
+
+def fit_or_load(path: Union[str, pathlib.Path], config: ProfetConfig,
+                fit_fn=None, **fit_kwargs) -> LatencyOracle:
+    """Cache-through helper: load when the artifact matches ``config``,
+    otherwise (re)fit via ``fit_fn`` (default :meth:`LatencyOracle.fit`)
+    and overwrite the artifact."""
+    try:
+        return load(path, expect_config=config)
+    except ArtifactError:
+        pass
+    fit = fit_fn or (lambda: LatencyOracle.fit(config=config, **fit_kwargs))
+    oracle = fit()
+    save(oracle, path)
+    return oracle

@@ -1,0 +1,249 @@
+"""``LatencyOracle`` — the single public prediction facade.
+
+Wraps a fitted :class:`repro.core.predictor.Profet` and the offline
+:class:`repro.core.workloads.Dataset` it was fit on, and routes typed
+requests (``repro.api.types``) to the right internal path:
+
+  - ``measured``  target == anchor and the case is in the offline grid
+  - ``cross``     phase-1 cross-instance prediction from an exact-case profile
+  - ``two_phase`` phase-1 on the min/max knob configs (chosen by the oracle,
+                  not the caller) + phase-2 polynomial interpolation
+
+``predict_grid`` is the vectorized hot path: one feature matrix per request,
+one ``MedianEnsemble.predict`` call per (anchor, target) pair — not one per
+grid cell (see ``benchmarks/bench_grid.py`` for the measured speedup).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import devices as device_catalog
+from repro.core import workloads
+from repro.core.predictor import Profet, ProfetConfig
+from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
+                             MODE_MEASURED, MODE_TWO_PHASE, GridRequest,
+                             GridResult, PredictRequest, PredictResult,
+                             UnknownDeviceError, UnsupportedRequestError,
+                             Workload)
+
+
+def _price(name: str) -> float:
+    dev = device_catalog.CATALOG.get(name)
+    return dev.price_hr if dev is not None else float("nan")
+
+
+class LatencyOracle:
+    """Query-style interface over a fitted PROFET model + its dataset."""
+
+    def __init__(self, profet: Profet, dataset: workloads.Dataset):
+        self.profet = profet
+        self.dataset = dataset
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def fit(cls, dataset: Optional[workloads.Dataset] = None,
+            config: Optional[ProfetConfig] = None,
+            train_cases: Optional[Sequence] = None,
+            anchors: Optional[Sequence[str]] = None,
+            targets: Optional[Sequence[str]] = None) -> "LatencyOracle":
+        """Fit a fresh oracle; ``dataset=None`` generates the paper grid."""
+        ds = dataset if dataset is not None else workloads.generate()
+        profet = Profet(config or ProfetConfig()).fit(
+            ds, train_cases, anchors=anchors, targets=targets)
+        return cls(profet, ds)
+
+    # ------------------------------------------------------------------
+    # introspection (kept public so benchmarks never reach into Profet)
+    # ------------------------------------------------------------------
+    @property
+    def config(self) -> ProfetConfig:
+        return self.profet.cfg
+
+    @property
+    def features(self):
+        return self.profet.features
+
+    def pairs(self) -> List[Tuple[str, str]]:
+        """Trained (anchor, target) pairs."""
+        return sorted(self.profet.cross)
+
+    def targets_from(self, anchor: str) -> Tuple[str, ...]:
+        return tuple(t for (a, t) in self.pairs() if a == anchor)
+
+    def ensemble(self, anchor: str, target: str):
+        """The phase-1 ensemble of one pair (member-level benchmarks)."""
+        self._check_pair(anchor, target)
+        return self.profet.cross[(anchor, target)]
+
+    def feature_matrix(self, anchor: str, cases: Sequence) -> np.ndarray:
+        """Phase-1 feature matrix of dataset profiles taken on ``anchor``."""
+        return self.profet.feature_matrix(
+            [self.dataset.profile(anchor, c) for c in cases], cases)
+
+    # ------------------------------------------------------------------
+    # prediction
+    # ------------------------------------------------------------------
+    def predict(self, req: PredictRequest) -> PredictResult:
+        """Route one typed request (see module docstring for the modes)."""
+        w = req.workload
+        case = w.case
+        if req.anchor not in self.dataset.measurements:
+            raise UnknownDeviceError(
+                f"unknown anchor {req.anchor!r}; available: "
+                f"{', '.join(sorted(self.dataset.measurements))}")
+        measured = self.dataset.measurements[req.anchor]
+
+        if req.target == req.anchor:
+            if case not in measured:
+                raise UnsupportedRequestError(
+                    f"target == anchor {req.anchor!r} but case {case} was "
+                    "never measured on it")
+            return self._result(self.dataset.latency(req.anchor, case),
+                                req, MODE_MEASURED)
+
+        self._check_pair(req.anchor, req.target)
+        mode = req.mode
+        if mode == MODE_AUTO:
+            has_profile = req.profile is not None or case in measured
+            mode = MODE_CROSS if has_profile else MODE_TWO_PHASE
+
+        if mode == MODE_CROSS:
+            profile = req.profile
+            if profile is None:
+                if case not in measured:
+                    raise UnsupportedRequestError(
+                        f"mode=cross needs a profile of {case} on "
+                        f"{req.anchor!r} (not in the offline dataset and none "
+                        "was supplied)")
+                profile = self.dataset.profile(req.anchor, case)
+            lat = self.profet.predict_cross(req.anchor, req.target,
+                                            dict(profile), case)
+            return self._result(lat, req, MODE_CROSS)
+
+        if mode == MODE_TWO_PHASE:
+            lo, hi = self._minmax_or_raise(w, req.knob, req.anchor)
+            value = w.batch if req.knob == KNOB_BATCH else w.pix
+            lat = self.profet.predict_two_phase(
+                req.anchor, req.target, req.knob, value,
+                self.dataset.profile(req.anchor, lo),
+                self.dataset.profile(req.anchor, hi),
+                case_min=lo, case_max=hi)
+            return self._result(float(lat), req, MODE_TWO_PHASE)
+
+        raise UnsupportedRequestError(f"unknown mode {req.mode!r}")
+
+    def predict_cases(self, anchor: str, target: str,
+                      cases: Sequence) -> np.ndarray:
+        """Vectorized phase-1 over an explicit case list (one ensemble call);
+        profiles come from the oracle's dataset."""
+        self._check_pair(anchor, target)
+        return self.profet.predict_cross_matrix(
+            anchor, target, self.feature_matrix(anchor, cases))
+
+    def interpolate(self, target: str, knob: str, value,
+                    t_min: float, t_max: float) -> float:
+        """Phase 2 alone: knob interpolation from TRUE min/max latencies
+        (the paper's Fig-11a "True" mode)."""
+        return float(self.profet.predict_knob(target, knob, value,
+                                              t_min, t_max))
+
+    def predict_grid(self, req: GridRequest) -> GridResult:
+        """Vectorized sweep: ONE feature matrix for every feasible cell and
+        ONE ensemble call per target device."""
+        if req.anchor not in self.dataset.measurements:
+            raise UnknownDeviceError(
+                f"anchor {req.anchor!r} not in the oracle's dataset; "
+                f"available: {', '.join(sorted(self.dataset.measurements))}")
+        for target in req.targets:
+            if target != req.anchor:
+                self._check_pair(req.anchor, target)
+        measured = self.dataset.measurements[req.anchor]
+        cells = [(j, k, (req.model, b, p))
+                 for j, b in enumerate(req.batches)
+                 for k, p in enumerate(req.pixels)
+                 if (req.model, b, p) in measured]
+        out = np.full((len(req.targets), len(req.batches), len(req.pixels)),
+                      np.nan)
+        if cells:
+            cases = [c for _, _, c in cells]
+            X = self.feature_matrix(req.anchor, cases)
+            jj = np.array([j for j, _, _ in cells])
+            kk = np.array([k for _, k, _ in cells])
+            for i, target in enumerate(req.targets):
+                if target == req.anchor:
+                    lat = np.array([self.dataset.latency(req.anchor, c)
+                                    for c in cases])
+                else:
+                    lat = self.profet.predict_cross_matrix(req.anchor,
+                                                           target, X)
+                out[i, jj, kk] = lat
+        return GridResult(request=req, latency_ms=out)
+
+    # ------------------------------------------------------------------
+    # advisor
+    # ------------------------------------------------------------------
+    def advise(self, anchor: str, workload: Workload,
+               profile: Optional[Dict[str, float]] = None,
+               measured_ms: Optional[float] = None,
+               targets: Optional[Sequence[str]] = None) -> List[PredictResult]:
+        """Latency on every reachable target from one anchor profile (the
+        paper's Fig-3 scenario); price the rows via ``.cost_usd(steps)``.
+        The anchor's own row uses ``measured_ms`` when the client supplies
+        it."""
+        results = []
+        for target in (targets or (anchor,) + self.targets_from(anchor)):
+            if target == anchor and measured_ms is not None:
+                results.append(self._result(
+                    measured_ms,
+                    PredictRequest(anchor, target, workload), MODE_MEASURED))
+                continue
+            results.append(self.predict(PredictRequest(
+                anchor, target, workload, profile=profile)))
+        return results
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def minmax_cases(self, workload: Workload, knob: str,
+                     anchor: str) -> Optional[Tuple[tuple, tuple]]:
+        """The (lo, hi) anchor configs two-phase interpolation rests on:
+        the workload with its ``knob`` swung to the grid min/max. None if
+        either config was never measured on the anchor."""
+        m = workload.model
+        if knob == KNOB_BATCH:
+            lo = (m, min(workloads.BATCHES), workload.pix)
+            hi = (m, max(workloads.BATCHES), workload.pix)
+        elif knob == KNOB_PIXEL:
+            lo = (m, workload.batch, min(workloads.PIXELS))
+            hi = (m, workload.batch, max(workloads.PIXELS))
+        else:
+            raise UnsupportedRequestError(f"unknown knob {knob!r}")
+        measured = self.dataset.measurements.get(anchor, {})
+        if lo in measured and hi in measured:
+            return lo, hi
+        return None
+
+    def _minmax_or_raise(self, workload, knob, anchor):
+        pair = self.minmax_cases(workload, knob, anchor)
+        if pair is None:
+            raise UnsupportedRequestError(
+                f"two-phase needs the {knob} min/max configs of "
+                f"{workload.model} measured on {anchor!r}")
+        return pair
+
+    def _check_pair(self, anchor: str, target: str) -> None:
+        if (anchor, target) not in self.profet.cross:
+            trained = sorted({a for a, _ in self.profet.cross})
+            raise UnknownDeviceError(
+                f"no trained model for pair ({anchor!r} -> {target!r}); "
+                f"trained anchors: {', '.join(trained) or 'none'}")
+
+    @staticmethod
+    def _result(latency_ms, req: PredictRequest, mode: str) -> PredictResult:
+        return PredictResult(latency_ms=float(latency_ms), anchor=req.anchor,
+                             target=req.target, workload=req.workload,
+                             mode=mode, price_hr=_price(req.target))

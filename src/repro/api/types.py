@@ -1,0 +1,130 @@
+"""Typed request/response surface of the PROFET prediction service.
+
+Everything crossing the ``repro.api`` boundary is one of these frozen
+dataclasses: callers never hand-assemble ``(model, batch, pix)`` tuples or
+pick min/max anchor profiles themselves. Requests are plain data (JSON-able
+via ``dataclasses.asdict``) so they can travel through a serving layer
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Mapping, Optional, Tuple
+
+import numpy as np
+
+# Request modes (``PredictRequest.mode``)
+MODE_AUTO = "auto"            # cross if an exact-case profile exists, else two-phase
+MODE_CROSS = "cross"          # phase-1 only: profile of the exact case required
+MODE_TWO_PHASE = "two_phase"  # phase-1 min/max + phase-2 knob interpolation
+# Resolved modes additionally include:
+MODE_MEASURED = "measured"    # target == anchor and the case was measured
+
+KNOB_BATCH = "batch"
+KNOB_PIXEL = "pixel"
+
+
+class ApiError(Exception):
+    """Base class for every error raised at the ``repro.api`` boundary."""
+
+
+class UnknownDeviceError(ApiError, KeyError):
+    """Anchor/target name not in the oracle's trained pair set."""
+
+
+class UnsupportedRequestError(ApiError):
+    """The request cannot be routed: no profile for the case and no feasible
+    min/max anchor configs to interpolate from."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One CNN training configuration — the paper's (M, B, P) cell."""
+    model: str
+    batch: int
+    pix: int
+
+    @property
+    def case(self) -> Tuple[str, int, int]:
+        """The legacy ``(model, batch, pix)`` tuple used by ``repro.core``."""
+        return (self.model, self.batch, self.pix)
+
+    @classmethod
+    def from_case(cls, case: Tuple[str, int, int]) -> "Workload":
+        return cls(model=case[0], batch=int(case[1]), pix=int(case[2]))
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictRequest:
+    """Predict the latency of ``workload`` on ``target`` from anchor-side
+    information only.
+
+    ``profile`` is the client's op-name -> aggregated-ms profile measured on
+    ``anchor``; when omitted the oracle falls back to its offline dataset.
+    ``mode`` routes between phase-1 cross prediction and the two-phase
+    min/max interpolation (``knob`` chooses the interpolation axis).
+    """
+    anchor: str
+    target: str
+    workload: Workload
+    profile: Optional[Mapping[str, float]] = None
+    mode: str = MODE_AUTO
+    knob: str = KNOB_BATCH
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictResult:
+    """A prediction plus enough context to audit and price it."""
+    latency_ms: float
+    anchor: str
+    target: str
+    workload: Workload
+    mode: str                 # resolved: measured | cross | two_phase
+    price_hr: float
+
+    def cost_usd(self, steps: int) -> float:
+        """Cost of ``steps`` training steps at the predicted ms/batch."""
+        return self.latency_ms / 1e3 / 3600.0 * steps * self.price_hr
+
+
+@dataclasses.dataclass(frozen=True)
+class GridRequest:
+    """Sweep one model over targets x batches x pixels from one anchor —
+    the advisor's hot path, answered by vectorized phase-1 calls."""
+    anchor: str
+    model: str
+    targets: Tuple[str, ...]
+    batches: Tuple[int, ...]
+    pixels: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridResult:
+    """Dense latency grid; cells without an anchor profile (infeasible or
+    unmeasured configs) are NaN."""
+    request: GridRequest
+    latency_ms: np.ndarray    # (targets, batches, pixels)
+
+    def at(self, target: str, batch: int, pix: int) -> float:
+        r = self.request
+        return float(self.latency_ms[r.targets.index(target),
+                                     r.batches.index(batch),
+                                     r.pixels.index(pix)])
+
+    def rows(self) -> Iterator[Tuple[str, int, int, float]]:
+        """Iterate finite cells as (target, batch, pix, latency_ms)."""
+        r = self.request
+        for i, t in enumerate(r.targets):
+            for j, b in enumerate(r.batches):
+                for k, p in enumerate(r.pixels):
+                    v = float(self.latency_ms[i, j, k])
+                    if np.isfinite(v):
+                        yield t, b, p, v
+
+    def to_dict(self) -> Dict:
+        """JSON-serializable form for a serving layer. NaN cells become
+        None: bare NaN tokens are rejected by spec-compliant JSON parsers."""
+        lat = [[[v if np.isfinite(v) else None for v in row]
+                for row in plane] for plane in self.latency_ms.tolist()]
+        return {"request": dataclasses.asdict(self.request),
+                "latency_ms": lat}

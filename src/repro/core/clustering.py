@@ -152,15 +152,30 @@ class FeatureClustering:
                 best, best_d = ci, dmean
         return best if best_d <= self.max_height else None
 
+    def _name_index(self) -> Dict[str, int]:
+        """op name -> cluster id, built once and cached (transform is the
+        inner loop of feature-matrix construction). getattr-guarded so
+        instances unpickled from older artifacts still work."""
+        index = getattr(self, "_index_cache", None)
+        if index is None:
+            index = {self.names[i]: ci for ci, c in enumerate(self.clusters)
+                     for i in c}
+            self._index_cache = index
+        return index
+
     def transform(self, profile: Dict[str, float]) -> np.ndarray:
         """profile: {op_name: aggregated latency} -> cluster feature vector."""
         out = np.zeros(len(self.clusters), dtype=np.float64)
-        index = {self.names[i]: ci for ci, c in enumerate(self.clusters)
-                 for i in c}
+        index = self._name_index()
+        unseen = getattr(self, "_unseen_cache", None)
+        if unseen is None:
+            unseen = self._unseen_cache = {}
         for name, value in profile.items():
             ci = index.get(name)
             if ci is None:
-                ci = self._route_unseen(name)
+                if name not in unseen:
+                    unseen[name] = self._route_unseen(name)
+                ci = unseen[name]
             if ci is not None:
                 out[ci] += value
         return out

@@ -45,4 +45,8 @@ TPU_DEVICES = ("TPUv4", "TPUv5e", "TPUv5p")
 
 
 def get(name: str) -> Device:
-    return CATALOG[name]
+    try:
+        return CATALOG[name]
+    except KeyError:
+        raise KeyError(f"unknown device {name!r}; available: "
+                       f"{', '.join(sorted(CATALOG))}") from None

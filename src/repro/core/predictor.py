@@ -55,7 +55,20 @@ class Profet:
         return x
 
     def _matrix(self, ds, device, cases) -> np.ndarray:
-        return np.stack([self._vec(ds.profile(device, c), c) for c in cases])
+        return self.feature_matrix([ds.profile(device, c) for c in cases],
+                                   cases)
+
+    def feature_matrix(self, profiles: Sequence[Dict[str, float]],
+                       cases: Optional[Sequence] = None) -> np.ndarray:
+        """Stack anchor profiles into one (N, D) phase-1 feature matrix —
+        the vectorized entry point used by ``repro.api.predict_grid``."""
+        X = self.features.transform_many(profiles)
+        if self.cfg.extra_knob_features:
+            if cases is None:
+                raise ValueError("extra_knob_features=True requires cases")
+            knobs = np.array([[float(b), float(p)] for (_, b, p) in cases])
+            X = np.concatenate([X, knobs], axis=1)
+        return X
 
     # ------------------------------------------------------------------
     def fit(self, ds: workloads.Dataset,
@@ -115,7 +128,13 @@ class Profet:
 
     def predict_cross_many(self, anchor: str, target: str, ds, cases):
         X = self._matrix(ds, anchor, cases)
-        return self.cross[(anchor, target)].predict(X)
+        return self.predict_cross_matrix(anchor, target, X)
+
+    def predict_cross_matrix(self, anchor: str, target: str,
+                             X: np.ndarray) -> np.ndarray:
+        """Phase 1 on a prebuilt feature matrix: ONE ensemble call for all
+        rows (the per-(anchor, target) hot path of the grid predictor)."""
+        return self.cross[(anchor, target)].predict(np.asarray(X))
 
     def predict_knob(self, device: str, kind: str, value,
                      t_min: float, t_max: float) -> np.ndarray:

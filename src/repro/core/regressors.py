@@ -105,17 +105,29 @@ class _Tree:
     def fit(self, X, y):
         self.nodes = []
         self._build(X, y, 0)
+        self._pack()
         return self
 
+    def _pack(self):
+        """Flatten nodes into arrays for vectorized traversal."""
+        self._feat = np.array([n.feature for n in self.nodes], np.int64)
+        self._thr = np.array([n.threshold for n in self.nodes])
+        self._left = np.array([n.left for n in self.nodes], np.int64)
+        self._right = np.array([n.right for n in self.nodes], np.int64)
+        self._value = np.array([n.value for n in self.nodes])
+
     def predict(self, X):
-        out = np.empty(len(X))
-        for i, x in enumerate(X):
-            nid = 0
-            while self.nodes[nid].feature >= 0:
-                n = self.nodes[nid]
-                nid = n.left if x[n.feature] <= n.threshold else n.right
-            out[i] = self.nodes[nid].value
-        return out
+        X = np.asarray(X)
+        if getattr(self, "_feat", None) is None:  # pre-pack pickles
+            self._pack()
+        nid = np.zeros(len(X), dtype=np.int64)
+        live = np.flatnonzero(self._feat[nid] >= 0)
+        while live.size:
+            cur = nid[live]
+            go_left = X[live, self._feat[cur]] <= self._thr[cur]
+            nid[live] = np.where(go_left, self._left[cur], self._right[cur])
+            live = live[self._feat[nid[live]] >= 0]
+        return self._value[nid]
 
 
 class RandomForestRegressor:

@@ -110,7 +110,8 @@ def feasible(dev: Device, model: str, batch: int, pix: int) -> bool:
 
 def measure(device: str, model: str, batch: int, pix: int,
             *, seed: int = 0) -> Measurement:
-    dev = CATALOG[device]
+    from repro.core import devices as _devices
+    dev = _devices.get(device)  # helpful KeyError listing the catalog
     ops = cnn_zoo.build_ops(model, batch, pix)
     rng = _rng_for(seed, device, model, batch, pix)
     run_noise = float(np.exp(rng.normal(0.0, 0.03)))

@@ -29,7 +29,13 @@ class Dataset:
 
     def subset(self, devices) -> "Dataset":
         """View with a restricted device set (same cases)."""
-        return Dataset(devices=tuple(devices), cases=self.cases,
+        devices = tuple(devices)
+        missing = [d for d in devices if d not in self.measurements]
+        if missing:
+            raise KeyError(
+                f"device(s) {', '.join(map(repr, missing))} not in dataset; "
+                f"available: {', '.join(sorted(self.measurements))}")
+        return Dataset(devices=devices, cases=self.cases,
                        measurements={d: self.measurements[d] for d in devices})
 
 

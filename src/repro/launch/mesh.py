@@ -20,6 +20,16 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_abstract_mesh(shape, axes):
+    """Device-free AbstractMesh across the jax constructor change: jax >=
+    0.4.38 takes (axis_sizes, axis_names); 0.4.37 takes (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def data_axis_size(mesh) -> int:
     size = 1
     for name in ("pod", "data"):

@@ -5,30 +5,28 @@ framework feature: profile once on an anchor instance, get predicted latency
     PYTHONPATH=src python -m repro.launch.profet_advise \
         --anchor T4 --model VGG16 --batch 64 --pix 128
 
-The prediction model is fit on the offline workload grid (cached to
-``results/profet_cache.pkl`` after the first call — refitting three
-regressors x 12 device pairs takes ~1 min).
+The oracle is fit on the offline workload grid and persisted through the
+versioned ``repro.api`` artifact store (refitting three regressors x 12
+device pairs takes ~1 min). The artifact carries a ProfetConfig fingerprint,
+so rerunning with different ``--epochs``/``--seed`` refits instead of
+silently reusing a stale cache.
 """
 import argparse
 import pathlib
-import pickle
 import sys
 
 
 def fit_or_load(cache_path: pathlib.Path, *, dnn_epochs: int = 150,
                 seed: int = 0):
+    """Load the cached oracle if it matches (dnn_epochs, seed); else refit."""
+    from repro import api
     from repro.core import workloads
-    from repro.core.predictor import Profet, ProfetConfig
+    from repro.core.predictor import ProfetConfig
 
-    if cache_path.exists():
-        with open(cache_path, "rb") as f:
-            return pickle.load(f)
-    ds = workloads.generate()
-    prophet = Profet(ProfetConfig(dnn_epochs=dnn_epochs, seed=seed)).fit(ds)
-    cache_path.parent.mkdir(parents=True, exist_ok=True)
-    with open(cache_path, "wb") as f:
-        pickle.dump((prophet, ds), f)
-    return prophet, ds
+    cfg = ProfetConfig(dnn_epochs=dnn_epochs, seed=seed)
+    return api.fit_or_load(
+        cache_path, cfg,
+        fit_fn=lambda: api.LatencyOracle.fit(workloads.generate(), cfg))
 
 
 def main(argv=None):
@@ -42,41 +40,35 @@ def main(argv=None):
                     help="training steps for the cost estimate")
     ap.add_argument("--cache", default="results/profet_cache.pkl")
     ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro import api
     from repro.core import simulator
-    from repro.core.devices import CATALOG
 
-    prophet, ds = fit_or_load(pathlib.Path(args.cache),
-                              dnn_epochs=args.epochs)
-    case = (args.model, args.batch, args.pix)
+    oracle = fit_or_load(pathlib.Path(args.cache),
+                         dnn_epochs=args.epochs, seed=args.seed)
+    workload = api.Workload(args.model, args.batch, args.pix)
 
     # client-side step: run once on the anchor with profiling enabled
-    meas = simulator.measure(args.anchor, *case)
-    profile = meas.profile
+    meas = simulator.measure(args.anchor, *workload.case)
 
     print(f"workload: {args.model} batch={args.batch} pix={args.pix} "
           f"(profiled on {args.anchor})\n")
     print(f"{'device':8s} {'pred ms/batch':>14s} {'$/hr':>7s} "
           f"{'$ for ' + str(args.steps) + ' steps':>18s}")
-    rows = []
-    for name, dev in CATALOG.items():
-        if name == args.anchor:
-            lat = meas.latency_ms
-            tag = " (anchor, measured)"
-        elif (args.anchor, name) in prophet.cross:
-            lat = prophet.predict_cross(args.anchor, name, profile, case)
-            tag = ""
-        else:
-            continue
-        cost = lat / 1e3 / 3600 * args.steps * dev.price_hr
-        rows.append((name, lat, dev.price_hr, cost, tag))
-        print(f"{name:8s} {lat:14.2f} {dev.price_hr:7.3f} {cost:18.4f}{tag}")
+    rows = oracle.advise(args.anchor, workload, profile=meas.profile,
+                         measured_ms=meas.latency_ms)
+    for r in rows:
+        tag = " (anchor, measured)" if r.mode == api.MODE_MEASURED else ""
+        print(f"{r.target:8s} {r.latency_ms:14.2f} {r.price_hr:7.3f} "
+              f"{r.cost_usd(args.steps):18.4f}{tag}")
 
-    fastest = min(rows, key=lambda r: r[1])
-    cheapest = min(rows, key=lambda r: r[3])
-    print(f"\nfastest:  {fastest[0]} ({fastest[1]:.1f} ms/batch)")
-    print(f"cheapest: {cheapest[0]} (${cheapest[3]:.4f} for {args.steps} steps)")
+    fastest = min(rows, key=lambda r: r.latency_ms)
+    cheapest = min(rows, key=lambda r: r.cost_usd(args.steps))
+    print(f"\nfastest:  {fastest.target} ({fastest.latency_ms:.1f} ms/batch)")
+    print(f"cheapest: {cheapest.target} "
+          f"(${cheapest.cost_usd(args.steps):.4f} for {args.steps} steps)")
     return 0
 
 

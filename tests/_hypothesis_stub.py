@@ -1,0 +1,112 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The container image has no hypothesis wheel, so the property-test modules
+fall back to this shim: each ``@given`` test is run against a fixed number of
+pseudo-random examples drawn from a seed derived from the test name. This
+keeps the properties exercised (and the plain tests in the same modules
+collectable) with zero third-party dependencies. Only the strategy surface
+actually used by this repo's tests is implemented.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+MAX_EXAMPLES_CAP = 100  # stub draws are not shrunk, so cap the example count
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(10_000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate rejected all samples")
+        return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def characters(min_codepoint=32, max_codepoint=126, **_):
+    return _Strategy(
+        lambda rng: chr(int(rng.integers(min_codepoint, max_codepoint + 1))))
+
+
+def text(alphabet=None, min_size=0, max_size=10):
+    alphabet = alphabet or characters()
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return "".join(alphabet._draw(rng) for _ in range(n))
+    return _Strategy(draw)
+
+
+def lists(elements, min_size=0, max_size=10, unique=False):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        out = []
+        for _ in range(10_000):
+            if len(out) >= n:
+                break
+            v = elements._draw(rng)
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+    return _Strategy(draw)
+
+
+class _StrategiesModule:
+    """Namespace mimicking ``hypothesis.strategies``."""
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    characters = staticmethod(characters)
+    text = staticmethod(text)
+    lists = staticmethod(lists)
+
+
+strategies = _StrategiesModule()
+
+
+def settings(max_examples=20, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # No functools.wraps: copying __wrapped__ would let pytest see the
+        # original signature and demand fixtures for the strategy params.
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_stub_max_examples", 20),
+                    MAX_EXAMPLES_CAP)
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8],
+                "little")
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                fn(*args, *(s._draw(rng) for s in strats), **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return deco

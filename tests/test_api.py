@@ -1,0 +1,248 @@
+"""``repro.api`` service layer: oracle-vs-legacy equivalence, vectorized
+grid-vs-loop equality, artifact round-trip + version/fingerprint rejection,
+and the helpful device errors."""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import devices, workloads
+from repro.core.predictor import Profet, ProfetConfig
+
+# fast plumbing config: the linear+forest members are deterministic and fit
+# in milliseconds; accuracy is covered by tests/test_predictor.py
+CFG = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def small():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "VGG11", "ResNet18"))
+    train, test = workloads.split_cases(ds.cases, test_frac=0.25, seed=0)
+    oracle = api.LatencyOracle.fit(ds, CFG, train)
+    return ds, train, test, oracle
+
+
+# ---------------------------------------------------------------------------
+# oracle vs legacy Profet methods
+# ---------------------------------------------------------------------------
+
+
+def test_cross_matches_legacy(small):
+    ds, _, test, oracle = small
+    for c in test[:8]:
+        w = api.Workload.from_case(c)
+        r = oracle.predict(api.PredictRequest("T4", "V100", w))
+        legacy = oracle.profet.predict_cross("T4", "V100",
+                                             ds.profile("T4", c), c)
+        assert r.mode == api.MODE_CROSS
+        assert r.latency_ms == pytest.approx(legacy, rel=1e-12)
+
+
+def test_two_phase_matches_legacy_with_oracle_chosen_minmax(small):
+    ds, _, test, oracle = small
+    for c in test:
+        w = api.Workload.from_case(c)
+        pair = oracle.minmax_cases(w, api.KNOB_BATCH, "T4")
+        if pair is None:
+            continue
+        lo, hi = pair
+        assert lo == (w.model, min(workloads.BATCHES), w.pix)
+        assert hi == (w.model, max(workloads.BATCHES), w.pix)
+        r = oracle.predict(api.PredictRequest(
+            "T4", "V100", w, mode=api.MODE_TWO_PHASE, knob=api.KNOB_BATCH))
+        legacy = oracle.profet.predict_two_phase(
+            "T4", "V100", "batch", w.batch,
+            ds.profile("T4", lo), ds.profile("T4", hi),
+            case_min=lo, case_max=hi)
+        assert r.mode == api.MODE_TWO_PHASE
+        assert r.latency_ms == pytest.approx(float(legacy), rel=1e-12)
+        return
+    pytest.fail("no two-phase-capable case in the test split")
+
+
+def test_auto_mode_routes_by_profile_availability(small):
+    ds, _, test, oracle = small
+    w = api.Workload.from_case(test[0])
+    # exact-case profile in the dataset -> cross
+    assert oracle.predict(
+        api.PredictRequest("T4", "V100", w)).mode == api.MODE_CROSS
+    # a workload at an unmeasured mid-knob -> falls back to two-phase
+    off_grid = api.Workload(w.model, 100, w.pix)  # 100 not in BATCHES
+    r = oracle.predict(api.PredictRequest("T4", "V100", off_grid))
+    assert r.mode == api.MODE_TWO_PHASE
+    assert np.isfinite(r.latency_ms)
+
+
+def test_measured_mode_and_cost(small):
+    ds, _, test, oracle = small
+    w = api.Workload.from_case(test[0])
+    r = oracle.predict(api.PredictRequest("T4", "T4", w))
+    assert r.mode == api.MODE_MEASURED
+    assert r.latency_ms == pytest.approx(ds.latency("T4", w.case))
+    price = devices.get("T4").price_hr
+    assert r.cost_usd(3600 * 1000) == pytest.approx(r.latency_ms * price)
+
+
+def test_unknown_pair_raises_helpful_error(small):
+    _, _, test, oracle = small
+    w = api.Workload.from_case(test[0])
+    with pytest.raises(api.UnknownDeviceError, match="trained anchors"):
+        oracle.predict(api.PredictRequest("T4", "TPUv4", w))
+    # unknown anchor gets the device-listing error even when target==anchor
+    with pytest.raises(api.UnknownDeviceError, match="available"):
+        oracle.predict(api.PredictRequest("H100", "H100", w))
+
+
+# ---------------------------------------------------------------------------
+# vectorized grid
+# ---------------------------------------------------------------------------
+
+
+def test_predict_grid_matches_per_case_loop(small):
+    ds, _, _, oracle = small
+    req = api.GridRequest(anchor="T4", model="AlexNet",
+                          targets=("T4", "V100"),
+                          batches=tuple(workloads.BATCHES),
+                          pixels=tuple(workloads.PIXELS))
+    grid = oracle.predict_grid(req)
+    for i, t in enumerate(req.targets):
+        for j, b in enumerate(req.batches):
+            for k, p in enumerate(req.pixels):
+                cell = grid.latency_ms[i, j, k]
+                case = ("AlexNet", b, p)
+                if case not in ds.measurements["T4"]:
+                    assert np.isnan(cell)
+                    continue
+                if t == "T4":
+                    want = ds.latency("T4", case)
+                else:
+                    want = oracle.profet.predict_cross(
+                        "T4", t, ds.profile("T4", case), case)
+                # float32 DNN members would need 1e-5; these are float64
+                assert cell == pytest.approx(want, rel=1e-9), (t, b, p)
+
+
+def test_grid_unknown_anchor_or_target_raises(small):
+    _, _, _, oracle = small
+    with pytest.raises(api.UnknownDeviceError, match="available"):
+        oracle.predict_grid(api.GridRequest("T4x", "AlexNet", ("V100",),
+                                            (16,), (32,)))
+    with pytest.raises(api.UnknownDeviceError, match="trained anchors"):
+        oracle.predict_grid(api.GridRequest("T4", "AlexNet", ("NOPE",),
+                                            (16,), (32,)))
+
+
+def test_grid_result_accessors(small):
+    _, _, _, oracle = small
+    req = api.GridRequest(anchor="T4", model="AlexNet", targets=("V100",),
+                          batches=(16, 32), pixels=(32, 64))
+    grid = oracle.predict_grid(req)
+    rows = list(grid.rows())
+    assert rows, "expected at least one feasible cell"
+    t, b, p, v = rows[0]
+    assert grid.at(t, b, p) == v
+    d = grid.to_dict()
+    assert d["request"]["anchor"] == "T4"
+    assert np.asarray(d["latency_ms"], dtype=object).shape == (1, 2, 2)
+
+
+def test_grid_to_dict_is_strict_json_with_nan_cells(small):
+    import json
+    _, _, _, oracle = small
+    # batch 999 is off-grid -> a guaranteed NaN cell
+    grid = oracle.predict_grid(api.GridRequest(
+        "T4", "AlexNet", ("V100",), (16, 999), (32,)))
+    def no_nan(_):
+        raise AssertionError("bare NaN token in JSON")
+    out = json.loads(json.dumps(grid.to_dict()), parse_constant=no_nan)
+    assert out["latency_ms"][0][1][0] is None
+    assert isinstance(out["latency_ms"][0][0][0], float)
+
+
+# ---------------------------------------------------------------------------
+# artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_roundtrip(small, tmp_path):
+    _, _, test, oracle = small
+    path = tmp_path / "oracle.pkl"
+    manifest = api.save(oracle, path)
+    assert manifest["schema_version"] == 1
+    assert manifest["fingerprint"] == api.config_fingerprint(CFG)
+
+    loaded = api.load(path, expect_config=CFG)
+    w = api.Workload.from_case(test[0])
+    a = oracle.predict(api.PredictRequest("T4", "V100", w))
+    b = loaded.predict(api.PredictRequest("T4", "V100", w))
+    assert a.latency_ms == pytest.approx(b.latency_ms, rel=1e-12)
+
+
+def test_artifact_rejects_config_mismatch(small, tmp_path):
+    _, _, _, oracle = small
+    path = tmp_path / "oracle.pkl"
+    api.save(oracle, path)
+    stale = dataclasses.replace(CFG, seed=123)  # the old cache-reuse bug
+    with pytest.raises(api.FingerprintMismatchError):
+        api.load(path, expect_config=stale)
+    stale = dataclasses.replace(CFG, dnn_epochs=7)
+    with pytest.raises(api.FingerprintMismatchError):
+        api.load(path, expect_config=stale)
+
+
+def test_artifact_rejects_wrong_schema_and_legacy_pickles(small, tmp_path):
+    _, _, _, oracle = small
+    path = tmp_path / "oracle.pkl"
+    api.save(oracle, path)
+    with open(path, "rb") as f:
+        env = pickle.load(f)
+    env["schema_version"] = 999
+    with open(path, "wb") as f:
+        pickle.dump(env, f)
+    with pytest.raises(api.SchemaVersionError):
+        api.load(path)
+
+    legacy = tmp_path / "legacy.pkl"  # the old ad-hoc (profet, ds) cache
+    with open(legacy, "wb") as f:
+        pickle.dump((oracle.profet, oracle.dataset), f)
+    with pytest.raises(api.ArtifactError):
+        api.load(legacy)
+    with pytest.raises(api.ArtifactError):
+        api.load(tmp_path / "missing.pkl")
+
+
+def test_fit_or_load_refits_on_mismatch(small, tmp_path):
+    _, _, _, oracle = small
+    path = tmp_path / "oracle.pkl"
+    api.save(oracle, path)
+    calls = []
+
+    def fit():
+        calls.append(1)
+        return oracle
+    # matching config: loads, no refit
+    api.fit_or_load(path, CFG, fit_fn=fit)
+    assert not calls
+    # changed config: refits and overwrites
+    other = dataclasses.replace(CFG, seed=9)
+    api.fit_or_load(path, other, fit_fn=fit)
+    assert calls == [1]
+
+
+# ---------------------------------------------------------------------------
+# satellite: helpful device errors
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_subset_unknown_device_lists_available(small):
+    ds, _, _, _ = small
+    with pytest.raises(KeyError, match="available: T4, V100"):
+        ds.subset(["T4", "H100"])
+
+
+def test_devices_get_unknown_lists_available():
+    with pytest.raises(KeyError, match="available: .*K80.*V100"):
+        devices.get("H100")

@@ -2,8 +2,12 @@
 unseen-op routing. Includes hypothesis property tests for the metric."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container lacks hypothesis: deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.clustering import (FeatureClustering, average_linkage,
                                    distance_matrix, identity_features,

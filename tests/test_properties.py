@@ -7,8 +7,12 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container lacks hypothesis: deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.distributed import compression as COMP
 from repro.kernels.ref import ssd_scan_ref

@@ -1,8 +1,12 @@
 """Batch/pixel scaling predictor (paper §III-C2): min-max + order-2 poly."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container lacks hypothesis: deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core.scaling import PolyScaler
 

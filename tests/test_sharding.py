@@ -28,8 +28,8 @@ def test_act_rules_pod_axis_collapses(mesh):
 
 
 def test_fit_spec_drops_nondivisible():
-    from jax.sharding import AbstractMesh
-    m = AbstractMesh((1, 2), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    m = make_abstract_mesh((1, 2), ("data", "model"))
     spec = P("model", None)
     assert SH.fit_spec(spec, (6, 3), m) == P("model")   # 6 % 2 == 0 kept
     assert SH.fit_spec(spec, (5, 3), m) == P()          # 5 % 2 != 0 dropped
@@ -49,10 +49,10 @@ def test_validate_axes_catches_rank_mismatch():
 
 
 def test_data_axis_size():
-    from jax.sharding import AbstractMesh
-    assert data_axis_size(AbstractMesh((2, 2), ("data", "model"))) == 2
+    from repro.launch.mesh import make_abstract_mesh
+    assert data_axis_size(make_abstract_mesh((2, 2), ("data", "model"))) == 2
     assert data_axis_size(
-        AbstractMesh((2, 2, 1), ("pod", "data", "model"))) == 4
+        make_abstract_mesh((2, 2, 1), ("pod", "data", "model"))) == 4
 
 
 # ---------------------------------------------------------------------------
