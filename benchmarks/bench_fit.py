@@ -1,0 +1,116 @@
+"""End-to-end ``Profet.fit`` speedup: the vectorized training hot path.
+
+Baseline = the pre-PR fit, replayed by
+``repro.core.reference.fit_profet_reference``: one recursive per-node CART
+forest per (anchor, target) pair (a fresh ``argsort`` per node per feature,
+the seed's row-duplication bootstrap) and one sequential host-loop DNN per
+pair with a FRESH jit trace each fit (including the seed's dropped-tail
+minibatch loop) — so both the cost AND the accuracy of what the code
+actually did before this PR are what the new path is held against.
+Vectorized = today's ``Profet.fit``: per anchor one shared feature matrix,
+one level-synchronous packed-forest pass per target, and all targets' DNN
+heads trained in a single vmapped ``lax.scan`` call.
+
+The vectorized path is timed WARM (its module-level jit cache populated by
+an untimed first fit — the production refit regime the ROADMAP targets);
+the baseline retraces every fit by construction, so warming cannot help it.
+
+Accuracy parity is reported alongside: both fitted predictors score
+phase-1 cross-instance MAPE on a held-out case split (the bench_tab2
+protocol); the floor fails if they diverge beyond noise.
+
+    PYTHONPATH=src python -m benchmarks.bench_fit           # full paper grid
+    PYTHONPATH=src python -m benchmarks.bench_fit --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import reference, workloads
+from repro.core.ensemble import mape
+from repro.core.predictor import Profet, ProfetConfig
+
+TARGET_SPEEDUP = 5.0     # full-grid acceptance floor
+SMOKE_FLOOR = 2.0        # conservative CI floor (cold machines, small grid)
+MAPE_PARITY_PTS = 3.0    # regression budget: MAPE_new - MAPE_ref, pct points
+                         # (one-sided — beating the seed path never fails)
+
+
+def _setup(smoke: bool):
+    if smoke:
+        ds = workloads.generate(devices=("T4", "V100"),
+                                models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=30, seed=0)
+    else:
+        ds = workloads.generate()    # the paper's full device/model grid
+        cfg = ProfetConfig(seed=0)   # default epochs/trees — the real fit
+    train, test = workloads.split_cases(ds.cases, test_frac=0.25, seed=0)
+    return ds, cfg, train, test
+
+
+def _cross_mape(profet: Profet, ds, test) -> float:
+    """Mean phase-1 MAPE over every trained pair on the held-out cases."""
+    scores = []
+    X_by_anchor = {}
+    for (ga, gt) in sorted(profet.cross):
+        if ga not in X_by_anchor:
+            X_by_anchor[ga] = profet.feature_matrix(
+                [ds.profile(ga, c) for c in test], test)
+        y_true = np.array([ds.latency(gt, c) for c in test])
+        scores.append(mape(y_true, profet.predict_cross_matrix(
+            ga, gt, X_by_anchor[ga])))
+    return float(np.mean(scores))
+
+
+def run(smoke: bool = False) -> dict:
+    ds, cfg, train, test = _setup(smoke)
+
+    # vectorized path: one untimed warmup fit populates the jit cache
+    Profet(cfg).fit(ds, train)
+    t0 = time.perf_counter()
+    new = Profet(cfg).fit(ds, train)
+    t_new = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref = reference.fit_profet_reference(ds, cfg, train)
+    t_ref = time.perf_counter() - t0
+
+    mape_new = _cross_mape(new, ds, test)
+    mape_ref = _cross_mape(ref, ds, test)
+    speedup = t_ref / t_new
+    floor = SMOKE_FLOOR if smoke else TARGET_SPEEDUP
+    out = {"smoke": smoke, "n_pairs": len(new.cross),
+           "n_train_cases": len(train),
+           "ref_s": t_ref, "new_s": t_new, "speedup": speedup,
+           "floor": floor, "mape_new": mape_new, "mape_ref": mape_ref,
+           "mape_delta_pts": mape_new - mape_ref,
+           "mape_parity_pts": MAPE_PARITY_PTS}
+    from benchmarks import common
+    common.save("fit", out)
+    return out
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    r = run(smoke="--smoke" in argv)
+    print(f"Profet.fit: {r['n_pairs']} pairs x {r['n_train_cases']} cases  "
+          f"reference {r['ref_s']:.1f} s  vectorized {r['new_s']:.1f} s  "
+          f"speedup {r['speedup']:.1f}x (floor >= {r['floor']:.0f}x)")
+    print(f"  held-out cross MAPE: vectorized {r['mape_new']:.2f}%  "
+          f"reference {r['mape_ref']:.2f}%  "
+          f"delta {r['mape_delta_pts']:+.2f} pts "
+          f"(fails above +{r['mape_parity_pts']:.0f}; better never fails)")
+    if r["speedup"] < r["floor"]:
+        print("FAIL: vectorized fit under the speedup floor")
+        return 1
+    if r["mape_delta_pts"] > r["mape_parity_pts"]:
+        print("FAIL: vectorized path LOST accuracy vs the pre-PR reference")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

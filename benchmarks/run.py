@@ -18,6 +18,7 @@ BENCHES = [
     ("tab3_4_5", "benchmarks.bench_tab3_4_5", "Tables III-V vs baselines"),
     ("tab6", "benchmarks.bench_tab6", "Table VI new devices"),
     ("grid", "benchmarks.bench_grid", "predict_grid vectorization speedup"),
+    ("fit", "benchmarks.bench_fit", "Profet.fit vectorization speedup"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serving", "Continuous vs wave batching"),

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full test suite plus the predict_grid smoke benchmark
-# (which fails if the vectorized grid path drops under the 5x speedup floor
-# or diverges from the per-case loop).
+# Tier-1 gate: the full test suite plus the two vectorization smoke
+# benchmarks — predict_grid (fails under a 5x speedup floor or on
+# divergence from the per-case loop) and Profet.fit (fails under the fit
+# speedup floor or on MAPE-parity loss vs the pre-PR reference path).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python -m benchmarks.bench_grid --smoke
+python -m benchmarks.bench_fit --smoke

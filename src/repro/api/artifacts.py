@@ -9,6 +9,12 @@ stale-cache bug the old ``launch/profet_advise.py`` pickle had.
     from repro import api
     api.save(oracle, "results/oracle.pkl")
     oracle = api.load("results/oracle.pkl", expect_config=cfg)
+
+Schema v2: forests are serialized as the packed ``(feat, thr, left, right,
+value)`` arrays the level-synchronous grower emits (plain ndarrays, no
+custom node classes in the pickle stream). v1 artifacts carried pickled
+recursive ``_Node`` lists; loading one now raises :class:`SchemaVersionError`
+with a refit instruction instead of silently re-packing.
 """
 from __future__ import annotations
 
@@ -20,10 +26,11 @@ import pickle
 from typing import Optional, Union
 
 from repro.core.predictor import ProfetConfig
+from repro.core.regressors import LegacyForestError, RandomForestRegressor
 from repro.api.oracle import LatencyOracle
 from repro.api.types import ApiError
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 MAGIC = "profet-oracle"
 
 
@@ -58,6 +65,7 @@ def save(oracle: LatencyOracle, path: Union[str, pathlib.Path]) -> dict:
         "devices": list(oracle.dataset.devices),
         "n_cases": len(oracle.dataset.cases),
         "pairs": [list(p) for p in oracle.pairs()],
+        "forest_format": "packed-arrays",
     }
     with open(path, "wb") as f:
         pickle.dump({**manifest,
@@ -79,6 +87,13 @@ def load(path: Union[str, pathlib.Path],
     try:
         with open(path, "rb") as f:
             env = pickle.load(f)
+    except LegacyForestError as e:
+        # a v1 payload unpickles through the _Tree/_Node tombstones before
+        # the version field can even be checked — name the real problem
+        raise SchemaVersionError(
+            f"{path}: legacy node-list forest (schema v1); packed-array "
+            f"forests (schema v{SCHEMA_VERSION}) are required — refit and "
+            "re-save") from e
     except Exception as e:
         raise ArtifactError(f"unreadable artifact {path}: {e}") from e
     if not isinstance(env, dict) or env.get("magic") != MAGIC:
@@ -87,7 +102,7 @@ def load(path: Union[str, pathlib.Path],
     if env.get("schema_version") != SCHEMA_VERSION:
         raise SchemaVersionError(
             f"{path}: schema v{env.get('schema_version')} != "
-            f"supported v{SCHEMA_VERSION}")
+            f"supported v{SCHEMA_VERSION} — refit and re-save")
     if expect_config is not None:
         want = config_fingerprint(expect_config)
         if env.get("fingerprint") != want:
@@ -95,6 +110,14 @@ def load(path: Union[str, pathlib.Path],
                 f"{path}: artifact config {env.get('fingerprint')} != "
                 f"expected {want} — refit required")
     profet, dataset = env["payload"]
+    for pair, ens in profet.cross.items():
+        forest = ens.models.get("forest")
+        if forest is not None and not (
+                isinstance(forest, RandomForestRegressor)
+                and getattr(forest, "forest_", None) is not None):
+            raise ArtifactError(
+                f"{path}: pair {pair} carries a non-packed forest member; "
+                "only packed-array forests load — refit and re-save")
     return LatencyOracle(profet, dataset)
 
 

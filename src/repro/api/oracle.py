@@ -12,6 +12,12 @@ requests (``repro.api.types``) to the right internal path:
 ``predict_grid`` is the vectorized hot path: one feature matrix per request,
 one ``MedianEnsemble.predict`` call per (anchor, target) pair — not one per
 grid cell (see ``benchmarks/bench_grid.py`` for the measured speedup).
+
+``fit`` is vectorized the same way (``benchmarks/bench_fit.py``): per anchor
+one shared feature matrix, one level-synchronously grown packed forest per
+target, and ALL targets' DNN heads trained in a single vmapped+scanned
+compiled call — D-1 ensembles per anchor cost one forest pass and one jit
+trace, not D-1 recursions and retraces.
 """
 from __future__ import annotations
 
@@ -50,7 +56,12 @@ class LatencyOracle:
             train_cases: Optional[Sequence] = None,
             anchors: Optional[Sequence[str]] = None,
             targets: Optional[Sequence[str]] = None) -> "LatencyOracle":
-        """Fit a fresh oracle; ``dataset=None`` generates the paper grid."""
+        """Fit a fresh oracle; ``dataset=None`` generates the paper grid.
+
+        Training runs the vectorized per-anchor path (shared feature
+        matrix, packed forests, jointly trained DNN heads); refits with the
+        same data shapes reuse the module-level jit cache instead of
+        retracing."""
         ds = dataset if dataset is not None else workloads.generate()
         profet = Profet(config or ProfetConfig()).fit(
             ds, train_cases, anchors=anchors, targets=targets)

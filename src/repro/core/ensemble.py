@@ -30,8 +30,14 @@ class MedianEnsemble:
             return DNNRegressor(epochs=self.dnn_epochs, seed=self.seed)
         raise KeyError(name)
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "MedianEnsemble":
-        self.models = {m: self._make(m).fit(X, y) for m in self.members}
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            prefit: Optional[Dict[str, object]] = None) -> "MedianEnsemble":
+        """``prefit`` injects already-trained members (keyed by member name):
+        the joint per-anchor path in ``Profet.fit`` trains all targets' DNN
+        heads in one vmapped call and hands each ensemble its slice here."""
+        prefit = prefit or {}
+        self.models = {m: prefit[m] if m in prefit else self._make(m).fit(X, y)
+                       for m in self.members}
         return self
 
     def predict_members(self, X: np.ndarray) -> Dict[str, np.ndarray]:

@@ -77,29 +77,60 @@ class Profet:
             targets: Optional[Sequence[str]] = None) -> "Profet":
         """``anchors``/``targets`` restrict which cross-device pairs are
         trained (default: all ordered pairs of ds.devices) — e.g. Table VI
-        trains old-anchor -> new-target pairs only."""
+        trains old-anchor -> new-target pairs only.
+
+        Phase 1 is trained per ANCHOR, not per pair: the anchor's profile
+        matrix is built once and shared by every target, and all targets'
+        DNN heads train jointly in one vmapped+scanned compiled call
+        (``regressors.fit_dnn_multi``); each target still gets its own
+        linear model and level-synchronously grown forest.
+        """
         anchors = list(anchors or ds.devices)
         targets = list(targets or ds.devices)
         cases = list(train_cases or ds.cases)
-        names = sorted({op for d in anchors for c in cases
-                        for op in ds.profile(d, c)})
-        self.features = (FeatureClustering.fit(names, self.cfg.max_height)
-                         if self.cfg.clustering else identity_features(names))
+        profiles = self._fit_features(ds, anchors, cases)
 
-        # phase 1: one ensemble per ordered (anchor, target) pair
+        # phase 1: one anchor feature matrix + one joint DNN fit per anchor
+        lat = {gt: np.array([ds.latency(gt, c) for c in cases])
+               for gt in targets}
         for ga in anchors:
-            X = self._matrix(ds, ga, cases)
-            for gt in targets:
-                if ga == gt:
-                    continue
-                y = np.array([ds.latency(gt, c) for c in cases])
+            X = self.feature_matrix(profiles[ga], cases)
+            tgts = [gt for gt in targets if gt != ga]
+            if not tgts:
+                continue
+            dnn_heads = {}
+            if "dnn" in self.cfg.members:
+                from repro.core.regressors import fit_dnn_multi
+                heads = fit_dnn_multi(X, np.stack([lat[gt] for gt in tgts]),
+                                      epochs=self.cfg.dnn_epochs,
+                                      seed=self.cfg.seed)
+                dnn_heads = dict(zip(tgts, heads))
+            for gt in tgts:
                 ens = MedianEnsemble(seed=self.cfg.seed,
                                      dnn_epochs=self.cfg.dnn_epochs,
                                      n_trees=self.cfg.n_trees,
                                      members=self.cfg.members)
-                self.cross[(ga, gt)] = ens.fit(X, y)
+                prefit = {"dnn": dnn_heads[gt]} if dnn_heads else None
+                self.cross[(ga, gt)] = ens.fit(X, lat[gt], prefit=prefit)
 
-        # phase 2: per-device scalers over batch and pixel knobs
+        self._fit_phase2(ds, anchors, targets, cases)
+        return self
+
+    def _fit_features(self, ds: workloads.Dataset, anchors: Sequence[str],
+                      cases: Sequence) -> Dict[str, List[Dict[str, float]]]:
+        """Fit the op-name feature space; returns each anchor's profiles
+        (fetched ONCE and reused for both the name vocabulary and the
+        per-anchor feature matrices)."""
+        profiles = {d: [ds.profile(d, c) for c in cases] for d in anchors}
+        names = sorted({op for d in anchors for prof in profiles[d]
+                        for op in prof})
+        self.features = (FeatureClustering.fit(names, self.cfg.max_height)
+                         if self.cfg.clustering else identity_features(names))
+        return profiles
+
+    def _fit_phase2(self, ds: workloads.Dataset, anchors: Sequence[str],
+                    targets: Sequence[str], cases: Sequence) -> None:
+        """Phase 2: per-device scalers over batch and pixel knobs."""
         for dev in sorted(set(anchors) | set(targets)):
             kb, kp, lat = [], [], []
             g_b, g_p = [], []
@@ -117,7 +148,6 @@ class Profet:
             self.pixel_scalers[dev] = PolyScaler(
                 order=self.cfg.poly_order, min_knob=min(workloads.PIXELS),
                 max_knob=max(workloads.PIXELS)).fit(kp, lat, np.asarray(g_p))
-        return self
 
     # ------------------------------------------------------------------
     def predict_cross(self, anchor: str, target: str,

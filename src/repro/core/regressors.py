@@ -2,15 +2,29 @@
 implemented from scratch (no sklearn in this environment):
 
   - LinearRegressor: least squares with bias (order-1, the paper's "Linear")
-  - RandomForestRegressor: bagged variance-reduction CART trees
-  - DNNRegressor: 128x64x32x16x1 ReLU MLP, Adam(1e-3), MAPE+RMSE loss (JAX)
+  - RandomForestRegressor: bagged variance-reduction CART trees, grown
+    level-synchronously (all frontier nodes of all trees per depth, one
+    cumsum-based best-split pass per level) into packed ``(feat, thr, left,
+    right, value)`` arrays — no per-node recursion, no per-node argsort
+  - DNNRegressor: 128x64x32x16x1 ReLU MLP, Adam(1e-3), MAPE+RMSE loss (JAX);
+    all targets of one anchor train jointly via ``fit_dnn_multi`` (vmapped
+    over the target axis, epochs driven by one jitted ``lax.scan``)
+
+The recursive/sequential pre-PR implementations live on as frozen references
+in ``repro.core.reference`` (oracle-equivalence tests, bench_fit baseline).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
+
+FOREST_PACK_SCHEMA = 2
+
+
+class LegacyForestError(RuntimeError):
+    """A pickle carries a pre-packed (node-list) forest; refit required."""
 
 
 class LinearRegressor:
@@ -20,119 +34,268 @@ class LinearRegressor:
         self.l2 = l2
         self.coef_: Optional[np.ndarray] = None
 
+    @staticmethod
+    def _design(X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        Xb = np.empty((X.shape[0], X.shape[1] + 1))
+        Xb[:, :-1] = X
+        Xb[:, -1] = 1.0
+        return Xb
+
     def fit(self, X: np.ndarray, y: np.ndarray) -> "LinearRegressor":
-        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        Xb = self._design(X)
         A = Xb.T @ Xb + self.l2 * np.eye(Xb.shape[1])
         self.coef_ = np.linalg.solve(A, Xb.T @ y)
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
-        return Xb @ self.coef_
+        return self._design(X) @ self.coef_
 
 
 # ---------------------------------------------------------------------------
-# Random forest
+# Random forest: level-synchronous vectorized CART grower
 # ---------------------------------------------------------------------------
+
+# Split-selection tolerances shared with repro.core.reference — both
+# implementations must make bit-identical choices.
+GAIN_TOL = 1e-12
+VAR_TOL = 1e-18
 
 
 @dataclasses.dataclass
-class _Node:
-    feature: int = -1
-    threshold: float = 0.0
-    left: int = -1
-    right: int = -1
-    value: float = 0.0
+class PackedForest:
+    """A whole forest as flat arrays, shape (n_trees, max_nodes).
+
+    ``feat[t, i] < 0`` marks a leaf; internal nodes route ``x[feat] <= thr``
+    to ``left`` else ``right``. ``depth`` is the number of levels actually
+    grown — the exact traversal bound for the inference kernels.
+    """
+
+    feat: np.ndarray      # int32  (T, N)
+    thr: np.ndarray       # float64(T, N)
+    left: np.ndarray      # int32  (T, N)
+    right: np.ndarray     # int32  (T, N)
+    value: np.ndarray     # float64(T, N)
+    n_nodes: np.ndarray   # int64  (T,)
+    depth: int
+
+    _FIELDS = ("feat", "thr", "left", "right", "value", "n_nodes")
+
+    @property
+    def n_trees(self) -> int:
+        return self.feat.shape[0]
+
+    def to_state(self) -> dict:
+        state = {k: getattr(self, k) for k in self._FIELDS}
+        state["depth"] = int(self.depth)
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PackedForest":
+        missing = [k for k in cls._FIELDS + ("depth",) if k not in state]
+        if missing:
+            raise LegacyForestError(
+                f"packed forest state missing fields {missing}; refit")
+        return cls(**{k: np.asarray(state[k]) for k in cls._FIELDS},
+                   depth=int(state["depth"]))
 
 
-class _Tree:
-    def __init__(self, max_depth, min_samples_leaf, max_features, rng):
-        self.max_depth = max_depth
-        self.min_samples_leaf = min_samples_leaf
-        self.max_features = max_features
-        self.rng = rng
-        self.nodes = []
+def bootstrap_plan(seed: int, n_trees: int, n: int):
+    """Per-tree bootstrap expressed as sample *weights* over the shared row
+    set (multiplicity counts), plus the derived feature-subsampling seed.
+    One deterministic plan shared by the vectorized grower and the recursive
+    reference, so both grow identical forests at a fixed seed."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, size=(n_trees, n))
+    W = np.zeros((n_trees, n), np.float64)
+    rows = np.repeat(np.arange(n_trees), n)
+    np.add.at(W, (rows, idx.ravel()), 1.0)
+    return W, int(rng.integers(1 << 31))
 
-    def _best_split(self, X, y, feat_ids):
-        n = len(y)
-        best = (None, None, 0.0)  # (feat, thr, gain)
-        base = y.var() * n
-        for f in feat_ids:
-            order = np.argsort(X[:, f], kind="stable")
-            xs, ys = X[order, f], y[order]
-            csum = np.cumsum(ys)
-            csq = np.cumsum(ys * ys)
-            tot, totsq = csum[-1], csq[-1]
-            idx = np.arange(1, n)
-            valid = xs[1:] > xs[:-1]
-            if not valid.any():
+
+def grow_forest(X: np.ndarray, y: np.ndarray, W: np.ndarray, *,
+                max_depth: int, min_samples_leaf: int = 1,
+                n_candidate_features: Optional[int] = None,
+                feature_seed: int = 0) -> PackedForest:
+    """Grow every tree of the forest one depth at a time.
+
+    All frontier nodes of all trees are scored in a single pass per level.
+    Per feature, every tree's samples are regrouped node-contiguously over
+    the SHARED sorted-feature index (one stable argsort per feature at fit
+    start, one per-row segment sort per level — never a per-node argsort),
+    and one cumulative-sum sweep scores every candidate boundary of every
+    frontier node at once. Cost per level is O(trees x samples x features),
+    independent of how many frontier nodes the level has. Split semantics
+    match ``repro.core.reference.ReferenceForest`` (the recursive oracle):
+    identical candidate boundaries, thresholds, and tie-breaking — exact up
+    to SSE rounding in the last ulp (per-node prefix sums here are global
+    cumsum differences, the reference accumulates per subset; candidates
+    whose SSEs collide within that ulp could resolve differently).
+    """
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    W = np.asarray(W, np.float64)
+    T, n = W.shape
+    d = X.shape[1]
+    ml = float(min_samples_leaf)
+    k_feats = d if n_candidate_features is None else min(n_candidate_features, d)
+    frng = np.random.default_rng(feature_seed)
+
+    sort_idx = np.argsort(X, axis=0, kind="stable")      # (n, d)
+
+    cap = 2 * n + 1
+    feat = np.full((T, cap), -1, np.int32)
+    thr = np.zeros((T, cap))
+    left = np.full((T, cap), -1, np.int32)
+    right = np.full((T, cap), -1, np.int32)
+    value = np.zeros((T, cap))
+    n_nodes = np.ones(T, np.int64)
+    node_of = np.zeros((T, n), np.int64)
+    depth_grown = 0
+    y2 = y * y
+    tree_rows = np.arange(T)[:, None]
+
+    ft = np.arange(T)                 # frontier: tree ids ...
+    fn = np.zeros(T, np.int64)        # ... and node ids, sorted by (tree, node)
+    for depth in range(max_depth + 1):
+        if ft.size == 0:
+            break
+        # per-slot stats, computed densely (pairwise row sums — matches the
+        # recursive reference to the last ulp of each node's member sum)
+        Wn = np.where(node_of[ft] == fn[:, None], W[ft], 0.0)    # (S, n)
+        sw = Wn.sum(axis=1)
+        swy = (Wn * y).sum(axis=1)
+        swyy = (Wn * y2).sum(axis=1)
+        value[ft, fn] = swy / sw
+        if depth == max_depth:
+            break
+        base_sse = swyy - swy * swy / sw
+        can = (sw >= 2 * ml) & (base_sse > VAR_TOL * sw)
+        if not can.any():
+            break
+        ft, fn = ft[can], fn[can]
+        sw, swy, swyy = sw[can], swy[can], swyy[can]
+        S = ft.size
+
+        best_sse = base_sse[can]      # a split must strictly beat the parent
+        best_f = np.full(S, -1, np.int64)
+        best_thr = np.zeros(S)
+        allowed = None
+        if k_feats < d:
+            # per-node feature subsets, k smallest of a uniform draw
+            r = frng.random((S, d))
+            kth = np.partition(r, k_feats - 1, axis=1)[:, k_feats - 1:k_feats]
+            allowed = r <= kth
+
+        # slot id of every sample's current node (S = sentinel: not in a
+        # splittable node), plus slot totals padded for sentinel gathers
+        slot_map = np.full((T, cap), S, np.int64)
+        slot_map[ft, fn] = np.arange(S)
+        slot_of = np.take_along_axis(slot_map, node_of, axis=1)   # (T, n)
+        sw_pad = np.concatenate([sw, [0.0]])
+        swy_pad = np.concatenate([swy, [0.0]])
+        swyy_pad = np.concatenate([swyy, [0.0]])
+
+        flat = np.arange(T * n)
+        is_row_start = (flat % n) == 0
+        not_last_col = (flat % n) != n - 1
+        for f in range(d):
+            # regroup each tree's row node-contiguously, preserving the
+            # global x-sorted order inside each node segment
+            g = slot_of[:, sort_idx[:, f]]                   # (T, n)
+            perm = np.argsort(g, axis=1, kind="stable")
+            idx = sort_idx[:, f][perm]                       # sample ids
+            gp = np.take_along_axis(g, perm, axis=1).ravel()
+            wp = np.take_along_axis(W, idx, axis=1)
+            xp = X[idx, f].ravel()
+            yp = y[idx]
+
+            cw = np.cumsum(wp, axis=1).ravel()
+            cwy = np.cumsum(wp * yp, axis=1).ravel()
+            cwyy = np.cumsum(wp * y2[idx], axis=1).ravel()
+
+            starts = np.flatnonzero(is_row_start |
+                                    (gp != np.roll(gp, 1)))
+            seg_id = np.cumsum(is_row_start | (gp != np.roll(gp, 1))) - 1
+            head = starts - 1                                 # cumsum offset
+            hw = np.where(starts % n == 0, 0.0, cw[head])[seg_id]
+            hwy = np.where(starts % n == 0, 0.0, cwy[head])[seg_id]
+            hwyy = np.where(starts % n == 0, 0.0, cwyy[head])[seg_id]
+
+            nl = cw - hw
+            sl = cwy - hwy
+            ql = cwyy - hwyy
+            tot_w = sw_pad[gp]
+            nr = tot_w - nl
+            ok = (not_last_col & (gp < S)
+                  & (np.roll(gp, -1) == gp)
+                  & (np.roll(xp, -1) > xp)
+                  & (nl >= ml) & (nr >= ml))
+            sr = swy_pad[gp] - sl
+            qr = swyy_pad[gp] - ql
+            with np.errstate(divide="ignore", invalid="ignore"):
+                sse = (ql - sl * sl / nl) + (qr - sr * sr / nr)
+            sse = np.where(ok, sse, np.inf)
+
+            seg_min = np.minimum.reduceat(sse, starts)
+            is_min = sse <= seg_min[seg_id]
+            pos = np.where(is_min, flat, T * n)
+            seg_pos = np.minimum.reduceat(pos, starts)
+
+            slot_seg = gp[starts]
+            real = slot_seg < S
+            sl_ids = slot_seg[real]
+            cand = seg_min[real]
+            better = cand < best_sse[sl_ids] - GAIN_TOL
+            if allowed is not None:
+                better &= allowed[sl_ids, f]
+            if not better.any():
                 continue
-            nl = idx.astype(np.float64)
-            nr = n - nl
-            sl, sq_l = csum[:-1], csq[:-1]
-            sse = (sq_l - sl * sl / nl) + ((totsq - sq_l) - (tot - sl) ** 2 / nr)
-            sse = np.where(valid, sse, np.inf)
-            ml = self.min_samples_leaf
-            if ml > 1:
-                bad = (nl < ml) | (nr < ml)
-                sse = np.where(bad, np.inf, sse)
-            k = int(np.argmin(sse))
-            gain = base - sse[k]
-            if np.isfinite(sse[k]) and gain > best[2] + 1e-12:
-                thr = 0.5 * (xs[k] + xs[k + 1])
-                best = (f, thr, gain)
-        return best
+            win_slots = sl_ids[better]
+            p_star = seg_pos[real][better]
+            best_f[win_slots] = f
+            best_thr[win_slots] = 0.5 * (xp[p_star] + xp[p_star + 1])
+            best_sse[win_slots] = cand[better]
 
-    def _build(self, X, y, depth):
-        node_id = len(self.nodes)
-        self.nodes.append(_Node(value=float(y.mean())))
-        if depth >= self.max_depth or len(y) < 2 * self.min_samples_leaf \
-                or y.var() < 1e-18:
-            return node_id
-        nfeat = X.shape[1]
-        k = self.max_features(nfeat)
-        feat_ids = self.rng.choice(nfeat, size=min(k, nfeat), replace=False)
-        f, thr, _ = self._best_split(X, y, feat_ids)
-        if f is None:
-            return node_id
-        mask = X[:, f] <= thr
-        node = self.nodes[node_id]
-        node.feature, node.threshold = int(f), float(thr)
-        node.left = self._build(X[mask], y[mask], depth + 1)
-        node.right = self._build(X[~mask], y[~mask], depth + 1)
-        return node_id
+        win = np.flatnonzero(best_f >= 0)
+        if win.size == 0:
+            break
+        depth_grown = depth + 1
+        wt, wnid = ft[win], fn[win]            # already sorted by (tree, node)
+        uniq_t, first, counts = np.unique(wt, return_index=True,
+                                          return_counts=True)
+        j = np.arange(wt.size) - np.repeat(first, counts)
+        lid = n_nodes[wt] + 2 * j
+        rid = lid + 1
+        feat[wt, wnid] = best_f[win].astype(np.int32)
+        thr[wt, wnid] = best_thr[win]
+        left[wt, wnid] = lid.astype(np.int32)
+        right[wt, wnid] = rid.astype(np.int32)
+        n_nodes[uniq_t] += 2 * counts
 
-    def fit(self, X, y):
-        self.nodes = []
-        self._build(X, y, 0)
-        self._pack()
-        return self
+        # route every sample one step down its (possibly just-split) node
+        F = np.take_along_axis(feat, node_of, axis=1).astype(np.int64)
+        TH = np.take_along_axis(thr, node_of, axis=1)
+        L = np.take_along_axis(left, node_of, axis=1).astype(np.int64)
+        R = np.take_along_axis(right, node_of, axis=1).astype(np.int64)
+        xf = X[np.arange(n)[None, :], np.maximum(F, 0)]
+        node_of = np.where(F >= 0, np.where(xf <= TH, L, R), node_of)
 
-    def _pack(self):
-        """Flatten nodes into arrays for vectorized traversal."""
-        self._feat = np.array([n.feature for n in self.nodes], np.int64)
-        self._thr = np.array([n.threshold for n in self.nodes])
-        self._left = np.array([n.left for n in self.nodes], np.int64)
-        self._right = np.array([n.right for n in self.nodes], np.int64)
-        self._value = np.array([n.value for n in self.nodes])
+        ft = np.repeat(wt, 2)
+        fn = np.stack([lid, rid], axis=1).ravel()
 
-    def predict(self, X):
-        X = np.asarray(X)
-        if getattr(self, "_feat", None) is None:  # pre-pack pickles
-            self._pack()
-        nid = np.zeros(len(X), dtype=np.int64)
-        live = np.flatnonzero(self._feat[nid] >= 0)
-        while live.size:
-            cur = nid[live]
-            go_left = X[live, self._feat[cur]] <= self._thr[cur]
-            nid[live] = np.where(go_left, self._left[cur], self._right[cur])
-            live = live[self._feat[nid[live]] >= 0]
-        return self._value[nid]
+    used = int(n_nodes.max())
+    return PackedForest(feat=feat[:, :used], thr=thr[:, :used],
+                        left=left[:, :used], right=right[:, :used],
+                        value=value[:, :used], n_nodes=n_nodes,
+                        depth=depth_grown)
 
 
 class RandomForestRegressor:
     """Bagging + per-node feature subsampling (sklearn-default-like:
-    n_estimators=100, max_features=1.0 for regression, bootstrap)."""
+    n_estimators=100, max_features=1.0 for regression, bootstrap). The whole
+    forest is grown in one level-synchronous pass and stored packed; predict
+    runs the packed-forest kernel (``repro.kernels.forest_eval``)."""
 
     def __init__(self, n_estimators: int = 100, max_depth: int = 24,
                  min_samples_leaf: int = 1, max_features: str = "all",
@@ -142,43 +305,204 @@ class RandomForestRegressor:
         self.min_samples_leaf = min_samples_leaf
         self.max_features = max_features
         self.seed = seed
-        self.trees = []
+        self.forest_: Optional[PackedForest] = None
 
-    def _mf(self, nfeat: int) -> int:
+    def _mf(self, nfeat: int) -> Optional[int]:
         if self.max_features == "sqrt":
             return max(1, int(np.sqrt(nfeat)))
         if self.max_features == "third":
             return max(1, nfeat // 3)
-        return nfeat
+        return None                     # "all": no subsampling
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
-        rng = np.random.default_rng(self.seed)
         X = np.asarray(X, np.float64)
         y = np.asarray(y, np.float64)
-        self.trees = []
-        n = len(y)
-        for _ in range(self.n_estimators):
-            idx = rng.integers(0, n, size=n)
-            t = _Tree(self.max_depth, self.min_samples_leaf, self._mf,
-                      np.random.default_rng(rng.integers(1 << 31)))
-            t.fit(X[idx], y[idx])
-            self.trees.append(t)
+        W, feature_seed = bootstrap_plan(self.seed, self.n_estimators, len(y))
+        self.forest_ = grow_forest(
+            X, y, W, max_depth=self.max_depth,
+            min_samples_leaf=self.min_samples_leaf,
+            n_candidate_features=self._mf(X.shape[1]),
+            feature_seed=feature_seed)
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        X = np.asarray(X, np.float64)
-        return np.mean([t.predict(X) for t in self.trees], axis=0)
+        from repro.kernels import forest_eval
+        f = self.forest_
+        return forest_eval.predict(np.asarray(X, np.float64), f.feat, f.thr,
+                                   f.left, f.right, f.value, depth=f.depth)
+
+    # -- pickling: packed arrays only, legacy node-lists are rejected -------
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        state["__forest_pack_schema__"] = FOREST_PACK_SCHEMA
+        if self.forest_ is not None:
+            state["forest_"] = self.forest_.to_state()
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        if state.pop("__forest_pack_schema__", None) != FOREST_PACK_SCHEMA \
+                or "trees" in state:
+            raise LegacyForestError(
+                "legacy pickled node-list forest (pre-packed schema); this "
+                "build only loads packed-array forests — refit the model")
+        if state.get("forest_") is not None:
+            state["forest_"] = PackedForest.from_state(state["forest_"])
+        self.__dict__.update(state)
+
+
+class _Node:
+    """Tombstone for schema-v1 pickles (the old per-node dataclass)."""
+
+    def __setstate__(self, state):
+        raise LegacyForestError(
+            "legacy node-list forest pickle (schema v1); refit required")
+
+
+class _Tree(_Node):
+    """Tombstone for schema-v1 pickles (the old recursive tree)."""
 
 
 # ---------------------------------------------------------------------------
-# DNN regressor (JAX)
+# DNN regressor (JAX): shared module-level trainer, vmapped over targets
 # ---------------------------------------------------------------------------
+
+
+def _mlp_init(seed: int, d: int, layers: Tuple[int, ...]):
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    sizes = (d,) + layers
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (sizes[i], sizes[i + 1])) * \
+            jnp.sqrt(2.0 / sizes[i])
+        params.append({"w": w, "b": jnp.zeros(sizes[i + 1])})
+    return params
+
+
+def _mlp_apply(params, x):
+    import jax
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]
+
+
+def epoch_batches(rng: np.random.Generator, n: int, batch_size: int,
+                  epochs: int) -> np.ndarray:
+    """Minibatch index plan: (epochs * ceil(n/bs), bs) int array.
+
+    Every epoch covers EVERY sample: the tail batch is wrap-padded with the
+    head of that epoch's permutation instead of being dropped (the pre-PR
+    loop ``range(0, n - bs + 1, bs)`` silently skipped up to bs-1 samples
+    per epoch whenever ``n % bs != 0``)."""
+    bs = min(batch_size, n)
+    nb = -(-n // bs)
+    out = np.empty((epochs, nb, bs), np.int64)
+    for e in range(epochs):
+        perm = rng.permutation(n)
+        if nb * bs > n:
+            perm = np.concatenate([perm, perm[:nb * bs - n]])
+        out[e] = perm.reshape(nb, bs)
+    return out.reshape(epochs * nb, bs)
+
+
+_TRAIN_FN = None
+
+
+def _trainer():
+    """The one jitted multi-target trainer, hoisted to module level so its
+    jit cache is keyed on shapes — refits with the same (K, n, d, steps)
+    signature reuse the trace instead of recompiling per ensemble."""
+    global _TRAIN_FN
+    if _TRAIN_FN is not None:
+        return _TRAIN_FN
+    import jax
+    import jax.numpy as jnp
+
+    def loss_fn(params, xb, yb):
+        pred = _mlp_apply(params, xb)
+        mape = jnp.mean(jnp.abs(pred - yb) / jnp.maximum(jnp.abs(yb), 1e-3))
+        rmse = jnp.sqrt(jnp.mean((pred - yb) ** 2) + 1e-12)
+        return mape + rmse
+
+    def adam_step(params, opt, xb, yb, lr):
+        g = jax.grad(loss_fn)(params, xb, yb)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, opt["m"], g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_,
+                         opt["v"], g)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps),
+            params, mh, vh)
+        return params, {"m": m, "v": v, "t": t}
+
+    vstep = jax.vmap(adam_step, in_axes=(0, 0, None, 0, None))
+
+    @jax.jit
+    def train(params, opt, Xd, Yd, batches, lr):
+        def body(carry, idx):
+            params, opt = carry
+            return vstep(params, opt, Xd[idx], Yd[:, idx], lr), None
+
+        (params, opt), _ = jax.lax.scan(body, (params, opt), batches)
+        return params, opt
+
+    _TRAIN_FN = train
+    return train
+
+
+def fit_dnn_multi(X: np.ndarray, Y: np.ndarray, *, epochs: int = 400,
+                  batch_size: int = 128, lr: float = 1e-3,
+                  seed: int = 0) -> List["DNNRegressor"]:
+    """Train one MLP head per row of ``Y`` (K targets) against the SHARED
+    feature matrix ``X`` in a single compiled call: init/Adam vmapped over
+    the target axis, epochs driven by one jitted ``lax.scan`` with on-device
+    permutation gathers. Equivalent to K sequential :meth:`DNNRegressor.fit`
+    calls (same init, same minibatch plan) minus K-1 retraces."""
+    import jax
+    import jax.numpy as jnp
+    X = np.asarray(X, np.float64)
+    Y = np.asarray(Y, np.float64)
+    K, n = Y.shape
+    mu, sd = X.mean(0), X.std(0) + 1e-9
+    ys = np.maximum(np.abs(Y).mean(axis=1), 1e-9)        # (K,)
+    Xn = ((X - mu) / sd).astype(np.float32)
+    Yn = (Y / ys[:, None]).astype(np.float32)
+
+    single = _mlp_init(seed, X.shape[1], DNNRegressor.LAYERS)
+    params = jax.tree.map(
+        lambda a: jnp.asarray(np.ascontiguousarray(
+            np.broadcast_to(np.asarray(a), (K,) + a.shape))), single)
+    opt = {"m": jax.tree.map(jnp.zeros_like, params),
+           "v": jax.tree.map(jnp.zeros_like, params),
+           "t": jnp.zeros((K,))}
+    batches = epoch_batches(np.random.default_rng(seed), n, batch_size,
+                            epochs)
+    params, _ = _trainer()(params, opt, jnp.asarray(Xn), jnp.asarray(Yn),
+                           jnp.asarray(batches), jnp.float32(lr))
+
+    models = []
+    for k in range(K):
+        m = DNNRegressor(epochs=epochs, batch_size=batch_size, lr=lr,
+                         seed=seed)
+        m.params = jax.tree.map(lambda a, k=k: a[k], params)
+        m._stats = (mu, sd, float(ys[k]))
+        models.append(m)
+    return models
 
 
 class DNNRegressor:
     """Paper's MLP: dense 128-64-32-16-1 with ReLU, Adam(lr=1e-3), loss =
     MAPE + RMSE (combined, as in §III-C1). Inputs are z-scored and the target
-    scaled by its mean internally."""
+    scaled by its mean internally. ``fit`` is the K=1 case of
+    :func:`fit_dnn_multi`."""
 
     LAYERS = (128, 64, 32, 16, 1)
 
@@ -191,80 +515,15 @@ class DNNRegressor:
         self.params = None
         self._stats = None
 
-    def _init(self, d):
-        import jax
-        import jax.numpy as jnp
-        key = jax.random.PRNGKey(self.seed)
-        sizes = (d,) + self.LAYERS
-        params = []
-        for i in range(len(sizes) - 1):
-            key, k = jax.random.split(key)
-            w = jax.random.normal(k, (sizes[i], sizes[i + 1])) * \
-                jnp.sqrt(2.0 / sizes[i])
-            params.append({"w": w, "b": jnp.zeros(sizes[i + 1])})
-        return params
-
-    @staticmethod
-    def _apply(params, x):
-        import jax.numpy as jnp
-        h = x
-        for i, layer in enumerate(params):
-            h = h @ layer["w"] + layer["b"]
-            if i < len(params) - 1:
-                import jax
-                h = jax.nn.relu(h)
-        return h[..., 0]
-
     def fit(self, X: np.ndarray, y: np.ndarray) -> "DNNRegressor":
-        import jax
-        import jax.numpy as jnp
-        X = np.asarray(X, np.float64)
-        y = np.asarray(y, np.float64)
-        mu, sd = X.mean(0), X.std(0) + 1e-9
-        ys = max(float(np.mean(np.abs(y))), 1e-9)
-        self._stats = (mu, sd, ys)
-        Xn = ((X - mu) / sd).astype(np.float32)
-        yn = (y / ys).astype(np.float32)
-
-        params = self._init(X.shape[1])
-        opt = {"m": jax.tree.map(jnp.zeros_like, params),
-               "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
-
-        def loss_fn(params, xb, yb):
-            pred = self._apply(params, xb)
-            mape = jnp.mean(jnp.abs(pred - yb) / jnp.maximum(jnp.abs(yb), 1e-3))
-            rmse = jnp.sqrt(jnp.mean((pred - yb) ** 2) + 1e-12)
-            return mape + rmse
-
-        @jax.jit
-        def step(params, opt, xb, yb):
-            g = jax.grad(loss_fn)(params, xb, yb)
-            t = opt["t"] + 1
-            b1, b2, eps = 0.9, 0.999, 1e-8
-            m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, opt["m"], g)
-            v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_,
-                             opt["v"], g)
-            mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
-            vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
-            params = jax.tree.map(
-                lambda p, m_, v_: p - self.lr * m_ / (jnp.sqrt(v_) + eps),
-                params, mh, vh)
-            return params, {"m": m, "v": v, "t": t}
-
-        n = len(Xn)
-        rng = np.random.default_rng(self.seed)
-        Xd, yd = jnp.asarray(Xn), jnp.asarray(yn)
-        bs = min(self.batch_size, n)
-        for _ in range(self.epochs):
-            perm = rng.permutation(n)
-            for s in range(0, n - bs + 1, bs):
-                idx = perm[s:s + bs]
-                params, opt = step(params, opt, Xd[idx], yd[idx])
-        self.params = params
+        fitted = fit_dnn_multi(X, np.asarray(y)[None, :], epochs=self.epochs,
+                               batch_size=self.batch_size, lr=self.lr,
+                               seed=self.seed)[0]
+        self.params, self._stats = fitted.params, fitted._stats
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
         mu, sd, ys = self._stats
         Xn = jnp.asarray(((np.asarray(X) - mu) / sd).astype(np.float32))
-        return np.asarray(self._apply(self.params, Xn)) * ys
+        return np.asarray(_mlp_apply(self.params, Xn)) * ys

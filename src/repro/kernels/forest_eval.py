@@ -1,0 +1,138 @@
+"""Packed-forest batch inference: evaluate a whole stacked ``(n_trees,
+n_nodes)`` CART forest over a row block in one launch.
+
+Two backends behind one ``predict``:
+
+  - ``numpy``  — float64 iterative routing, the exact production CPU path
+    (bit-identical per-row vs batched, which ``bench_grid`` relies on);
+  - ``pallas`` — one kernel launch per row block on TPU (float32): the
+    forest arrays sit in VMEM, a ``fori_loop`` bounded by the grown depth
+    routes all trees x rows in lockstep via ``take_along_axis`` gathers.
+
+Both backends return per-tree LEAF VALUES ``(n_trees, n_rows)`` from their
+inner routine; the tree-mean is taken by the shared wrapper in float64, so
+the two paths agree exactly whenever their routing agrees (see
+``tests/test_fit_path.py`` for the bit-equality check on a float32-quantized
+forest).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+DEFAULT_BLOCK_ROWS = 256
+
+_AUTO_BACKEND: Optional[str] = None
+
+
+def _auto_backend() -> str:
+    global _AUTO_BACKEND
+    if _AUTO_BACKEND is None:
+        try:
+            import jax
+            _AUTO_BACKEND = ("pallas" if jax.default_backend() == "tpu"
+                             else "numpy")
+        except Exception:  # pragma: no cover - jax is baked into the image
+            _AUTO_BACKEND = "numpy"
+    return _AUTO_BACKEND
+
+
+def leaf_values_numpy(X, feat, thr, left, right, value) -> np.ndarray:
+    """Route every row through every tree; returns (n_trees, n_rows) leaf
+    values. Comparisons run in the dtype of ``X``/``thr`` as given."""
+    X = np.asarray(X)
+    m = X.shape[0]
+    T = feat.shape[0]
+    nid = np.zeros((T, m), np.int64)
+    cols = np.arange(m)[None, :]
+    while True:
+        F = np.take_along_axis(feat, nid, axis=1).astype(np.int64)
+        live = F >= 0
+        if not live.any():
+            break
+        TH = np.take_along_axis(thr, nid, axis=1)
+        L = np.take_along_axis(left, nid, axis=1).astype(np.int64)
+        R = np.take_along_axis(right, nid, axis=1).astype(np.int64)
+        xv = X[cols, np.maximum(F, 0)]
+        nid = np.where(live, np.where(xv <= TH, L, R), nid)
+    return np.take_along_axis(value, nid, axis=1)
+
+
+def leaf_values_pallas(X, feat, thr, left, right, value, *, depth: int,
+                       block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: Optional[bool] = None) -> np.ndarray:
+    """Pallas kernel: grid over row blocks, full forest per block (float32).
+
+    ``depth`` is the exact number of routing steps (``PackedForest.depth``);
+    leaves self-loop so over-iteration is harmless but wasteful.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    X = np.asarray(X)
+    m, d = X.shape
+    T, N = feat.shape
+    blk = max(1, min(block_rows, m))
+    pad = (-m) % blk
+    Xp = np.concatenate([X, np.zeros((pad, d), X.dtype)]) if pad else X
+
+    def kernel(x_ref, f_ref, t_ref, l_ref, r_ref, v_ref, o_ref):
+        xT = x_ref[...].T                              # (d, blk)
+        fm, tm = f_ref[...], t_ref[...]
+        lm, rm = l_ref[...], r_ref[...]
+
+        def body(_, nid):
+            f = jnp.take_along_axis(fm, nid, axis=1)   # (T, blk)
+            t = jnp.take_along_axis(tm, nid, axis=1)
+            nl = jnp.take_along_axis(lm, nid, axis=1)
+            nr = jnp.take_along_axis(rm, nid, axis=1)
+            xv = jnp.take_along_axis(xT, jnp.maximum(f, 0), axis=0)
+            return jnp.where(f >= 0, jnp.where(xv <= t, nl, nr), nid)
+
+        nid = jax.lax.fori_loop(0, depth, body,
+                                jnp.zeros((T, xT.shape[1]), jnp.int32))
+        o_ref[...] = jnp.take_along_axis(v_ref[...], nid, axis=1)
+
+    full = lambda i: (0, 0)  # noqa: E731 - forest arrays are not blocked
+    out = pl.pallas_call(
+        kernel,
+        grid=(Xp.shape[0] // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((T, N), full),
+            pl.BlockSpec((T, N), full),
+            pl.BlockSpec((T, N), full),
+            pl.BlockSpec((T, N), full),
+            pl.BlockSpec((T, N), full),
+        ],
+        out_specs=pl.BlockSpec((T, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((T, Xp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(Xp, jnp.float32), jnp.asarray(feat, jnp.int32),
+      jnp.asarray(thr, jnp.float32), jnp.asarray(left, jnp.int32),
+      jnp.asarray(right, jnp.int32), jnp.asarray(value, jnp.float32))
+    return np.asarray(out)[:, :m]
+
+
+def predict(X, feat, thr, left, right, value, *, depth: int,
+            backend: str = "auto") -> np.ndarray:
+    """Forest prediction = float64 mean over per-tree leaf values.
+
+    ``backend="auto"`` compiles the Pallas kernel on TPU and falls back to
+    the exact numpy traversal elsewhere (the interpreted kernel is a
+    correctness tool, not a CPU fast path).
+    """
+    if backend == "auto":
+        backend = _auto_backend()
+    if backend == "numpy":
+        vals = leaf_values_numpy(X, feat, thr, left, right, value)
+    elif backend == "pallas":
+        vals = leaf_values_pallas(X, feat, thr, left, right, value,
+                                  depth=depth)
+    else:
+        raise ValueError(f"unknown forest_eval backend {backend!r}")
+    return np.asarray(vals, np.float64).mean(axis=0)

@@ -171,7 +171,8 @@ def test_artifact_roundtrip(small, tmp_path):
     _, _, test, oracle = small
     path = tmp_path / "oracle.pkl"
     manifest = api.save(oracle, path)
-    assert manifest["schema_version"] == 1
+    assert manifest["schema_version"] == 2
+    assert manifest["forest_format"] == "packed-arrays"
     assert manifest["fingerprint"] == api.config_fingerprint(CFG)
 
     loaded = api.load(path, expect_config=CFG)
@@ -202,7 +203,15 @@ def test_artifact_rejects_wrong_schema_and_legacy_pickles(small, tmp_path):
     env["schema_version"] = 999
     with open(path, "wb") as f:
         pickle.dump(env, f)
-    with pytest.raises(api.SchemaVersionError):
+    with pytest.raises(api.SchemaVersionError, match="refit"):
+        api.load(path)
+
+    # a v1-style envelope (node-list era) is refused with a refit hint, not
+    # silently re-packed
+    env["schema_version"] = 1
+    with open(path, "wb") as f:
+        pickle.dump(env, f)
+    with pytest.raises(api.SchemaVersionError, match="refit"):
         api.load(path)
 
     legacy = tmp_path / "legacy.pkl"  # the old ad-hoc (profet, ds) cache

@@ -38,6 +38,16 @@ def test_forest_deterministic_given_seed():
     np.testing.assert_array_equal(p1, p2)
 
 
+def test_forest_per_row_matches_batched_predict():
+    # the vectorized grid path relies on batched == per-row (up to the
+    # last-ulp reassociation of the float64 tree mean)
+    X, y, _ = _linear_data(noise=0.1)
+    m = RandomForestRegressor(n_estimators=8, seed=3).fit(X, y)
+    batched = m.predict(X[:6])
+    rows = np.array([m.predict(X[i:i + 1])[0] for i in range(6)])
+    np.testing.assert_allclose(batched, rows, rtol=1e-12)
+
+
 def test_dnn_fits_linear_well():
     X, y, _ = _linear_data(n=300)
     m = DNNRegressor(epochs=150, seed=0).fit(X, y)
