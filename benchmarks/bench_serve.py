@@ -1,0 +1,102 @@
+"""Fused ``predict_many`` vs the per-request ``predict`` loop on a mixed
+request stream — the serving layer's hot path.
+
+Baseline = one plan + execute round-trip per request (what a naive HTTP
+handler would do). Fused = ONE ``predict_many`` over the same shuffled
+stream: rows dedup per anchor, one ensemble call per (anchor, target) pair,
+two-phase interpolation vectorized per (target, knob). Both run the same
+fitted oracle; results must agree element-wise. Acceptance floor: >= 5x.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve           # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.serve import synthetic_requests
+
+TARGET_SPEEDUP = 5.0
+N_REQUESTS = 500
+
+
+def _fit_oracle(smoke: bool) -> api.LatencyOracle:
+    if smoke:
+        ds = workloads.generate(devices=("T4", "V100"),
+                                models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(members=("linear", "forest"), n_trees=30, seed=0)
+    else:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60"),
+            models=("LeNet5", "AlexNet", "ResNet18", "VGG11", "ResNet50",
+                    "MobileNetV2"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=60, seed=0)
+    return api.LatencyOracle.fit(ds, config=cfg)
+
+
+def _loop_baseline(oracle: api.LatencyOracle, reqs):
+    return [oracle.predict(r) for r in reqs]
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    reqs = synthetic_requests(oracle, n=N_REQUESTS, seed=0)
+
+    # warm both paths once (jax dispatch caches, lazy tree packing) and
+    # assert element-wise agreement of the fused and sequential answers
+    fused = oracle.predict_many(reqs)
+    seq = _loop_baseline(oracle, reqs)
+    # float64 members are exact; the float32 DNN member batches its matmul
+    rtol = 1e-9 if smoke else 1e-5
+    np.testing.assert_allclose(fused.latencies(),
+                               [r.latency_ms for r in seq], rtol=rtol)
+    assert [r.mode for r in fused] == [r.mode for r in seq]
+    assert [r.price_hr for r in fused] == [r.price_hr for r in seq]
+
+    reps = 3
+    t_loop = min(_timed(_loop_baseline, oracle, reqs, reps=reps))
+    t_fused = min(_timed(oracle.predict_many, reqs, reps=reps))
+    speedup = t_loop / t_fused
+    out = {"smoke": smoke, "n_requests": len(reqs),
+           "fused_calls": fused.fused_calls, "rows": fused.rows,
+           "modes": dict(fused.mode_counts),
+           "loop_ms": 1e3 * t_loop, "fused_ms": 1e3 * t_fused,
+           "speedup": speedup, "target_speedup": TARGET_SPEEDUP}
+    from benchmarks import common
+    common.save("serve", out)
+    return {"n_requests": len(reqs), "fused_calls": fused.fused_calls,
+            "loop_ms": out["loop_ms"], "fused_ms": out["fused_ms"],
+            "speedup": speedup}
+
+
+def _timed(fn, *args, reps: int):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    r = run(smoke=smoke)
+    print(f"predict_many: {r['n_requests']} mixed requests -> "
+          f"{r['fused_calls']} fused calls  "
+          f"loop {r['loop_ms']:.1f} ms  fused {r['fused_ms']:.1f} ms  "
+          f"speedup {r['speedup']:.1f}x (target >= {TARGET_SPEEDUP:.0f}x)")
+    if r["speedup"] < TARGET_SPEEDUP:
+        print("FAIL: fused batched prediction under the speedup floor")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

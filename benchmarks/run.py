@@ -19,6 +19,7 @@ BENCHES = [
     ("tab6", "benchmarks.bench_tab6", "Table VI new devices"),
     ("grid", "benchmarks.bench_grid", "predict_grid vectorization speedup"),
     ("fit", "benchmarks.bench_fit", "Profet.fit vectorization speedup"),
+    ("serve", "benchmarks.bench_serve", "fused predict_many vs predict loop"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serving", "Continuous vs wave batching"),

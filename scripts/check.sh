@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full test suite plus the two vectorization smoke
+# Tier-1 gate: the full test suite plus the three vectorization smoke
 # benchmarks — predict_grid (fails under a 5x speedup floor or on
-# divergence from the per-case loop) and Profet.fit (fails under the fit
-# speedup floor or on MAPE-parity loss vs the pre-PR reference path).
+# divergence from the per-case loop), Profet.fit (fails under the fit
+# speedup floor or on MAPE-parity loss vs the pre-PR reference path), and
+# the serving hot path (fused predict_many vs the sequential predict loop
+# on a mixed 500-request stream: 5x floor, element-wise equality asserted).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -10,3 +12,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python -m benchmarks.bench_grid --smoke
 python -m benchmarks.bench_fit --smoke
+python -m benchmarks.bench_serve --smoke

@@ -13,23 +13,34 @@ future serving layer) goes through:
             workload=api.Workload("ResNet50", 64, 128)))
     r.latency_ms, r.cost_usd(steps=50_000)
 
+Batched querying (``oracle.predict_many``) answers a heterogeneous request
+stream with one fused ensemble call per device pair; plan-only access is
+``oracle.plan`` -> ``PredictPlan`` -> ``oracle.execute`` ->
+``BatchPredictResult``. ``repro.serve.LatencyService`` adds wave
+microbatching + caching on top.
+
 See ``src/repro/api/README.md`` for the full surface.
 """
 from repro.api.artifacts import (ArtifactError, FingerprintMismatchError,
                                  SchemaVersionError, config_fingerprint,
                                  fit_or_load, load, save)
 from repro.api.oracle import LatencyOracle
+from repro.api.planner import plan_request, request_fingerprint
 from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
                              MODE_MEASURED, MODE_TWO_PHASE, ApiError,
-                             GridRequest, GridResult, PredictRequest,
-                             PredictResult, UnknownDeviceError,
-                             UnsupportedRequestError, Workload)
+                             BatchPredictResult, GridRequest, GridResult,
+                             InvalidWorkloadError, PredictPlan,
+                             PredictRequest, PredictResult, ServiceStats,
+                             UnknownDeviceError, UnsupportedRequestError,
+                             Workload)
 
 __all__ = [
-    "ApiError", "ArtifactError", "FingerprintMismatchError",
-    "GridRequest", "GridResult", "KNOB_BATCH", "KNOB_PIXEL",
-    "LatencyOracle", "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED",
-    "MODE_TWO_PHASE", "PredictRequest", "PredictResult",
-    "SchemaVersionError", "UnknownDeviceError", "UnsupportedRequestError",
-    "Workload", "config_fingerprint", "fit_or_load", "load", "save",
+    "ApiError", "ArtifactError", "BatchPredictResult",
+    "FingerprintMismatchError", "GridRequest", "GridResult",
+    "InvalidWorkloadError", "KNOB_BATCH", "KNOB_PIXEL", "LatencyOracle",
+    "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED", "MODE_TWO_PHASE",
+    "PredictPlan", "PredictRequest", "PredictResult", "SchemaVersionError",
+    "ServiceStats", "UnknownDeviceError", "UnsupportedRequestError",
+    "Workload", "config_fingerprint", "fit_or_load", "load",
+    "plan_request", "request_fingerprint", "save",
 ]

@@ -1,0 +1,136 @@
+"""Fused batch executor: ``Sequence[PredictPlan]`` -> ``BatchPredictResult``.
+
+Stages 2+3 of the plan -> batch -> execute pipeline. A heterogeneous plan
+list (measured + cross + two-phase, any mix of device pairs) is answered
+with one ``MedianEnsemble.predict`` call per (anchor, target) pair:
+
+  1. **gather** — every phase-1 row any plan needs is registered per anchor
+     and deduplicated by (profile identity, case): a cross plan contributes
+     its own row, a two-phase plan contributes its oracle-chosen min/max
+     config rows.  Grid sweeps and repeated requests collapse onto shared
+     rows for free (the dataset hands out one profile dict per case).
+  2. **batch** — ONE feature matrix per anchor over its deduped rows, then
+     per (anchor, target) group a single fused ensemble call on the row
+     slice that group needs.
+  3. **execute** — latencies scatter back to plans; two-phase plans
+     interpolate vectorized, one ``PolyScaler.predict`` per (target, knob)
+     group over the whole value/min/max arrays.
+
+The numpy forest backend routes rows independently and the linear/poly
+members are elementwise, so fused answers match the one-request path to
+float precision (exactly, for the float64 members) — ``benchmarks/
+bench_serve.py`` asserts it on every run.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.types import (BatchPredictResult, MODE_CROSS, MODE_MEASURED,
+                             MODE_TWO_PHASE, PredictPlan, PredictResult,
+                             UnsupportedRequestError)
+
+
+def _result(plan: PredictPlan, latency_ms: float) -> PredictResult:
+    return PredictResult(latency_ms=float(latency_ms),
+                         anchor=plan.anchor, target=plan.target,
+                         workload=plan.workload, mode=plan.mode,
+                         price_hr=plan.price_hr)
+
+
+class _RowRegistry:
+    """Deduplicated phase-1 rows, per anchor, plus the per-(anchor, target)
+    row groups that become one fused ensemble call each."""
+
+    def __init__(self):
+        self.index: Dict[str, Dict[tuple, int]] = {}    # anchor -> key -> row
+        self.profiles: Dict[str, list] = {}
+        self.cases: Dict[str, list] = {}
+        self.groups: Dict[Tuple[str, str], list] = {}   # pair -> ordered keys
+        self._in_group: Dict[Tuple[str, str], set] = {}
+
+    def add(self, anchor: str, target: str, profile, case) -> tuple:
+        """Register one needed row; returns its dedup key."""
+        key = (id(profile), case)
+        rows = self.index.setdefault(anchor, {})
+        if key not in rows:
+            rows[key] = len(rows)
+            self.profiles.setdefault(anchor, []).append(profile)
+            self.cases.setdefault(anchor, []).append(case)
+        pair = (anchor, target)
+        seen = self._in_group.setdefault(pair, set())
+        if key not in seen:
+            seen.add(key)
+            self.groups.setdefault(pair, []).append(key)
+        return key
+
+    @property
+    def n_rows(self) -> int:
+        return sum(len(r) for r in self.index.values())
+
+
+def execute_plans(profet, plans: Sequence[PredictPlan]) -> BatchPredictResult:
+    """Answer every plan with the minimum number of fused ensemble calls
+    (one per (anchor, target) pair present in the batch)."""
+    n = len(plans)
+    lat = np.full(n, np.nan)
+    reg = _RowRegistry()
+    cross_key: List[tuple] = [None] * n
+    tp_keys: List[tuple] = [None] * n
+    mode_counts: Dict[str, int] = {}
+
+    for i, plan in enumerate(plans):
+        mode_counts[plan.mode] = mode_counts.get(plan.mode, 0) + 1
+        if plan.mode == MODE_MEASURED:
+            lat[i] = plan.measured_ms
+        elif plan.mode == MODE_CROSS:
+            cross_key[i] = reg.add(plan.anchor, plan.target, plan.profile,
+                                   plan.workload.case)
+        elif plan.mode == MODE_TWO_PHASE:
+            tp_keys[i] = (
+                reg.add(plan.anchor, plan.target, plan.profile_min,
+                        plan.case_min),
+                reg.add(plan.anchor, plan.target, plan.profile_max,
+                        plan.case_max))
+        else:
+            raise UnsupportedRequestError(
+                f"plan with unresolved mode {plan.mode!r}")
+
+    # one feature matrix per anchor over its deduped rows
+    X = {anchor: profet.feature_matrix(reg.profiles[anchor],
+                                       reg.cases[anchor])
+         for anchor in reg.index}
+
+    # one fused ensemble call per (anchor, target) group
+    fused = 0
+    phase1: Dict[Tuple[str, str, tuple], float] = {}
+    for (anchor, target), keys in reg.groups.items():
+        idx = np.array([reg.index[anchor][k] for k in keys])
+        pred = profet.predict_cross_matrix(anchor, target, X[anchor][idx])
+        fused += 1
+        for k, v in zip(keys, pred):
+            phase1[(anchor, target, k)] = float(v)
+
+    # scatter cross answers; collect two-phase groups for one vectorized
+    # interpolation per (target, knob)
+    tp_groups: Dict[Tuple[str, str], list] = {}
+    for i, plan in enumerate(plans):
+        if plan.mode == MODE_CROSS:
+            lat[i] = phase1[(plan.anchor, plan.target, cross_key[i])]
+        elif plan.mode == MODE_TWO_PHASE:
+            k_min, k_max = tp_keys[i]
+            tp_groups.setdefault((plan.target, plan.request.knob), []).append(
+                (i, plan.knob_value,
+                 phase1[(plan.anchor, plan.target, k_min)],
+                 phase1[(plan.anchor, plan.target, k_max)]))
+    for (target, knob), rows in tp_groups.items():
+        ii = np.array([r[0] for r in rows])
+        vals = np.array([r[1] for r in rows])
+        t_min = np.array([r[2] for r in rows])
+        t_max = np.array([r[3] for r in rows])
+        lat[ii] = profet.predict_knob(target, knob, vals, t_min, t_max)
+
+    results = tuple(_result(p, lat[i]) for i, p in enumerate(plans))
+    return BatchPredictResult(results=results, fused_calls=fused,
+                              rows=reg.n_rows, mode_counts=mode_counts)

@@ -1,23 +1,29 @@
 """``LatencyOracle`` — the single public prediction facade.
 
 Wraps a fitted :class:`repro.core.predictor.Profet` and the offline
-:class:`repro.core.workloads.Dataset` it was fit on, and routes typed
-requests (``repro.api.types``) to the right internal path:
+:class:`repro.core.workloads.Dataset` it was fit on. Prediction is a
+three-stage plan -> batch -> execute pipeline:
 
-  - ``measured``  target == anchor and the case is in the offline grid
-  - ``cross``     phase-1 cross-instance prediction from an exact-case profile
-  - ``two_phase`` phase-1 on the min/max knob configs (chosen by the oracle,
-                  not the caller) + phase-2 polynomial interpolation
+  - **plan** (``repro.api.planner``): each typed ``PredictRequest`` resolves
+    to a pure ``PredictPlan`` — final mode (``measured`` / ``cross`` /
+    ``two_phase``), anchor profile rows, oracle-chosen min/max configs, and
+    the target's catalog price — with every routing error raised here, per
+    request, before the model is touched.
+  - **batch + execute** (``repro.api.executor``): heterogeneous plans are
+    grouped by (anchor, target) and each group is answered with ONE feature
+    matrix slice and ONE ``MedianEnsemble.predict`` call; two-phase plans
+    ride their min/max rows in the same fused call and interpolate
+    vectorized afterwards.
 
-``predict_grid`` is the vectorized hot path: one feature matrix per request,
-one ``MedianEnsemble.predict`` call per (anchor, target) pair — not one per
-grid cell (see ``benchmarks/bench_grid.py`` for the measured speedup).
+``predict_many`` is the primary entry point; ``predict`` and
+``predict_grid`` are thin wrappers over the same engine — there is no
+separate per-request routing path left. ``repro.serve.LatencyService``
+adds wave microbatching + a prediction cache on top.
 
-``fit`` is vectorized the same way (``benchmarks/bench_fit.py``): per anchor
-one shared feature matrix, one level-synchronously grown packed forest per
+``fit`` is vectorized too (``benchmarks/bench_fit.py``): per anchor one
+shared feature matrix, one level-synchronously grown packed forest per
 target, and ALL targets' DNN heads trained in a single vmapped+scanned
-compiled call — D-1 ensembles per anchor cost one forest pass and one jit
-trace, not D-1 recursions and retraces.
+compiled call.
 """
 from __future__ import annotations
 
@@ -25,19 +31,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import devices as device_catalog
 from repro.core import workloads
 from repro.core.predictor import Profet, ProfetConfig
-from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
-                             MODE_MEASURED, MODE_TWO_PHASE, GridRequest,
-                             GridResult, PredictRequest, PredictResult,
-                             UnknownDeviceError, UnsupportedRequestError,
-                             Workload)
-
-
-def _price(name: str) -> float:
-    dev = device_catalog.CATALOG.get(name)
-    return dev.price_hr if dev is not None else float("nan")
+from repro.api import planner as planner_mod
+from repro.api.executor import execute_plans
+from repro.api.types import (BatchPredictResult, MODE_MEASURED, GridRequest,
+                             GridResult, PredictPlan, PredictRequest,
+                             PredictResult, UnknownDeviceError, Workload)
 
 
 class LatencyOracle:
@@ -96,56 +96,30 @@ class LatencyOracle:
             [self.dataset.profile(anchor, c) for c in cases], cases)
 
     # ------------------------------------------------------------------
-    # prediction
+    # plan -> batch -> execute
     # ------------------------------------------------------------------
+    def plan(self, req: PredictRequest) -> PredictPlan:
+        """Stage 1 only: resolve one request to a pure execution plan.
+        All routing/validation errors (unknown device, unroutable request,
+        missing catalog price) are raised here."""
+        return planner_mod.plan_request(req, self.dataset,
+                                        set(self.profet.cross))
+
+    def execute(self, plans: Sequence[PredictPlan]) -> BatchPredictResult:
+        """Stages 2+3: answer already-planned requests with one fused
+        ensemble call per (anchor, target) pair in the batch."""
+        return execute_plans(self.profet, plans)
+
+    def predict_many(self,
+                     reqs: Sequence[PredictRequest]) -> BatchPredictResult:
+        """Plan and execute a heterogeneous request batch. Results are in
+        request order and element-wise identical to per-request
+        ``predict`` (``benchmarks/bench_serve.py`` asserts it)."""
+        return self.execute([self.plan(r) for r in reqs])
+
     def predict(self, req: PredictRequest) -> PredictResult:
-        """Route one typed request (see module docstring for the modes)."""
-        w = req.workload
-        case = w.case
-        if req.anchor not in self.dataset.measurements:
-            raise UnknownDeviceError(
-                f"unknown anchor {req.anchor!r}; available: "
-                f"{', '.join(sorted(self.dataset.measurements))}")
-        measured = self.dataset.measurements[req.anchor]
-
-        if req.target == req.anchor:
-            if case not in measured:
-                raise UnsupportedRequestError(
-                    f"target == anchor {req.anchor!r} but case {case} was "
-                    "never measured on it")
-            return self._result(self.dataset.latency(req.anchor, case),
-                                req, MODE_MEASURED)
-
-        self._check_pair(req.anchor, req.target)
-        mode = req.mode
-        if mode == MODE_AUTO:
-            has_profile = req.profile is not None or case in measured
-            mode = MODE_CROSS if has_profile else MODE_TWO_PHASE
-
-        if mode == MODE_CROSS:
-            profile = req.profile
-            if profile is None:
-                if case not in measured:
-                    raise UnsupportedRequestError(
-                        f"mode=cross needs a profile of {case} on "
-                        f"{req.anchor!r} (not in the offline dataset and none "
-                        "was supplied)")
-                profile = self.dataset.profile(req.anchor, case)
-            lat = self.profet.predict_cross(req.anchor, req.target,
-                                            dict(profile), case)
-            return self._result(lat, req, MODE_CROSS)
-
-        if mode == MODE_TWO_PHASE:
-            lo, hi = self._minmax_or_raise(w, req.knob, req.anchor)
-            value = w.batch if req.knob == KNOB_BATCH else w.pix
-            lat = self.profet.predict_two_phase(
-                req.anchor, req.target, req.knob, value,
-                self.dataset.profile(req.anchor, lo),
-                self.dataset.profile(req.anchor, hi),
-                case_min=lo, case_max=hi)
-            return self._result(float(lat), req, MODE_TWO_PHASE)
-
-        raise UnsupportedRequestError(f"unknown mode {req.mode!r}")
+        """One request — a single-element ``predict_many``."""
+        return self.predict_many([req]).results[0]
 
     def predict_cases(self, anchor: str, target: str,
                       cases: Sequence) -> np.ndarray:
@@ -163,8 +137,9 @@ class LatencyOracle:
                                               t_min, t_max))
 
     def predict_grid(self, req: GridRequest) -> GridResult:
-        """Vectorized sweep: ONE feature matrix for every feasible cell and
-        ONE ensemble call per target device."""
+        """Vectorized sweep: the feasible cells of every target become one
+        ``predict_many`` batch — one shared anchor feature matrix (rows
+        dedup across targets) and one fused ensemble call per target."""
         if req.anchor not in self.dataset.measurements:
             raise UnknownDeviceError(
                 f"anchor {req.anchor!r} not in the oracle's dataset; "
@@ -181,17 +156,14 @@ class LatencyOracle:
                       np.nan)
         if cells:
             cases = [c for _, _, c in cells]
-            X = self.feature_matrix(req.anchor, cases)
             jj = np.array([j for j, _, _ in cells])
             kk = np.array([k for _, k, _ in cells])
-            for i, target in enumerate(req.targets):
-                if target == req.anchor:
-                    lat = np.array([self.dataset.latency(req.anchor, c)
-                                    for c in cases])
-                else:
-                    lat = self.profet.predict_cross_matrix(req.anchor,
-                                                           target, X)
-                out[i, jj, kk] = lat
+            batch = self.predict_many(
+                [PredictRequest(req.anchor, t, Workload.from_case(c))
+                 for t in req.targets for c in cases])
+            lat = batch.latencies().reshape(len(req.targets), len(cases))
+            for i in range(len(req.targets)):
+                out[i, jj, kk] = lat[i]
         return GridResult(request=req, latency_ms=out)
 
     # ------------------------------------------------------------------
@@ -203,18 +175,25 @@ class LatencyOracle:
                targets: Optional[Sequence[str]] = None) -> List[PredictResult]:
         """Latency on every reachable target from one anchor profile (the
         paper's Fig-3 scenario); price the rows via ``.cost_usd(steps)``.
-        The anchor's own row uses ``measured_ms`` when the client supplies
-        it."""
-        results = []
-        for target in (targets or (anchor,) + self.targets_from(anchor)):
+        The whole candidate sweep is answered by ONE ``predict_many``
+        batch. The anchor's own row uses ``measured_ms`` when the client
+        supplies it."""
+        order = list(targets or (anchor,) + self.targets_from(anchor))
+        rows: Dict[int, PredictResult] = {}
+        reqs, req_pos = [], []
+        for pos, target in enumerate(order):
             if target == anchor and measured_ms is not None:
-                results.append(self._result(
-                    measured_ms,
-                    PredictRequest(anchor, target, workload), MODE_MEASURED))
+                rows[pos] = PredictResult(
+                    latency_ms=float(measured_ms), anchor=anchor,
+                    target=target, workload=workload, mode=MODE_MEASURED,
+                    price_hr=planner_mod.resolve_price(target))
                 continue
-            results.append(self.predict(PredictRequest(
-                anchor, target, workload, profile=profile)))
-        return results
+            reqs.append(PredictRequest(anchor, target, workload,
+                                       profile=profile))
+            req_pos.append(pos)
+        for pos, res in zip(req_pos, self.predict_many(reqs)):
+            rows[pos] = res
+        return [rows[pos] for pos in range(len(order))]
 
     # ------------------------------------------------------------------
     # helpers
@@ -224,27 +203,8 @@ class LatencyOracle:
         """The (lo, hi) anchor configs two-phase interpolation rests on:
         the workload with its ``knob`` swung to the grid min/max. None if
         either config was never measured on the anchor."""
-        m = workload.model
-        if knob == KNOB_BATCH:
-            lo = (m, min(workloads.BATCHES), workload.pix)
-            hi = (m, max(workloads.BATCHES), workload.pix)
-        elif knob == KNOB_PIXEL:
-            lo = (m, workload.batch, min(workloads.PIXELS))
-            hi = (m, workload.batch, max(workloads.PIXELS))
-        else:
-            raise UnsupportedRequestError(f"unknown knob {knob!r}")
-        measured = self.dataset.measurements.get(anchor, {})
-        if lo in measured and hi in measured:
-            return lo, hi
-        return None
-
-    def _minmax_or_raise(self, workload, knob, anchor):
-        pair = self.minmax_cases(workload, knob, anchor)
-        if pair is None:
-            raise UnsupportedRequestError(
-                f"two-phase needs the {knob} min/max configs of "
-                f"{workload.model} measured on {anchor!r}")
-        return pair
+        return planner_mod.minmax_cases(
+            workload, knob, self.dataset.measurements.get(anchor, {}))
 
     def _check_pair(self, anchor: str, target: str) -> None:
         if (anchor, target) not in self.profet.cross:
@@ -252,9 +212,3 @@ class LatencyOracle:
             raise UnknownDeviceError(
                 f"no trained model for pair ({anchor!r} -> {target!r}); "
                 f"trained anchors: {', '.join(trained) or 'none'}")
-
-    @staticmethod
-    def _result(latency_ms, req: PredictRequest, mode: str) -> PredictResult:
-        return PredictResult(latency_ms=float(latency_ms), anchor=req.anchor,
-                             target=req.target, workload=req.workload,
-                             mode=mode, price_hr=_price(req.target))

@@ -1,0 +1,142 @@
+"""Pure request planner: ``PredictRequest`` -> ``PredictPlan``.
+
+Stage 1 of the plan -> batch -> execute pipeline behind ``LatencyOracle``.
+Planning touches only plain data — the offline dataset (for anchor profiles
+and the measured-case index), the set of trained ``(anchor, target)`` pairs,
+and the device catalog (for prices) — never the fitted model. That keeps it
+unit-testable with a stub dataset and lets a serving layer plan each request
+individually (catching per-request ``ApiError``) before handing the valid
+plans to one fused executor call.
+
+All routing validation happens here, in a fixed order that matches the
+pre-refactor ``LatencyOracle.predict``:
+
+  1. anchor must be in the dataset             -> ``UnknownDeviceError``
+  2. target == anchor needs a measured case    -> ``UnsupportedRequestError``
+  3. (anchor, target) must be a trained pair   -> ``UnknownDeviceError``
+  4. mode resolution (``auto`` routes on profile availability)
+  5. cross needs an exact-case profile         -> ``UnsupportedRequestError``
+     two-phase needs measured min/max configs  -> ``UnsupportedRequestError``
+  6. the target must have a catalog price      -> ``UnknownDeviceError``
+     (checked at plan time so cost columns can never be silently NaN)
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Set, Tuple
+
+from repro.core import devices as device_catalog
+from repro.core import workloads
+from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
+                             MODE_MEASURED, MODE_TWO_PHASE, PredictPlan,
+                             PredictRequest, UnknownDeviceError,
+                             UnsupportedRequestError, Workload)
+
+Case = Tuple[str, int, int]
+
+
+def resolve_price(name: str) -> float:
+    """Hourly price from the device catalog; raises instead of returning
+    NaN so a missing catalog entry surfaces at plan time, not as a silent
+    NaN cost column."""
+    dev = device_catalog.CATALOG.get(name)
+    if dev is None:
+        raise UnknownDeviceError(
+            f"device {name!r} has no catalog entry (price unknown); "
+            f"catalog: {', '.join(sorted(device_catalog.CATALOG))}")
+    return dev.price_hr
+
+
+def minmax_cases(workload: Workload, knob: str,
+                 measured: Mapping[Case, object]) -> Optional[Tuple[Case, Case]]:
+    """The (lo, hi) anchor configs two-phase interpolation rests on: the
+    workload with ``knob`` swung to the grid min/max. ``None`` if either
+    config is missing from ``measured`` (the anchor's case index)."""
+    m = workload.model
+    if knob == KNOB_BATCH:
+        lo = (m, min(workloads.BATCHES), workload.pix)
+        hi = (m, max(workloads.BATCHES), workload.pix)
+    elif knob == KNOB_PIXEL:
+        lo = (m, workload.batch, min(workloads.PIXELS))
+        hi = (m, workload.batch, max(workloads.PIXELS))
+    else:
+        raise UnsupportedRequestError(f"unknown knob {knob!r}")
+    if lo in measured and hi in measured:
+        return lo, hi
+    return None
+
+
+def request_fingerprint(req: PredictRequest) -> tuple:
+    """Hashable identity of a request's *content* — the serving cache key.
+    Two requests with equal fields (including an equal-by-value client
+    profile) map to the same fingerprint."""
+    prof = (None if req.profile is None
+            else tuple(sorted(req.profile.items())))
+    return (req.anchor, req.target, req.workload.case, req.mode, req.knob,
+            prof)
+
+
+def plan_request(req: PredictRequest, dataset,
+                 trained_pairs: Set[Tuple[str, str]]) -> PredictPlan:
+    """Resolve one request to an executable plan (see module docstring for
+    the validation order). ``dataset`` is a ``workloads.Dataset``;
+    ``trained_pairs`` is the oracle's fitted (anchor, target) set."""
+    case = req.workload.case
+    if req.anchor not in dataset.measurements:
+        raise UnknownDeviceError(
+            f"unknown anchor {req.anchor!r}; available: "
+            f"{', '.join(sorted(dataset.measurements))}")
+    measured = dataset.measurements[req.anchor]
+
+    if req.target == req.anchor:
+        if case not in measured:
+            raise UnsupportedRequestError(
+                f"target == anchor {req.anchor!r} but case {case} was "
+                "never measured on it")
+        return PredictPlan(request=req, mode=MODE_MEASURED,
+                           price_hr=resolve_price(req.target),
+                           measured_ms=float(dataset.latency(req.anchor,
+                                                             case)))
+
+    if (req.anchor, req.target) not in trained_pairs:
+        trained = sorted({a for a, _ in trained_pairs})
+        raise UnknownDeviceError(
+            f"no trained model for pair ({req.anchor!r} -> {req.target!r}); "
+            f"trained anchors: {', '.join(trained) or 'none'}")
+
+    mode = req.mode
+    if mode == MODE_AUTO:
+        has_profile = req.profile is not None or case in measured
+        mode = MODE_CROSS if has_profile else MODE_TWO_PHASE
+
+    if mode == MODE_CROSS:
+        profile = req.profile
+        if profile is None:
+            if case not in measured:
+                raise UnsupportedRequestError(
+                    f"mode=cross needs a profile of {case} on "
+                    f"{req.anchor!r} (not in the offline dataset and none "
+                    "was supplied)")
+            profile = dataset.profile(req.anchor, case)
+        return PredictPlan(request=req, mode=MODE_CROSS,
+                           price_hr=resolve_price(req.target),
+                           profile=profile)
+
+    if mode == MODE_TWO_PHASE:
+        pair = minmax_cases(req.workload, req.knob, measured)
+        if pair is None:
+            raise UnsupportedRequestError(
+                f"two-phase needs the {req.knob} min/max configs of "
+                f"{req.workload.model} measured on {req.anchor!r}")
+        lo, hi = pair
+        return PredictPlan(request=req, mode=MODE_TWO_PHASE,
+                           price_hr=resolve_price(req.target),
+                           case_min=lo, case_max=hi,
+                           profile_min=dataset.profile(req.anchor, lo),
+                           profile_max=dataset.profile(req.anchor, hi))
+
+    raise UnsupportedRequestError(f"unknown mode {req.mode!r}")
+
+
+def plan_many(reqs: Sequence[PredictRequest], dataset,
+              trained_pairs: Set[Tuple[str, str]]) -> list:
+    return [plan_request(r, dataset, trained_pairs) for r in reqs]

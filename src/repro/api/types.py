@@ -9,6 +9,7 @@ unchanged.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, Iterator, Mapping, Optional, Tuple
 
 import numpy as np
@@ -37,12 +38,32 @@ class UnsupportedRequestError(ApiError):
     min/max anchor configs to interpolate from."""
 
 
+class InvalidWorkloadError(ApiError, ValueError):
+    """A ``Workload`` that can never be predicted (empty model name,
+    non-positive batch/pixel) — rejected at construction, not deep inside
+    feature building."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """One CNN training configuration — the paper's (M, B, P) cell."""
     model: str
     batch: int
     pix: int
+
+    def __post_init__(self):
+        if not self.model or not isinstance(self.model, str):
+            raise InvalidWorkloadError(
+                f"Workload.model must be a non-empty string, got "
+                f"{self.model!r}")
+        if self.batch < 1:
+            raise InvalidWorkloadError(
+                f"Workload.batch must be >= 1, got {self.batch!r} "
+                f"(model {self.model!r})")
+        if self.pix < 1:
+            raise InvalidWorkloadError(
+                f"Workload.pix must be >= 1, got {self.pix!r} "
+                f"(model {self.model!r})")
 
     @property
     def case(self) -> Tuple[str, int, int]:
@@ -85,6 +106,112 @@ class PredictResult:
     def cost_usd(self, steps: int) -> float:
         """Cost of ``steps`` training steps at the predicted ms/batch."""
         return self.latency_ms / 1e3 / 3600.0 * steps * self.price_hr
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictPlan:
+    """A fully resolved execution plan for ONE request — the output of the
+    pure planner (``repro.api.planner``) and the unit the batch executor
+    fuses over.
+
+    Everything the executor needs is resolved here: the final mode, the
+    target's price, the measured latency (``measured`` plans), the anchor
+    profile row (``cross`` plans), or the oracle-chosen min/max configs and
+    their profiles (``two_phase`` plans). The executor never touches the
+    dataset — plans are the complete hand-off.
+    """
+    request: PredictRequest
+    mode: str                 # resolved: measured | cross | two_phase
+    price_hr: float
+    measured_ms: Optional[float] = None
+    profile: Optional[Mapping[str, float]] = None          # cross
+    case_min: Optional[Tuple[str, int, int]] = None        # two_phase
+    case_max: Optional[Tuple[str, int, int]] = None
+    profile_min: Optional[Mapping[str, float]] = None
+    profile_max: Optional[Mapping[str, float]] = None
+
+    @property
+    def anchor(self) -> str:
+        return self.request.anchor
+
+    @property
+    def target(self) -> str:
+        return self.request.target
+
+    @property
+    def workload(self) -> Workload:
+        return self.request.workload
+
+    @property
+    def knob_value(self) -> float:
+        w = self.request.workload
+        return float(w.batch if self.request.knob == KNOB_BATCH else w.pix)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPredictResult:
+    """Results of one fused ``predict_many`` execution, in request order,
+    plus the batching telemetry the serving layer reports."""
+    results: Tuple[PredictResult, ...]
+    fused_calls: int          # MedianEnsemble.predict invocations
+    rows: int                 # deduped phase-1 feature rows evaluated
+    mode_counts: Mapping[str, int]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i) -> PredictResult:
+        return self.results[i]
+
+    def __iter__(self) -> Iterator[PredictResult]:
+        return iter(self.results)
+
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency_ms for r in self.results])
+
+
+# p50/p99 are computed over a bounded rolling window so a long-lived
+# service neither grows without bound nor slows its stats down; counters
+# (requests, cache_hits, ...) remain exact lifetime totals.
+LATENCY_WINDOW = 65536
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Per-service counters of ``repro.serve.LatencyService`` (mutable —
+    the service updates it wave by wave)."""
+    requests: int = 0
+    waves: int = 0
+    fused_calls: int = 0
+    cache_hits: int = 0
+    errors: int = 0
+    wall_s: float = 0.0
+    latencies_ms: "deque" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+
+    def _pct(self, q: float) -> float:
+        return float(np.percentile(self.latencies_ms, q)) \
+            if self.latencies_ms else float("nan")
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pct(50.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return self._pct(99.0)
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.wall_s if self.wall_s else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"requests": self.requests, "waves": self.waves,
+                "fused_calls": self.fused_calls,
+                "cache_hits": self.cache_hits, "errors": self.errors,
+                "wall_s": self.wall_s, "p50_ms": self.p50_ms,
+                "p99_ms": self.p99_ms,
+                "requests_per_s": self.requests_per_s}
 
 
 @dataclasses.dataclass(frozen=True)

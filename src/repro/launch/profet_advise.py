@@ -9,7 +9,9 @@ The oracle is fit on the offline workload grid and persisted through the
 versioned ``repro.api`` artifact store (refitting three regressors x 12
 device pairs takes ~1 min). The artifact carries a ProfetConfig fingerprint,
 so rerunning with different ``--epochs``/``--seed`` refits instead of
-silently reusing a stale cache.
+silently reusing a stale cache. The candidate sweep is answered through the
+oracle's batched plan -> execute engine (``predict_many``): one fused
+ensemble call per device pair, not one round-trip per candidate.
 """
 import argparse
 import pathlib
@@ -66,7 +68,9 @@ def main(argv=None):
 
     fastest = min(rows, key=lambda r: r.latency_ms)
     cheapest = min(rows, key=lambda r: r.cost_usd(args.steps))
-    print(f"\nfastest:  {fastest.target} ({fastest.latency_ms:.1f} ms/batch)")
+    print(f"\n({len(rows) - 1} candidates answered through one fused "
+          f"predict_many batch)")
+    print(f"fastest:  {fastest.target} ({fastest.latency_ms:.1f} ms/batch)")
     print(f"cheapest: {cheapest.target} "
           f"(${cheapest.cost_usd(args.steps):.4f} for {args.steps} steps)")
     return 0

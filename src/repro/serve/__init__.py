@@ -1,0 +1,22 @@
+"""``repro.serve`` — serving front-ends.
+
+  - ``LatencyService`` / ``ServiceRequest`` / ``ServiceStats``: wave-based
+    microbatching + LRU-cached PROFET latency prediction over
+    ``repro.api.LatencyOracle`` (this package's prediction product);
+  - ``Engine``: the token-serving engine for the model zoo
+    (``repro.serve.engine``; imported lazily — it pulls in jax + the model
+    stack).
+"""
+from repro.api.types import ServiceStats
+from repro.serve.latency_service import (LatencyService, ServiceRequest,
+                                         synthetic_requests)
+
+__all__ = ["Engine", "LatencyService", "ServiceRequest", "ServiceStats",
+           "synthetic_requests"]
+
+
+def __getattr__(name):
+    if name == "Engine":
+        from repro.serve.engine import Engine
+        return Engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

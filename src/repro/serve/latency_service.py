@@ -1,0 +1,182 @@
+"""Wave-based microbatching front-end over ``repro.api.LatencyOracle``.
+
+The latency-prediction sibling of the token engine in ``serve/engine.py``:
+requests queue up, a *wave* of up to ``max_wave`` is admitted, the wave is
+answered with the minimum number of fused ensemble calls (via the oracle's
+plan -> batch -> execute pipeline), and completed requests carry their
+result or a typed per-request error. Mixed traffic — measured, cross, and
+two-phase requests over any set of device pairs — shares one execution
+engine, so a wave costs one ``MedianEnsemble.predict`` per device pair
+present, not one Python round-trip per request.
+
+On top of the executor the service adds:
+
+  - a **fingerprint-keyed LRU cache**: a request whose content (anchor,
+    target, workload, mode, knob, profile-by-value) was answered before is
+    completed without planning or executing anything;
+  - **per-request error isolation**: planning happens per request, so one
+    unroutable request (unknown device, off-catalog price, no min/max
+    configs) marks only itself failed — the rest of the wave executes;
+  - **``ServiceStats``**: requests, waves, fused calls, cache hits, errors,
+    wall time, and p50/p99 per-request service latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.api.oracle import LatencyOracle
+from repro.api.planner import minmax_cases, request_fingerprint
+from repro.api.types import (ApiError, KNOB_BATCH, KNOB_PIXEL, PredictRequest,
+                             PredictResult, ServiceStats, Workload)
+
+_MISS = object()
+
+
+@dataclasses.dataclass
+class ServiceRequest:
+    """One in-flight prediction request; ``result`` XOR ``error`` is set
+    when ``done``."""
+    uid: int
+    request: PredictRequest
+    t_submit: float = 0.0
+    # filled by the service
+    result: Optional[PredictResult] = None
+    error: Optional[ApiError] = None
+    done: bool = False
+    t_finish: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        """Service latency (queue + execute), not the predicted latency."""
+        return 1e3 * (self.t_finish - self.t_submit)
+
+
+class LatencyService:
+    """Queue -> admit wave -> fused execute -> complete."""
+
+    def __init__(self, oracle: LatencyOracle, *, max_wave: int = 64,
+                 cache_size: int = 4096):
+        self.oracle = oracle
+        self.max_wave = int(max_wave)
+        self.cache_size = int(cache_size)
+        self.queue: List[ServiceRequest] = []
+        self.finished: List[ServiceRequest] = []
+        self.stats = ServiceStats()
+        self._cache: "OrderedDict[tuple, PredictResult]" = OrderedDict()
+        self._uid = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, request: PredictRequest) -> ServiceRequest:
+        sr = ServiceRequest(uid=self._uid, request=request,
+                            t_submit=time.perf_counter())
+        self._uid += 1
+        self.queue.append(sr)
+        return sr
+
+    # ------------------------------------------------------------------
+    def _complete(self, sr: ServiceRequest) -> None:
+        sr.done = True
+        sr.t_finish = time.perf_counter()
+        self.finished.append(sr)
+        self.stats.latencies_ms.append(sr.latency_ms)
+
+    def _run_wave(self, wave: Sequence[ServiceRequest]) -> None:
+        plans, pending = [], []
+        for sr in wave:
+            key = request_fingerprint(sr.request)
+            hit = self._cache.get(key, _MISS)
+            if hit is not _MISS:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+                sr.result = hit
+                self._complete(sr)
+                continue
+            try:
+                plans.append(self.oracle.plan(sr.request))
+            except ApiError as e:
+                self.stats.errors += 1
+                sr.error = e
+                self._complete(sr)
+                continue
+            pending.append((sr, key))
+        if plans:
+            batch = self.oracle.execute(plans)
+            self.stats.fused_calls += batch.fused_calls
+            for (sr, key), res in zip(pending, batch.results):
+                sr.result = res
+                self._cache[key] = res
+                while len(self._cache) > self.cache_size:
+                    self._cache.popitem(last=False)
+                self._complete(sr)
+        self.stats.requests += len(wave)
+        self.stats.waves += 1
+
+    def run(self) -> List[ServiceRequest]:
+        """Drain the queue in waves; returns finished requests in
+        completion order."""
+        t0 = time.perf_counter()
+        while self.queue:
+            wave = self.queue[:self.max_wave]
+            del self.queue[:self.max_wave]
+            self._run_wave(wave)
+        self.stats.wall_s += time.perf_counter() - t0
+        return self.finished
+
+
+# ----------------------------------------------------------------------
+# synthetic traffic (CLI replay + benchmarks)
+# ----------------------------------------------------------------------
+
+_OFF_GRID_BATCHES = (24, 48, 96, 192)
+_OFF_GRID_PIXELS = (48, 96, 160, 240)
+
+
+def synthetic_requests(oracle: LatencyOracle, n: int = 500, seed: int = 0,
+                       client_profile_frac: float = 0.25
+                       ) -> List[PredictRequest]:
+    """A shuffled mixed workload over every trained pair of ``oracle``:
+    ~20% measured (target == anchor), ~45% cross (some with client-supplied
+    profile copies), ~35% two-phase at off-grid knob values. Two-phase
+    candidates whose min/max configs are unmeasured fall back to cross so
+    every generated request is answerable."""
+    rng = np.random.default_rng(seed)
+    ds = oracle.dataset
+    anchors = sorted({a for a, _ in oracle.pairs()})
+    if not anchors:
+        raise ValueError("oracle has no trained pairs")
+    reqs: List[PredictRequest] = []
+    for _ in range(n):
+        anchor = anchors[rng.integers(len(anchors))]
+        targets = oracle.targets_from(anchor)
+        case = ds.cases[rng.integers(len(ds.cases))]
+        kind = rng.random()
+        if kind < 0.20:
+            reqs.append(PredictRequest(anchor, anchor,
+                                       Workload.from_case(case)))
+            continue
+        target = targets[rng.integers(len(targets))]
+        if kind < 0.65:
+            profile = (dict(ds.profile(anchor, case))
+                       if rng.random() < client_profile_frac else None)
+            reqs.append(PredictRequest(anchor, target,
+                                       Workload.from_case(case),
+                                       profile=profile))
+            continue
+        model, batch, pix = case
+        if rng.random() < 0.5:
+            knob = KNOB_BATCH
+            w = Workload(model, int(rng.choice(_OFF_GRID_BATCHES)), pix)
+        else:
+            knob = KNOB_PIXEL
+            w = Workload(model, batch, int(rng.choice(_OFF_GRID_PIXELS)))
+        if minmax_cases(w, knob, ds.measurements[anchor]) is None:
+            reqs.append(PredictRequest(anchor, target,
+                                       Workload.from_case(case)))
+        else:
+            reqs.append(PredictRequest(anchor, target, w, knob=knob))
+    return reqs

@@ -1,0 +1,198 @@
+"""Pure-planner unit tests: mode resolution, validation order, plan-time
+price checks, and Workload construction guards. The planner never touches a
+fitted model, so these run against a tiny dataset (and, for catalog-gap
+cases, a hand-built stub) with a literal trained-pair set."""
+import pytest
+
+from repro import api
+from repro.api import planner
+from repro.core import workloads
+
+PAIRS = {("T4", "V100"), ("V100", "T4")}
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return workloads.generate(devices=("T4", "V100"),
+                              models=("LeNet5", "AlexNet"))
+
+
+def _w(ds, i=0):
+    return api.Workload.from_case(ds.cases[i])
+
+
+# ---------------------------------------------------------------------------
+# mode resolution
+# ---------------------------------------------------------------------------
+
+
+def test_measured_plan(ds):
+    w = _w(ds)
+    plan = planner.plan_request(api.PredictRequest("T4", "T4", w), ds, PAIRS)
+    assert plan.mode == api.MODE_MEASURED
+    assert plan.measured_ms == pytest.approx(ds.latency("T4", w.case))
+    assert plan.price_hr > 0
+
+
+def test_auto_resolves_cross_for_on_grid_case(ds):
+    w = _w(ds)
+    plan = planner.plan_request(api.PredictRequest("T4", "V100", w), ds,
+                                PAIRS)
+    assert plan.mode == api.MODE_CROSS
+    assert plan.profile is ds.profile("T4", w.case)   # dataset object reused
+
+
+def test_auto_resolves_cross_for_client_profile_off_grid(ds):
+    w = _w(ds)
+    prof = dict(ds.profile("T4", w.case))
+    off = api.Workload(w.model, 100, w.pix)           # 100 not in BATCHES
+    plan = planner.plan_request(
+        api.PredictRequest("T4", "V100", off, profile=prof), ds, PAIRS)
+    assert plan.mode == api.MODE_CROSS
+    assert plan.profile is prof
+
+
+def test_auto_falls_back_to_two_phase_without_profile(ds):
+    w = _w(ds)
+    off = api.Workload(w.model, 100, w.pix)
+    plan = planner.plan_request(api.PredictRequest("T4", "V100", off), ds,
+                                PAIRS)
+    assert plan.mode == api.MODE_TWO_PHASE
+    assert plan.case_min == (w.model, min(workloads.BATCHES), w.pix)
+    assert plan.case_max == (w.model, max(workloads.BATCHES), w.pix)
+    assert plan.profile_min is ds.profile("T4", plan.case_min)
+    assert plan.knob_value == 100.0
+
+
+def test_two_phase_without_minmax_configs_raises(ds):
+    w = _w(ds)
+    # pix 300 is off-grid entirely, so (m, 16, 300)/(m, 256, 300) were
+    # never measured -> batch-knob interpolation has nothing to rest on
+    off = api.Workload(w.model, 100, 300)
+    with pytest.raises(api.UnsupportedRequestError, match="min/max"):
+        planner.plan_request(api.PredictRequest("T4", "V100", off), ds,
+                             PAIRS)
+
+
+def test_explicit_cross_without_any_profile_raises(ds):
+    w = _w(ds)
+    off = api.Workload(w.model, 100, w.pix)
+    with pytest.raises(api.UnsupportedRequestError, match="profile"):
+        planner.plan_request(
+            api.PredictRequest("T4", "V100", off, mode=api.MODE_CROSS), ds,
+            PAIRS)
+
+
+def test_unknown_mode_raises(ds):
+    w = _w(ds)
+    with pytest.raises(api.UnsupportedRequestError, match="unknown mode"):
+        planner.plan_request(
+            api.PredictRequest("T4", "V100", w, mode="psychic"), ds, PAIRS)
+
+
+# ---------------------------------------------------------------------------
+# device validation
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_anchor_lists_available(ds):
+    w = _w(ds)
+    with pytest.raises(api.UnknownDeviceError, match="available"):
+        planner.plan_request(api.PredictRequest("H100", "V100", w), ds,
+                             PAIRS)
+
+
+def test_untrained_pair_lists_trained_anchors(ds):
+    w = _w(ds)
+    with pytest.raises(api.UnknownDeviceError, match="trained anchors"):
+        planner.plan_request(api.PredictRequest("T4", "TPUv4", w), ds,
+                             PAIRS)
+
+
+def test_anchor_measured_but_case_missing_raises(ds):
+    off = api.Workload("LeNet5", 100, 32)
+    with pytest.raises(api.UnsupportedRequestError, match="never measured"):
+        planner.plan_request(api.PredictRequest("T4", "T4", off), ds, PAIRS)
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan-time price guard (no silent NaN cost columns)
+# ---------------------------------------------------------------------------
+
+
+def _ghost_dataset(ds):
+    """The T4 measurements re-badged as a device with no catalog entry."""
+    meas = dict(ds.measurements)
+    meas["GhostGPU"] = ds.measurements["T4"]
+    return workloads.Dataset(devices=ds.devices + ("GhostGPU",),
+                             cases=ds.cases, measurements=meas)
+
+
+def test_off_catalog_target_price_raises_at_plan_time(ds):
+    ghost = _ghost_dataset(ds)
+    w = _w(ds)
+    with pytest.raises(api.UnknownDeviceError, match="catalog"):
+        planner.plan_request(api.PredictRequest("T4", "GhostGPU", w), ghost,
+                             {("T4", "GhostGPU")})
+
+
+def test_off_catalog_measured_target_raises_too(ds):
+    ghost = _ghost_dataset(ds)
+    w = _w(ds)
+    with pytest.raises(api.UnknownDeviceError, match="catalog"):
+        planner.plan_request(api.PredictRequest("GhostGPU", "GhostGPU", w),
+                             ghost, set())
+
+
+def test_resolve_price_matches_catalog():
+    from repro.core import devices
+    assert planner.resolve_price("T4") == devices.get("T4").price_hr
+    with pytest.raises(api.UnknownDeviceError, match="catalog"):
+        planner.resolve_price("GhostGPU")
+
+
+# ---------------------------------------------------------------------------
+# satellite: Workload construction guards
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model,batch,pix,frag", [
+    ("", 16, 32, "model"),
+    ("VGG16", 0, 32, "batch"),
+    ("VGG16", -4, 32, "batch"),
+    ("VGG16", 16, 0, "pix"),
+])
+def test_invalid_workload_rejected_at_construction(model, batch, pix, frag):
+    with pytest.raises(api.InvalidWorkloadError, match=frag):
+        api.Workload(model, batch, pix)
+
+
+def test_invalid_workload_is_api_error():
+    with pytest.raises(api.ApiError):
+        api.Workload("VGG16", 0, 32)
+
+
+def test_valid_workload_roundtrip():
+    w = api.Workload.from_case(("VGG16", 64, 128))
+    assert w.case == ("VGG16", 64, 128)
+
+
+# ---------------------------------------------------------------------------
+# request fingerprints (the serving cache key)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_is_content_based(ds):
+    w = _w(ds)
+    prof_a = dict(ds.profile("T4", w.case))
+    prof_b = dict(prof_a)                              # equal, distinct id
+    fa = planner.request_fingerprint(
+        api.PredictRequest("T4", "V100", w, profile=prof_a))
+    fb = planner.request_fingerprint(
+        api.PredictRequest("T4", "V100", w, profile=prof_b))
+    assert fa == fb and hash(fa) == hash(fb)
+    fc = planner.request_fingerprint(api.PredictRequest("T4", "V100", w))
+    assert fa != fc
+    fd = planner.request_fingerprint(
+        api.PredictRequest("T4", "V100", w, knob=api.KNOB_PIXEL))
+    assert fc != fd
