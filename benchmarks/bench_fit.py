@@ -95,7 +95,10 @@ def run(smoke: bool = False) -> dict:
 
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
-    r = run(smoke="--smoke" in argv)
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
     print(f"Profet.fit: {r['n_pairs']} pairs x {r['n_train_cases']} cases  "
           f"reference {r['ref_s']:.1f} s  vectorized {r['new_s']:.1f} s  "
           f"speedup {r['speedup']:.1f}x (floor >= {r['floor']:.0f}x)")
@@ -103,6 +106,12 @@ def main(argv=None) -> int:
           f"reference {r['mape_ref']:.2f}%  "
           f"delta {r['mape_delta_pts']:+.2f} pts "
           f"(fails above +{r['mape_parity_pts']:.0f}; better never fails)")
+    ok = (r["speedup"] >= r["floor"]
+          and r["mape_delta_pts"] <= r["mape_parity_pts"])
+    from benchmarks import common
+    common.save_bench("fit", speedup=r["speedup"], floor=r["floor"],
+                      wall_s=wall, passed=ok, smoke=smoke,
+                      extra={"mape_delta_pts": r["mape_delta_pts"]})
     if r["speedup"] < r["floor"]:
         print("FAIL: vectorized fit under the speedup floor")
         return 1

@@ -96,11 +96,18 @@ def _timed(fn, *args, reps: int):
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
     smoke = "--smoke" in argv
+    t0 = time.perf_counter()
     r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
     print(f"predict_grid: {r['n_cells']} cells  "
           f"loop {r['loop_ms']:.1f} ms  grid {r['grid_ms']:.1f} ms  "
           f"speedup {r['speedup']:.1f}x (target >= {TARGET_SPEEDUP:.0f}x)")
-    if r["speedup"] < TARGET_SPEEDUP:
+    from benchmarks import common
+    ok = r["speedup"] >= TARGET_SPEEDUP
+    common.save_bench("grid", speedup=r["speedup"], floor=TARGET_SPEEDUP,
+                      wall_s=wall, passed=ok, smoke=smoke,
+                      extra={"n_cells": r["n_cells"]})
+    if not ok:
         print("FAIL: vectorized grid prediction under the speedup floor")
         return 1
     return 0

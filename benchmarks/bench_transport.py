@@ -1,0 +1,160 @@
+"""Concurrent-client throughput of the HTTP transport vs sequential
+round-trips — the wave-microbatching payoff measured at the socket.
+
+Baseline = ONE client draining the mixed request stream serially: every
+request is its own HTTP round-trip AND its own wave (plan + fused execute
+for a single request). Concurrent = the same stream partitioned over N
+keep-alive clients firing at once: requests arriving while a wave executes
+batch into the next one, so the server answers the stream with far fewer
+(and fatter) fused calls. Both phases run against a fresh server over the
+same fitted oracle; every response must match the direct in-process
+``predict_many`` answer element-wise. Acceptance floor: N concurrent
+clients >= 3x the sequential client.
+
+    PYTHONPATH=src python -m benchmarks.bench_transport           # full
+    PYTHONPATH=src python -m benchmarks.bench_transport --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.serve import (BackgroundServer, Client, LatencyService, replay,
+                         synthetic_requests)
+
+TARGET_SPEEDUP = 3.0
+N_CLIENTS = 16
+N_REQUESTS = 480          # divisible by N_CLIENTS
+SEQ_REPS = 2              # min-of-reps, like the other floor gates
+CONC_REPS = 4
+
+
+def _fit_oracle(smoke: bool) -> api.LatencyOracle:
+    if smoke:
+        ds = workloads.generate(devices=("T4", "V100"),
+                                models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(members=("linear", "forest"), n_trees=30, seed=0)
+    else:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60"),
+            models=("LeNet5", "AlexNet", "ResNet18", "VGG11", "ResNet50",
+                    "MobileNetV2"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=60, seed=0)
+    return api.LatencyOracle.fit(ds, config=cfg)
+
+
+def _serve(oracle, max_wave=64):
+    svc = LatencyService(oracle, max_wave=max_wave)
+    return svc, BackgroundServer(svc).start()
+
+
+def _sequential(oracle, reqs) -> dict:
+    """One client, one request in flight: every request is its own wave
+    (admission window + plan + single-request fused execute + HTTP RT)."""
+    svc, bg = _serve(oracle)
+    try:
+        with Client(bg.host, bg.port) as c:
+            c.healthz()                       # connection + route warm
+            t0 = time.perf_counter()
+            results = [c.predict(r) for r in reqs]
+            wall = time.perf_counter() - t0
+        return {"wall_s": wall, "results": results,
+                "stats": svc.stats.summary()}
+    finally:
+        bg.stop()
+
+
+def _concurrent(oracle, reqs, clients) -> dict:
+    svc, bg = _serve(oracle)
+    try:
+        rep = replay(bg.host, bg.port, reqs, clients=clients)
+        rep["stats"] = svc.stats.summary()
+        return rep
+    finally:
+        bg.stop()
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    reqs = synthetic_requests(oracle, n=N_REQUESTS, seed=0)
+    direct = oracle.predict_many(reqs)    # ground truth + jax warmup
+    want = direct.latencies()
+
+    # min-of-reps on both sides (each rep against a fresh server so the
+    # prediction cache never carries over between phases)
+    rtol = 1e-9 if smoke else 1e-5
+    seq = conc = None
+    for _ in range(SEQ_REPS):
+        s = _sequential(oracle, reqs)
+        if seq is None or s["wall_s"] < seq["wall_s"]:
+            seq = s
+    for _ in range(CONC_REPS):
+        c = _concurrent(oracle, reqs, N_CLIENTS)
+        assert c["ok"] == len(reqs) and not c["errors"]
+        np.testing.assert_allclose([r["latency_ms"] for r in c["results"]],
+                                   want, rtol=rtol)
+        if conc is None or c["wall_s"] < conc["wall_s"]:
+            conc = c
+
+    # every socket response (both phases) equals the in-process answer
+    np.testing.assert_allclose([r["latency_ms"] for r in seq["results"]],
+                               want, rtol=rtol)
+    assert [r["mode"] for r in conc["results"]] == \
+        [r.mode for r in direct.results]
+
+    speedup = seq["wall_s"] / conc["wall_s"]
+    lat = np.array(conc["latencies_ms"])
+    hist_edges = [0, 1, 2, 5, 10, 20, 50, 100, 1000, 10000]
+    hist = np.histogram(lat, bins=hist_edges)[0]
+    out = {"smoke": smoke, "n_requests": len(reqs), "clients": N_CLIENTS,
+           "seq_s": seq["wall_s"], "conc_s": conc["wall_s"],
+           "speedup": speedup, "target_speedup": TARGET_SPEEDUP,
+           "seq_waves": seq["stats"]["waves"],
+           "conc_waves": conc["stats"]["waves"],
+           "seq_fused_calls": seq["stats"]["fused_calls"],
+           "conc_fused_calls": conc["stats"]["fused_calls"],
+           "client_p50_ms": conc["client_p50_ms"],
+           "client_p99_ms": conc["client_p99_ms"],
+           "latency_hist_edges_ms": hist_edges,
+           "latency_hist": hist.tolist()}
+    from benchmarks import common
+    common.save("transport", out)
+    return out
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
+    print(f"transport: {r['n_requests']} requests  "
+          f"1 client {r['seq_s']:.2f} s ({r['seq_waves']} waves)  "
+          f"{r['clients']} clients {r['conc_s']:.2f} s "
+          f"({r['conc_waves']} waves)  "
+          f"speedup {r['speedup']:.1f}x (target >= "
+          f"{r['target_speedup']:.0f}x)")
+    print(f"  client latency p50 {r['client_p50_ms']:.2f} ms  "
+          f"p99 {r['client_p99_ms']:.2f} ms  histogram "
+          f"{dict(zip(r['latency_hist_edges_ms'], r['latency_hist']))}")
+    from benchmarks import common
+    ok = r["speedup"] >= r["target_speedup"]
+    common.save_bench("transport", speedup=r["speedup"],
+                      floor=r["target_speedup"], wall_s=wall, passed=ok,
+                      smoke=smoke,
+                      extra={"clients": r["clients"],
+                             "client_p50_ms": r["client_p50_ms"],
+                             "client_p99_ms": r["client_p99_ms"]})
+    if not ok:
+        print("FAIL: concurrent transport under the concurrency floor")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

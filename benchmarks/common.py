@@ -6,8 +6,9 @@ from __future__ import annotations
 import json
 import pathlib
 import pickle
+import subprocess
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -65,6 +66,35 @@ def save(name: str, payload: dict) -> None:
     payload = dict(payload, _benchmark=name, _timestamp=time.time())
     (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
                                                  default=float))
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                              capture_output=True, text=True, timeout=10,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def save_bench(name: str, *, speedup: float, floor: float, wall_s: float,
+               passed: bool, smoke: bool = False,
+               extra: Optional[dict] = None) -> pathlib.Path:
+    """Machine-readable gate record: every floor-gated ``bench_*`` run
+    writes ``results/bench/BENCH_<name>.json`` (speedup, floor, wall time,
+    git SHA) so CI can upload them as the perf-trajectory artifact and
+    ``scripts/bench_report.py`` can print the table."""
+    OUT.mkdir(parents=True, exist_ok=True)
+    rec = {"benchmark": name, "speedup": float(speedup),
+           "floor": float(floor), "passed": bool(passed),
+           "wall_s": float(wall_s), "smoke": bool(smoke),
+           "git_sha": git_sha(), "timestamp": time.time(),
+           "timestamp_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z")}
+    if extra:
+        rec.update(extra)
+    path = OUT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(rec, indent=1, default=float))
+    return path
 
 
 def fmt_table(rows, headers) -> str:

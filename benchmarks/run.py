@@ -20,9 +20,12 @@ BENCHES = [
     ("grid", "benchmarks.bench_grid", "predict_grid vectorization speedup"),
     ("fit", "benchmarks.bench_fit", "Profet.fit vectorization speedup"),
     ("serve", "benchmarks.bench_serve", "fused predict_many vs predict loop"),
+    ("transport", "benchmarks.bench_transport",
+     "HTTP transport concurrent vs sequential clients"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
-    ("serving", "benchmarks.bench_serving", "Continuous vs wave batching"),
+    ("serving", "benchmarks.bench_serve:run_engine",
+     "Continuous vs wave batching (token engine)"),
     ("tpu_advisor", "benchmarks.bench_tpu_advisor", "TPU cross-chip advisor"),
 ]
 
@@ -38,8 +41,9 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             import importlib
-            mod = importlib.import_module(module)
-            summary = mod.run()
+            mod_name, _, attr = module.partition(":")
+            mod = importlib.import_module(mod_name)
+            summary = getattr(mod, attr or "run")()
             dt = time.time() - t0
             pretty = " ".join(f"{k}={v:.3f}" if isinstance(v, float)
                               else f"{k}={v}" for k, v in summary.items())

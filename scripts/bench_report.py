@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Print the bench-trajectory table from ``results/bench/BENCH_*.json``.
+
+Each floor-gated benchmark (``bench_grid``, ``bench_fit``, ``bench_serve``,
+``bench_transport``) writes one machine-readable record per run — speedup,
+floor, wall time, git SHA — via ``benchmarks.common.save_bench``. CI
+uploads the records as a build artifact; this script renders them so the
+perf trajectory is visible at a glance in the job log.
+
+    python scripts/bench_report.py [results/bench]
+
+Exit status is 0 even when a gate failed — the gate itself already failed
+the bench stage; this is reporting only.
+"""
+import json
+import pathlib
+import sys
+
+
+def rows_from(out_dir: pathlib.Path):
+    rows = []
+    for path in sorted(out_dir.glob("BENCH_*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append([path.name, "-", "-", "-", "-", "-",
+                         f"unreadable: {e}"])
+            continue
+        rows.append([
+            rec.get("benchmark", path.stem),
+            f"{rec.get('speedup', float('nan')):.2f}x",
+            f">={rec.get('floor', float('nan')):.1f}x",
+            "pass" if rec.get("passed") else "FAIL",
+            f"{rec.get('wall_s', float('nan')):.1f}s",
+            str(rec.get("git_sha", "?")),
+            str(rec.get("timestamp_iso", "?")),
+        ])
+    return rows
+
+
+def fmt_table(rows, headers):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    line = lambda r: " | ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    out_dir = pathlib.Path(argv[0] if argv else "results/bench")
+    rows = rows_from(out_dir)
+    if not rows:
+        print(f"bench trajectory: no BENCH_*.json records under {out_dir} "
+              "(run a bench_* --smoke gate first)")
+        return 0
+    print(f"bench trajectory ({out_dir}):")
+    print(fmt_table(rows, ["benchmark", "speedup", "floor", "gate",
+                           "wall", "git", "when"]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

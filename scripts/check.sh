@@ -1,15 +1,59 @@
 #!/usr/bin/env bash
-# Tier-1 gate: the full test suite plus the three vectorization smoke
-# benchmarks — predict_grid (fails under a 5x speedup floor or on
-# divergence from the per-case loop), Profet.fit (fails under the fit
-# speedup floor or on MAPE-parity loss vs the pre-PR reference path), and
-# the serving hot path (fused predict_many vs the sequential predict loop
-# on a mixed 500-request stream: 5x floor, element-wise equality asserted).
+# Tier-1 gate, split into named stages so a bench-floor failure is
+# distinguishable from a test failure at a glance:
+#
+#   lint         byte-compile every tree we ship (cheap syntax/import-shape
+#                sanity; no third-party linter is vendored)
+#   test         the full pytest suite
+#   bench-smoke  the four floor-gated smoke benchmarks — predict_grid (5x
+#                vectorization floor + loop parity), Profet.fit (speedup
+#                floor + MAPE parity vs the frozen reference path), fused
+#                predict_many (5x floor + element-wise equality), and the
+#                HTTP transport (3x concurrent-vs-sequential client floor +
+#                equality vs direct predict_many) — each writing its
+#                results/bench/BENCH_*.json trajectory record
+#                (scripts/bench_report.py renders them; ci.yml runs it and
+#                uploads the records as the bench-trajectory artifact)
+#
+#   usage: scripts/check.sh [stage ...]      # default: all stages
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
-python -m benchmarks.bench_grid --smoke
-python -m benchmarks.bench_fit --smoke
-python -m benchmarks.bench_serve --smoke
+stage_lint() {
+    python -m compileall -q src benchmarks examples scripts tests
+}
+
+stage_test() {
+    python -m pytest -x -q
+}
+
+stage_bench_smoke() {
+    python -m benchmarks.bench_grid --smoke
+    python -m benchmarks.bench_fit --smoke
+    python -m benchmarks.bench_serve --smoke
+    python -m benchmarks.bench_transport --smoke
+    # trajectory table: printed by a dedicated always() step in ci.yml;
+    # run `python scripts/bench_report.py` locally for the same view
+}
+
+run_stage() {
+    local name="$1" fn="stage_${1//-/_}" t0=$SECONDS
+    if ! declare -F "$fn" >/dev/null; then
+        echo "check.sh: unknown stage '$name' (lint|test|bench-smoke)" >&2
+        return 2
+    fi
+    echo "==> stage ${name}"
+    "$fn"
+    echo "<== stage ${name} ok ($((SECONDS - t0))s)"
+}
+
+stages=("$@")
+if [ ${#stages[@]} -eq 0 ]; then
+    stages=(lint test bench-smoke)
+fi
+total0=$SECONDS
+for s in "${stages[@]}"; do
+    run_stage "$s"
+done
+echo "check.sh: all stages ok ($((SECONDS - total0))s)"

@@ -25,22 +25,25 @@ from repro.api.artifacts import (ArtifactError, FingerprintMismatchError,
                                  SchemaVersionError, config_fingerprint,
                                  fit_or_load, load, save)
 from repro.api.oracle import LatencyOracle
-from repro.api.planner import plan_request, request_fingerprint
-from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
-                             MODE_MEASURED, MODE_TWO_PHASE, ApiError,
-                             BatchPredictResult, GridRequest, GridResult,
-                             InvalidWorkloadError, PredictPlan,
-                             PredictRequest, PredictResult, ServiceStats,
-                             UnknownDeviceError, UnsupportedRequestError,
-                             Workload)
+from repro.api.planner import (choose_anchor, plan_request,
+                               request_fingerprint)
+from repro.api.types import (ANCHOR_ANY, KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
+                             MODE_CROSS, MODE_MEASURED, MODE_TWO_PHASE,
+                             ApiError, BatchPredictResult, ExecutionError,
+                             GridRequest, GridResult, InvalidWorkloadError,
+                             MalformedRequestError, OverloadedError,
+                             PredictPlan, PredictRequest, PredictResult,
+                             ServiceStats, UnknownDeviceError,
+                             UnsupportedRequestError, Workload)
 
 __all__ = [
-    "ApiError", "ArtifactError", "BatchPredictResult",
-    "FingerprintMismatchError", "GridRequest", "GridResult",
-    "InvalidWorkloadError", "KNOB_BATCH", "KNOB_PIXEL", "LatencyOracle",
-    "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED", "MODE_TWO_PHASE",
+    "ANCHOR_ANY", "ApiError", "ArtifactError", "BatchPredictResult",
+    "ExecutionError", "FingerprintMismatchError", "GridRequest",
+    "GridResult", "InvalidWorkloadError", "KNOB_BATCH", "KNOB_PIXEL",
+    "LatencyOracle", "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED",
+    "MODE_TWO_PHASE", "MalformedRequestError", "OverloadedError",
     "PredictPlan", "PredictRequest", "PredictResult", "SchemaVersionError",
     "ServiceStats", "UnknownDeviceError", "UnsupportedRequestError",
-    "Workload", "config_fingerprint", "fit_or_load", "load",
-    "plan_request", "request_fingerprint", "save",
+    "Workload", "choose_anchor", "config_fingerprint", "fit_or_load",
+    "load", "plan_request", "request_fingerprint", "save",
 ]

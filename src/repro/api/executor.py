@@ -23,7 +23,7 @@ bench_serve.py`` asserts it on every run.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,11 +32,12 @@ from repro.api.types import (BatchPredictResult, MODE_CROSS, MODE_MEASURED,
                              UnsupportedRequestError)
 
 
-def _result(plan: PredictPlan, latency_ms: float) -> PredictResult:
+def _result(plan: PredictPlan, latency_ms: float,
+            epoch: Optional[str]) -> PredictResult:
     return PredictResult(latency_ms=float(latency_ms),
                          anchor=plan.anchor, target=plan.target,
                          workload=plan.workload, mode=plan.mode,
-                         price_hr=plan.price_hr)
+                         price_hr=plan.price_hr, epoch=epoch)
 
 
 class _RowRegistry:
@@ -70,9 +71,12 @@ class _RowRegistry:
         return sum(len(r) for r in self.index.values())
 
 
-def execute_plans(profet, plans: Sequence[PredictPlan]) -> BatchPredictResult:
+def execute_plans(profet, plans: Sequence[PredictPlan],
+                  epoch: Optional[str] = None) -> BatchPredictResult:
     """Answer every plan with the minimum number of fused ensemble calls
-    (one per (anchor, target) pair present in the batch)."""
+    (one per (anchor, target) pair present in the batch). ``epoch`` — the
+    oracle generation executing the batch — is stamped on every result so
+    a serving layer's refresh swaps are observable per response."""
     n = len(plans)
     lat = np.full(n, np.nan)
     reg = _RowRegistry()
@@ -131,6 +135,7 @@ def execute_plans(profet, plans: Sequence[PredictPlan]) -> BatchPredictResult:
         t_max = np.array([r[3] for r in rows])
         lat[ii] = profet.predict_knob(target, knob, vals, t_min, t_max)
 
-    results = tuple(_result(p, lat[i]) for i, p in enumerate(plans))
+    results = tuple(_result(p, lat[i], epoch) for i, p in enumerate(plans))
     return BatchPredictResult(results=results, fused_calls=fused,
-                              rows=reg.n_rows, mode_counts=mode_counts)
+                              rows=reg.n_rows, mode_counts=mode_counts,
+                              epoch=epoch)

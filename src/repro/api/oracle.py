@@ -27,6 +27,7 @@ compiled call.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -38,6 +39,53 @@ from repro.api.executor import execute_plans
 from repro.api.types import (BatchPredictResult, MODE_MEASURED, GridRequest,
                              GridResult, PredictPlan, PredictRequest,
                              PredictResult, UnknownDeviceError, Workload)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridScatter:
+    """Where each staged grid cell lands in the dense (targets, batches,
+    pixels) array: feasible cell ``c`` of every target scatters to
+    ``[:, jj[c], kk[c]]``."""
+    jj: np.ndarray
+    kk: np.ndarray
+
+
+def assemble_grid(req: GridRequest, scatter: GridScatter,
+                  latencies: np.ndarray) -> GridResult:
+    """Stage 2 of a grid sweep: scatter the flat ``latencies`` of the
+    staged request batch (targets-major) back into the dense grid."""
+    out = np.full((len(req.targets), len(req.batches), len(req.pixels)),
+                  np.nan)
+    n_cells = len(scatter.jj)
+    if n_cells:
+        lat = np.asarray(latencies, dtype=float).reshape(len(req.targets),
+                                                         n_cells)
+        for i in range(len(req.targets)):
+            out[i, scatter.jj, scatter.kk] = lat[i]
+    return GridResult(request=req, latency_ms=out)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdviseScatter:
+    """Row order of a staged advisor sweep: ``fixed`` rows (client-measured
+    anchor latency) by position, plus where each staged request's result
+    goes."""
+    n: int
+    fixed: Dict[int, PredictResult]
+    req_pos: List[int]
+
+
+def assemble_advise(scatter: AdviseScatter, results: Sequence[PredictResult],
+                    epoch: Optional[str] = None) -> List[PredictResult]:
+    """``epoch`` stamps the fixed (client-measured) rows so every row of an
+    advisor sweep carries the epoch that answered it, like the staged
+    results do."""
+    rows = {pos: (dataclasses.replace(r, epoch=epoch) if epoch is not None
+                  else r)
+            for pos, r in scatter.fixed.items()}
+    for pos, res in zip(scatter.req_pos, results):
+        rows[pos] = res
+    return [rows[pos] for pos in range(scatter.n)]
 
 
 class LatencyOracle:
@@ -75,6 +123,13 @@ class LatencyOracle:
         return self.profet.cfg
 
     @property
+    def fingerprint(self) -> str:
+        """The artifact-store config fingerprint of this oracle — the
+        default cache *epoch* a serving layer keys its entries to."""
+        from repro.api.artifacts import config_fingerprint
+        return config_fingerprint(self.config)
+
+    @property
     def features(self):
         return self.profet.features
 
@@ -105,10 +160,15 @@ class LatencyOracle:
         return planner_mod.plan_request(req, self.dataset,
                                         set(self.profet.cross))
 
-    def execute(self, plans: Sequence[PredictPlan]) -> BatchPredictResult:
+    def execute(self, plans: Sequence[PredictPlan],
+                epoch: Optional[str] = None) -> BatchPredictResult:
         """Stages 2+3: answer already-planned requests with one fused
-        ensemble call per (anchor, target) pair in the batch."""
-        return execute_plans(self.profet, plans)
+        ensemble call per (anchor, target) pair in the batch. Results are
+        stamped with ``epoch`` (a serving layer's cache epoch); when omitted
+        the oracle's own config fingerprint is used."""
+        return execute_plans(self.profet, plans,
+                             epoch=self.fingerprint if epoch is None
+                             else epoch)
 
     def predict_many(self,
                      reqs: Sequence[PredictRequest]) -> BatchPredictResult:
@@ -136,10 +196,13 @@ class LatencyOracle:
         return float(self.profet.predict_knob(target, knob, value,
                                               t_min, t_max))
 
-    def predict_grid(self, req: GridRequest) -> GridResult:
-        """Vectorized sweep: the feasible cells of every target become one
-        ``predict_many`` batch — one shared anchor feature matrix (rows
-        dedup across targets) and one fused ensemble call per target."""
+    def stage_grid(self, req: GridRequest
+                   ) -> Tuple[List[PredictRequest], "GridScatter"]:
+        """Stage 1 of a grid sweep: validate the request and expand its
+        feasible cells into the per-cell ``PredictRequest`` batch (shared
+        rows dedup in the executor). A transport admits the batch through
+        its service and reassembles with :func:`assemble_grid`;
+        :meth:`predict_grid` is the in-process composition of the two."""
         if req.anchor not in self.dataset.measurements:
             raise UnknownDeviceError(
                 f"anchor {req.anchor!r} not in the oracle's dataset; "
@@ -152,23 +215,51 @@ class LatencyOracle:
                  for j, b in enumerate(req.batches)
                  for k, p in enumerate(req.pixels)
                  if (req.model, b, p) in measured]
-        out = np.full((len(req.targets), len(req.batches), len(req.pixels)),
-                      np.nan)
-        if cells:
-            cases = [c for _, _, c in cells]
-            jj = np.array([j for j, _, _ in cells])
-            kk = np.array([k for _, k, _ in cells])
-            batch = self.predict_many(
-                [PredictRequest(req.anchor, t, Workload.from_case(c))
-                 for t in req.targets for c in cases])
-            lat = batch.latencies().reshape(len(req.targets), len(cases))
-            for i in range(len(req.targets)):
-                out[i, jj, kk] = lat[i]
-        return GridResult(request=req, latency_ms=out)
+        cases = [c for _, _, c in cells]
+        reqs = [PredictRequest(req.anchor, t, Workload.from_case(c))
+                for t in req.targets for c in cases]
+        scatter = GridScatter(
+            jj=np.array([j for j, _, _ in cells], dtype=int),
+            kk=np.array([k for _, k, _ in cells], dtype=int))
+        return reqs, scatter
+
+    def predict_grid(self, req: GridRequest) -> GridResult:
+        """Vectorized sweep: the feasible cells of every target become one
+        ``predict_many`` batch — one shared anchor feature matrix (rows
+        dedup across targets) and one fused ensemble call per target."""
+        reqs, scatter = self.stage_grid(req)
+        lat = self.predict_many(reqs).latencies() if reqs else np.empty(0)
+        return assemble_grid(req, scatter, lat)
 
     # ------------------------------------------------------------------
     # advisor
     # ------------------------------------------------------------------
+    def stage_advise(self, anchor: str, workload: Workload,
+                     profile: Optional[Dict[str, float]] = None,
+                     measured_ms: Optional[float] = None,
+                     targets: Optional[Sequence[str]] = None
+                     ) -> Tuple[List[PredictRequest], "AdviseScatter"]:
+        """Stage 1 of an advisor sweep: the per-target ``PredictRequest``
+        batch plus the fixed rows (the anchor's own row when the client
+        supplies ``measured_ms``) and their positions. Reassemble with
+        :func:`assemble_advise`."""
+        order = list(targets or (anchor,) + self.targets_from(anchor))
+        fixed: Dict[int, PredictResult] = {}
+        reqs: List[PredictRequest] = []
+        req_pos: List[int] = []
+        for pos, target in enumerate(order):
+            if target == anchor and measured_ms is not None:
+                fixed[pos] = PredictResult(
+                    latency_ms=float(measured_ms), anchor=anchor,
+                    target=target, workload=workload, mode=MODE_MEASURED,
+                    price_hr=planner_mod.resolve_price(target))
+                continue
+            reqs.append(PredictRequest(anchor, target, workload,
+                                       profile=profile))
+            req_pos.append(pos)
+        return reqs, AdviseScatter(n=len(order), fixed=fixed,
+                                   req_pos=req_pos)
+
     def advise(self, anchor: str, workload: Workload,
                profile: Optional[Dict[str, float]] = None,
                measured_ms: Optional[float] = None,
@@ -178,22 +269,10 @@ class LatencyOracle:
         The whole candidate sweep is answered by ONE ``predict_many``
         batch. The anchor's own row uses ``measured_ms`` when the client
         supplies it."""
-        order = list(targets or (anchor,) + self.targets_from(anchor))
-        rows: Dict[int, PredictResult] = {}
-        reqs, req_pos = [], []
-        for pos, target in enumerate(order):
-            if target == anchor and measured_ms is not None:
-                rows[pos] = PredictResult(
-                    latency_ms=float(measured_ms), anchor=anchor,
-                    target=target, workload=workload, mode=MODE_MEASURED,
-                    price_hr=planner_mod.resolve_price(target))
-                continue
-            reqs.append(PredictRequest(anchor, target, workload,
-                                       profile=profile))
-            req_pos.append(pos)
-        for pos, res in zip(req_pos, self.predict_many(reqs)):
-            rows[pos] = res
-        return [rows[pos] for pos in range(len(order))]
+        reqs, scatter = self.stage_advise(anchor, workload, profile,
+                                          measured_ms, targets)
+        return assemble_advise(scatter, self.predict_many(reqs).results,
+                               epoch=self.fingerprint)
 
     # ------------------------------------------------------------------
     # helpers

@@ -22,13 +22,14 @@ pre-refactor ``LatencyOracle.predict``:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Mapping, Optional, Sequence, Set, Tuple
 
 from repro.core import devices as device_catalog
 from repro.core import workloads
-from repro.api.types import (KNOB_BATCH, KNOB_PIXEL, MODE_AUTO, MODE_CROSS,
-                             MODE_MEASURED, MODE_TWO_PHASE, PredictPlan,
-                             PredictRequest, UnknownDeviceError,
+from repro.api.types import (ANCHOR_ANY, KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
+                             MODE_CROSS, MODE_MEASURED, MODE_TWO_PHASE,
+                             PredictPlan, PredictRequest, UnknownDeviceError,
                              UnsupportedRequestError, Workload)
 
 Case = Tuple[str, int, int]
@@ -75,11 +76,71 @@ def request_fingerprint(req: PredictRequest) -> tuple:
             prof)
 
 
+def _anchor_usable(anchor: str, req: PredictRequest, dataset,
+                   trained_pairs: Set[Tuple[str, str]]) -> bool:
+    """Can ``anchor`` answer ``req`` from the offline dataset alone?"""
+    measured = dataset.measurements.get(anchor)
+    if measured is None:
+        return False
+    case = req.workload.case
+    if req.mode == MODE_MEASURED:
+        # only the target itself can answer a measured request
+        return anchor == req.target and case in measured
+    if anchor == req.target:
+        return case in measured
+    if (anchor, req.target) not in trained_pairs:
+        return False
+    has_case = case in measured
+    if req.mode == MODE_CROSS:
+        return has_case
+    if req.mode == MODE_TWO_PHASE:
+        return minmax_cases(req.workload, req.knob, measured) is not None
+    # auto: routes to cross on an exact-case profile, else two-phase
+    return has_case or minmax_cases(req.workload, req.knob,
+                                    measured) is not None
+
+
+def choose_anchor(req: PredictRequest, dataset,
+                  trained_pairs: Set[Tuple[str, str]]) -> str:
+    """Cross-anchor admission policy: the cheapest anchor (catalog hourly
+    price, name as tie-break) holding a profile that can answer ``req``.
+
+    Client-supplied profiles are anchor-specific measurements, so an
+    ``ANCHOR_ANY`` request carrying one is unroutable — the client must
+    name the anchor it profiled on. Anchors without a catalog price are
+    never chosen (their serving cost is unknowable)."""
+    if req.profile is not None:
+        raise UnsupportedRequestError(
+            "anchor='any' cannot carry a client profile (profiles are "
+            "anchor-specific) — name the anchor the profile was taken on")
+    ranked = []
+    for anchor in dataset.measurements:
+        dev = device_catalog.CATALOG.get(anchor)
+        if dev is None or not _anchor_usable(anchor, req, dataset,
+                                             trained_pairs):
+            continue
+        ranked.append((dev.price_hr, anchor))
+    if not ranked:
+        raise UnsupportedRequestError(
+            f"no anchor holds a usable profile for {req.workload.case} -> "
+            f"{req.target!r} (mode {req.mode!r}); anchors considered: "
+            f"{', '.join(sorted(dataset.measurements)) or 'none'}")
+    return min(ranked)[1]
+
+
 def plan_request(req: PredictRequest, dataset,
                  trained_pairs: Set[Tuple[str, str]]) -> PredictPlan:
     """Resolve one request to an executable plan (see module docstring for
     the validation order). ``dataset`` is a ``workloads.Dataset``;
-    ``trained_pairs`` is the oracle's fitted (anchor, target) set."""
+    ``trained_pairs`` is the oracle's fitted (anchor, target) set.
+
+    ``anchor == ANCHOR_ANY`` is rewritten first via :func:`choose_anchor`
+    (cheapest anchor with a usable profile); the plan's ``request`` carries
+    the concrete anchor so the executor and the result report where the
+    prediction actually came from."""
+    if req.anchor == ANCHOR_ANY:
+        req = dataclasses.replace(
+            req, anchor=choose_anchor(req, dataset, trained_pairs))
     case = req.workload.case
     if req.anchor not in dataset.measurements:
         raise UnknownDeviceError(

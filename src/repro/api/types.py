@@ -24,6 +24,10 @@ MODE_MEASURED = "measured"    # target == anchor and the case was measured
 KNOB_BATCH = "batch"
 KNOB_PIXEL = "pixel"
 
+# ``PredictRequest.anchor`` sentinel: let the planner route the request to
+# the cheapest anchor (by catalog price) holding a usable profile.
+ANCHOR_ANY = "any"
+
 
 class ApiError(Exception):
     """Base class for every error raised at the ``repro.api`` boundary."""
@@ -42,6 +46,23 @@ class InvalidWorkloadError(ApiError, ValueError):
     """A ``Workload`` that can never be predicted (empty model name,
     non-positive batch/pixel) — rejected at construction, not deep inside
     feature building."""
+
+
+class OverloadedError(ApiError):
+    """The serving layer's bounded admission queue is full; the request was
+    rejected (back-pressure), not queued. Clients should retry later."""
+
+
+class ExecutionError(ApiError):
+    """The fused executor failed unexpectedly mid-wave (a bug or resource
+    failure below the api layer, not a routing problem). The serving layer
+    fails the wave's requests individually with this instead of dying."""
+
+
+class MalformedRequestError(ApiError, ValueError):
+    """A wire payload that does not decode into a typed request (bad JSON,
+    missing fields, wrong types) — the transport answers it with a typed
+    error response instead of dropping the connection."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,13 +116,19 @@ class PredictRequest:
 
 @dataclasses.dataclass(frozen=True)
 class PredictResult:
-    """A prediction plus enough context to audit and price it."""
+    """A prediction plus enough context to audit and price it.
+
+    ``epoch`` names the oracle generation that answered the request (the
+    artifact-store fingerprint the serving layer was configured with); a
+    client can detect a mid-traffic model refresh by watching it change.
+    """
     latency_ms: float
     anchor: str
     target: str
     workload: Workload
     mode: str                 # resolved: measured | cross | two_phase
     price_hr: float
+    epoch: Optional[str] = None
 
     def cost_usd(self, steps: int) -> float:
         """Cost of ``steps`` training steps at the predicted ms/batch."""
@@ -156,6 +183,7 @@ class BatchPredictResult:
     fused_calls: int          # MedianEnsemble.predict invocations
     rows: int                 # deduped phase-1 feature rows evaluated
     mode_counts: Mapping[str, int]
+    epoch: Optional[str] = None   # oracle generation that executed the batch
 
     def __len__(self) -> int:
         return len(self.results)
@@ -179,13 +207,27 @@ LATENCY_WINDOW = 65536
 @dataclasses.dataclass
 class ServiceStats:
     """Per-service counters of ``repro.serve.LatencyService`` (mutable —
-    the service updates it wave by wave)."""
+    the service updates it wave by wave).
+
+    ``epoch`` is the cache epoch currently serving new admissions;
+    ``epoch_cache_hits`` counts hits *within* that epoch and resets to zero
+    on every ``oracle_refreshed`` swap (the hit-rate reset a refresh must
+    show), while ``cache_hits`` stays a lifetime total. ``invalidated``
+    counts cache entries purged by swaps, ``overloads`` counts admissions
+    rejected by the transport's bounded queue, and ``rerouted`` counts
+    ``ANCHOR_ANY`` requests the planner sent to a concrete anchor."""
     requests: int = 0
     waves: int = 0
     fused_calls: int = 0
     cache_hits: int = 0
     errors: int = 0
     wall_s: float = 0.0
+    epoch: str = ""
+    epoch_swaps: int = 0
+    epoch_cache_hits: int = 0
+    invalidated: int = 0
+    overloads: int = 0
+    rerouted: int = 0
     latencies_ms: "deque" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
@@ -205,12 +247,16 @@ class ServiceStats:
     def requests_per_s(self) -> float:
         return self.requests / self.wall_s if self.wall_s else 0.0
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, object]:
         return {"requests": self.requests, "waves": self.waves,
                 "fused_calls": self.fused_calls,
                 "cache_hits": self.cache_hits, "errors": self.errors,
-                "wall_s": self.wall_s, "p50_ms": self.p50_ms,
-                "p99_ms": self.p99_ms,
+                "wall_s": self.wall_s, "epoch": self.epoch,
+                "epoch_swaps": self.epoch_swaps,
+                "epoch_cache_hits": self.epoch_cache_hits,
+                "invalidated": self.invalidated,
+                "overloads": self.overloads, "rerouted": self.rerouted,
+                "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
                 "requests_per_s": self.requests_per_s}
 
 

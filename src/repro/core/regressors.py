@@ -522,8 +522,19 @@ class DNNRegressor:
         self.params, self._stats = fitted.params, fitted._stats
         return self
 
+    # rows are padded to power-of-two buckets (>= 8) before the jax apply:
+    # XLA compiles each distinct input shape, and a serving layer produces
+    # arbitrary wave sizes — without bucketing every novel row count costs
+    # a fresh ~20 ms compile per op instead of a warm dispatch
+    PREDICT_BUCKET_MIN = 8
+
     def predict(self, X: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
         mu, sd, ys = self._stats
-        Xn = jnp.asarray(((np.asarray(X) - mu) / sd).astype(np.float32))
-        return np.asarray(_mlp_apply(self.params, Xn)) * ys
+        Xn = ((np.asarray(X) - mu) / sd).astype(np.float32)
+        n = Xn.shape[0]
+        m = max(self.PREDICT_BUCKET_MIN, 1 << max(n - 1, 0).bit_length())
+        if m != n:
+            Xn = np.pad(Xn, ((0, m - n), (0, 0)))
+        out = np.asarray(_mlp_apply(self.params, jnp.asarray(Xn)))
+        return out[:n] * ys

@@ -1,0 +1,135 @@
+"""HTTP latency-prediction service entrypoint.
+
+Stands ``repro.serve.transport`` up over a fitted oracle and either serves
+foreground traffic or replays a synthetic client load against itself:
+
+    # self-replay (default): N concurrent clients vs the live socket
+    PYTHONPATH=src python -m repro.launch.serve_http \
+        --requests 400 --clients 8 --wave 64
+
+    # stay up and serve real clients
+    PYTHONPATH=src python -m repro.launch.serve_http --serve --port 8080
+
+    # exercise a mid-traffic oracle refresh during the replay
+    PYTHONPATH=src python -m repro.launch.serve_http --refresh-mid-replay
+
+Default is a small fast oracle (2 devices, deterministic members);
+``--full`` fits the paper's 4-device grid with the DNN member (cached via
+the versioned artifact store, like the advisor CLI).
+"""
+import argparse
+import pathlib
+import sys
+import threading
+
+
+def _fit_oracle(full: bool, cache: pathlib.Path, epochs: int, seed: int):
+    from repro import api
+    from repro.core import workloads
+    from repro.core.predictor import ProfetConfig
+
+    if full:
+        cfg = ProfetConfig(dnn_epochs=epochs, seed=seed)
+        return api.fit_or_load(
+            cache, cfg,
+            fit_fn=lambda: api.LatencyOracle.fit(workloads.generate(), cfg))
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    cfg = ProfetConfig(members=("linear", "forest"), n_trees=30, seed=seed)
+    return api.LatencyOracle.fit(ds, cfg)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = pick a free port")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve foreground until interrupted (no replay)")
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--clients", type=int, default=8,
+                    help="concurrent replay connections")
+    ap.add_argument("--wave", type=int, default=64,
+                    help="max requests admitted per wave")
+    ap.add_argument("--cache-size", type=int, default=4096)
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="bounded admission queue (503 past it)")
+    ap.add_argument("--refresh-mid-replay", action="store_true",
+                    help="refit (new seed) and oracle_refreshed() halfway "
+                         "through the replay — demonstrates epoch swap "
+                         "under live traffic")
+    ap.add_argument("--full", action="store_true",
+                    help="paper 4-device grid + DNN member (slow fit, "
+                         "cached)")
+    ap.add_argument("--cache", default="results/serve_latency_oracle.pkl",
+                    help="oracle artifact path (--full only)")
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.serve import (BackgroundServer, Client, LatencyService,
+                             replay, synthetic_requests)
+
+    oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
+                         args.epochs, args.seed)
+    service = LatencyService(oracle, max_wave=args.wave,
+                             cache_size=args.cache_size)
+    bg = BackgroundServer(service, host=args.host, port=args.port,
+                          max_queue=args.max_queue).start()
+    print(f"serving http://{bg.host}:{bg.port}  "
+          f"epoch {service.epoch}  "
+          f"pairs: {', '.join(f'{a}->{t}' for a, t in oracle.pairs())}")
+
+    try:
+        if args.serve:
+            print("endpoints: POST /predict /grid /advise  "
+                  "GET /healthz /statsz  (ctrl-c to stop)")
+            try:
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("\ninterrupted")
+            return 0
+
+        reqs = synthetic_requests(oracle, n=args.requests, seed=args.seed)
+        swapper = None
+        if args.refresh_mid_replay:
+            # same grid shape as the serving oracle (the stream must stay
+            # answerable), new seed = a genuinely different model; --full
+            # refits into a sibling artifact so the main cache survives
+            fresh = _fit_oracle(args.full,
+                                pathlib.Path(args.cache + ".refresh"),
+                                args.epochs, args.seed + 1)
+
+            def swap():
+                epoch = service.oracle_refreshed(fresh, "refreshed")
+                print(f"  [swap] oracle refreshed mid-replay -> "
+                      f"epoch {epoch}")
+
+            swapper = threading.Timer(0.05, swap)
+            swapper.start()
+        rep = replay(bg.host, bg.port, reqs, clients=args.clients)
+        if swapper is not None:
+            swapper.join()
+        s = service.stats
+        print(f"replay: {rep['ok']}/{rep['n']} ok  "
+              f"{len(rep['errors'])} rejected  "
+              f"{rep['wall_s']:.2f} s  {rep['requests_per_s']:.0f} req/s  "
+              f"client p50 {rep['client_p50_ms']:.2f} ms  "
+              f"p99 {rep['client_p99_ms']:.2f} ms")
+        print(f"service: {s.waves} waves  {s.fused_calls} fused calls  "
+              f"{s.cache_hits} cache hits  {s.errors} errors  "
+              f"epoch {s.epoch} (swaps {s.epoch_swaps}, "
+              f"invalidated {s.invalidated})")
+        with Client(bg.host, bg.port) as c:
+            h = c.healthz()
+            print(f"healthz: {h['status']}  epoch {h['epoch']}  "
+                  f"pending {h['pending']}")
+        epochs = {r["epoch"] for r in rep["results"] if r is not None}
+        print(f"response epochs seen: {', '.join(sorted(epochs))}")
+        return 0
+    finally:
+        bg.stop()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

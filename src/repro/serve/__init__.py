@@ -1,8 +1,12 @@
 """``repro.serve`` — serving front-ends.
 
   - ``LatencyService`` / ``ServiceRequest`` / ``ServiceStats``: wave-based
-    microbatching + LRU-cached PROFET latency prediction over
-    ``repro.api.LatencyOracle`` (this package's prediction product);
+    microbatching + epoch-keyed LRU caching of PROFET latency prediction
+    over ``repro.api.LatencyOracle`` (this package's prediction product),
+    with ``oracle_refreshed`` mid-traffic model swaps;
+  - ``transport``: the asyncio HTTP front end over the service
+    (``TransportServer`` / ``BackgroundServer``), its blocking ``Client``,
+    and the ``replay`` load generator;
   - ``Engine``: the token-serving engine for the model zoo
     (``repro.serve.engine``; imported lazily — it pulls in jax + the model
     stack).
@@ -10,9 +14,12 @@
 from repro.api.types import ServiceStats
 from repro.serve.latency_service import (LatencyService, ServiceRequest,
                                          synthetic_requests)
+from repro.serve.transport import (BackgroundServer, Client, TransportError,
+                                   TransportServer, replay)
 
-__all__ = ["Engine", "LatencyService", "ServiceRequest", "ServiceStats",
-           "synthetic_requests"]
+__all__ = ["BackgroundServer", "Client", "Engine", "LatencyService",
+           "ServiceRequest", "ServiceStats", "TransportError",
+           "TransportServer", "replay", "synthetic_requests"]
 
 
 def __getattr__(name):

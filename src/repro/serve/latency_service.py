@@ -11,27 +11,40 @@ present, not one Python round-trip per request.
 
 On top of the executor the service adds:
 
-  - a **fingerprint-keyed LRU cache**: a request whose content (anchor,
-    target, workload, mode, knob, profile-by-value) was answered before is
-    completed without planning or executing anything;
+  - an **epoch-keyed LRU cache**: a request whose content (anchor, target,
+    workload, mode, knob, profile-by-value) was answered before *under the
+    current oracle epoch* is completed without planning or executing
+    anything. The epoch defaults to the oracle's artifact-store config
+    fingerprint;
+  - **refresh-aware swaps**: :meth:`LatencyService.oracle_refreshed`
+    atomically replaces the oracle mid-traffic — in-flight waves drain on
+    the oracle they were admitted under, new admissions plan/execute/cache
+    under the new epoch, and every stale cache entry is invalidated;
   - **per-request error isolation**: planning happens per request, so one
     unroutable request (unknown device, off-catalog price, no min/max
     configs) marks only itself failed — the rest of the wave executes;
-  - **``ServiceStats``**: requests, waves, fused calls, cache hits, errors,
-    wall time, and p50/p99 per-request service latency.
+  - **``ServiceStats``**: requests, waves, fused calls, cache hits (lifetime
+    + per-epoch), epoch swaps/invalidations, errors, wall time, and p50/p99
+    per-request service latency.
+
+The queue, cache, and swap paths are lock-guarded so an async transport
+(``repro.serve.transport``) can submit from its event loop while a worker
+thread drains waves.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.oracle import LatencyOracle
 from repro.api.planner import minmax_cases, request_fingerprint
-from repro.api.types import (ApiError, KNOB_BATCH, KNOB_PIXEL, PredictRequest,
+from repro.api.types import (ANCHOR_ANY, ApiError, ExecutionError,
+                             KNOB_BATCH, KNOB_PIXEL, PredictRequest,
                              PredictResult, ServiceStats, Workload)
 
 _MISS = object()
@@ -60,7 +73,7 @@ class LatencyService:
     """Queue -> admit wave -> fused execute -> complete."""
 
     def __init__(self, oracle: LatencyOracle, *, max_wave: int = 64,
-                 cache_size: int = 4096):
+                 cache_size: int = 4096, epoch: Optional[str] = None):
         self.oracle = oracle
         self.max_wave = int(max_wave)
         self.cache_size = int(cache_size)
@@ -69,35 +82,100 @@ class LatencyService:
         self.stats = ServiceStats()
         self._cache: "OrderedDict[tuple, PredictResult]" = OrderedDict()
         self._uid = 0
+        self._lock = threading.Lock()
+        self._epoch = epoch if epoch is not None else oracle.fingerprint
+        self._used_epochs = {self._epoch}
+        self.stats.epoch = self._epoch
+
+    @property
+    def epoch(self) -> str:
+        """The cache epoch new admissions are served under."""
+        return self._epoch
 
     # ------------------------------------------------------------------
     def submit(self, request: PredictRequest) -> ServiceRequest:
-        sr = ServiceRequest(uid=self._uid, request=request,
-                            t_submit=time.perf_counter())
-        self._uid += 1
-        self.queue.append(sr)
+        t = time.perf_counter()
+        with self._lock:
+            sr = ServiceRequest(uid=self._uid, request=request, t_submit=t)
+            self._uid += 1
+            self.queue.append(sr)
         return sr
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self.queue)
+
+    def queued_uids(self) -> set:
+        with self._lock:
+            return {sr.uid for sr in self.queue}
+
+    # ------------------------------------------------------------------
+    def oracle_refreshed(self, oracle: Optional[LatencyOracle] = None,
+                         fingerprint: Optional[str] = None) -> str:
+        """Refresh hook: atomically swap in a refit oracle mid-traffic.
+
+        The new cache epoch is ``fingerprint`` (typically the refreshed
+        artifact's store fingerprint); when omitted it is derived from the
+        new oracle's config fingerprint. Either way, an epoch equal to the
+        current one is uniquified with the swap counter — a refresh means
+        the model changed even when the label did not, so stale entries
+        must never survive the swap. In-flight
+        waves keep draining on the oracle they snapshotted at admission;
+        every wave admitted after this returns plans, executes, and caches
+        under the new epoch. Stale cache entries are purged (counted in
+        ``stats.invalidated``) and the per-epoch hit counter resets.
+        Returns the new epoch."""
+        with self._lock:
+            if oracle is not None:
+                self.oracle = oracle
+            epoch = (fingerprint if fingerprint is not None
+                     else self.oracle.fingerprint)
+            # a refresh means the model changed even when the label did
+            # not (same-config refit, or an operator reusing a deploy
+            # tag). Uniquify against every epoch EVER used, not just the
+            # current one — an A/B/A label sequence would otherwise let an
+            # in-flight old-epoch wave cache stale results under the
+            # re-current epoch.
+            n = self.stats.epoch_swaps
+            while epoch in self._used_epochs:
+                n += 1
+                epoch = f"{epoch}+{n}"
+            self._used_epochs.add(epoch)
+            self._epoch = epoch
+            stale = [k for k in self._cache if k[0] != epoch]
+            for k in stale:
+                del self._cache[k]
+            self.stats.invalidated += len(stale)
+            self.stats.epoch_swaps += 1
+            self.stats.epoch_cache_hits = 0
+            self.stats.epoch = epoch
+            return epoch
 
     # ------------------------------------------------------------------
     def _complete(self, sr: ServiceRequest) -> None:
         sr.done = True
         sr.t_finish = time.perf_counter()
-        self.finished.append(sr)
+        with self._lock:
+            self.finished.append(sr)
         self.stats.latencies_ms.append(sr.latency_ms)
 
-    def _run_wave(self, wave: Sequence[ServiceRequest]) -> None:
+    def _run_wave(self, wave: Sequence[ServiceRequest],
+                  oracle: LatencyOracle, epoch: str) -> None:
         plans, pending = [], []
         for sr in wave:
-            key = request_fingerprint(sr.request)
-            hit = self._cache.get(key, _MISS)
+            key = (epoch,) + request_fingerprint(sr.request)
+            with self._lock:
+                hit = self._cache.get(key, _MISS)
+                if hit is not _MISS:
+                    self._cache.move_to_end(key)
+                    self.stats.cache_hits += 1
+                    self.stats.epoch_cache_hits += 1
             if hit is not _MISS:
-                self._cache.move_to_end(key)
-                self.stats.cache_hits += 1
                 sr.result = hit
                 self._complete(sr)
                 continue
             try:
-                plans.append(self.oracle.plan(sr.request))
+                plans.append(oracle.plan(sr.request))
             except ApiError as e:
                 self.stats.errors += 1
                 sr.error = e
@@ -105,27 +183,71 @@ class LatencyService:
                 continue
             pending.append((sr, key))
         if plans:
-            batch = self.oracle.execute(plans)
+            try:
+                batch = oracle.execute(plans, epoch=epoch)
+            except Exception as e:
+                # an executor-level failure (bug, resource exhaustion) must
+                # not escape run(): it would kill a transport's pump task
+                # and hang every queued client. Fail the wave's requests
+                # individually instead; the service stays up.
+                err = e if isinstance(e, ApiError) else ExecutionError(
+                    f"wave execution failed: {e!r}")
+                for sr, _ in pending:
+                    self.stats.errors += 1
+                    sr.error = err
+                    self._complete(sr)
+                self.stats.requests += len(wave)
+                self.stats.waves += 1
+                return
             self.stats.fused_calls += batch.fused_calls
             for (sr, key), res in zip(pending, batch.results):
                 sr.result = res
-                self._cache[key] = res
-                while len(self._cache) > self.cache_size:
-                    self._cache.popitem(last=False)
+                if sr.request.anchor == ANCHOR_ANY:
+                    self.stats.rerouted += 1
+                with self._lock:
+                    # a swap may have landed mid-execute: entries keyed to
+                    # a stale epoch can never be hit again, so don't store
+                    if key[0] == self._epoch:
+                        self._cache[key] = res
+                        while len(self._cache) > self.cache_size:
+                            self._cache.popitem(last=False)
                 self._complete(sr)
         self.stats.requests += len(wave)
         self.stats.waves += 1
 
+    def _next_wave(self) -> Tuple[List[ServiceRequest], LatencyOracle, str]:
+        """Atomically admit the next wave under the current oracle epoch."""
+        with self._lock:
+            wave = self.queue[:self.max_wave]
+            del self.queue[:self.max_wave]
+            return wave, self.oracle, self._epoch
+
+    def run_once(self) -> int:
+        """Admit and execute ONE wave; returns how many requests it
+        served (0 = queue empty). A transport pumps this per executor hop
+        so each wave's responses flush as soon as it completes instead of
+        waiting for a full drain."""
+        t0 = time.perf_counter()
+        wave, oracle, epoch = self._next_wave()
+        if not wave:
+            return 0
+        self._run_wave(wave, oracle, epoch)
+        self.stats.wall_s += time.perf_counter() - t0
+        return len(wave)
+
     def run(self) -> List[ServiceRequest]:
         """Drain the queue in waves; returns finished requests in
         completion order."""
-        t0 = time.perf_counter()
-        while self.queue:
-            wave = self.queue[:self.max_wave]
-            del self.queue[:self.max_wave]
-            self._run_wave(wave)
-        self.stats.wall_s += time.perf_counter() - t0
+        while self.run_once():
+            pass
         return self.finished
+
+    def take_finished(self) -> List[ServiceRequest]:
+        """Drain and return the finished list (a long-lived transport calls
+        this after each ``run`` so completions don't accumulate forever)."""
+        with self._lock:
+            done, self.finished = self.finished, []
+        return done
 
 
 # ----------------------------------------------------------------------

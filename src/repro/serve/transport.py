@@ -1,0 +1,661 @@
+"""Async HTTP transport over ``repro.serve.LatencyService``.
+
+The layer that turns the in-process wave-microbatching service into
+something a client can actually hit: a stdlib-``asyncio`` HTTP/1.1 front
+end speaking a minimal JSON protocol. Concurrent connections admit their
+requests into the service's queue; a single pump coroutine drains the queue
+in fused waves on a worker thread and resolves one future per request —
+so N clients arriving together cost one fused ensemble call per device
+pair, not N round-trips through the model.
+
+Endpoints (all bodies and responses are JSON):
+
+  - ``POST /predict`` — one ``PredictRequest``; answers
+    ``{"ok": true, "result": {...}}`` with the prediction, resolved mode,
+    price, and the oracle *epoch* that answered it.
+  - ``POST /grid``    — a ``GridRequest`` sweep; every feasible cell rides
+    the same wave queue (shared rows fuse in the executor) and reassembles
+    into the dense NaN-padded grid.
+  - ``POST /advise``  — the advisor sweep (anchor, workload, optional
+    measured_ms/targets); one row per reachable target.
+  - ``GET /healthz``  — liveness + current epoch + queue depth.
+  - ``GET /statsz``   — ``ServiceStats.summary()`` (waves, fused calls,
+    cache hits lifetime/per-epoch, swaps, overloads, p50/p99, ...).
+
+Back-pressure: admission is bounded by ``max_queue`` *unresolved* requests
+(queued + mid-wave). Past it, requests are rejected immediately with a
+typed ``OverloadedError`` payload and HTTP 503 — the queue never grows
+without bound. Malformed payloads get a typed ``MalformedRequestError``
+response on a still-open connection; typed ``ApiError`` subclasses map to
+4xx with their class name on the wire.
+
+Oracle refresh: calling ``service.oracle_refreshed(new_oracle, fp)`` from
+any thread swaps the model mid-traffic — in-flight waves drain on the old
+oracle, later admissions are planned/executed/cached under the new epoch,
+and every response carries the epoch that answered it, so zero stale-epoch
+responses are observable (``tests/test_transport.py`` asserts it).
+
+``Client`` is the matching blocking keep-alive client (stdlib ``socket``);
+``replay`` is the multi-threaded load generator ``launch/serve_http.py``
+and ``benchmarks/bench_transport.py`` drive.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import socket
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api import oracle as oracle_mod
+from repro.api.types import (ApiError, GridRequest, KNOB_BATCH, KNOB_PIXEL,
+                             MODE_AUTO, MalformedRequestError,
+                             OverloadedError, PredictRequest, PredictResult,
+                             UnsupportedRequestError, Workload)
+from repro.serve.latency_service import LatencyService
+
+PROTOCOL = "profet/1"
+
+# HTTP status per error class; unlisted ApiErrors fall back to 400.
+_STATUS = {"OverloadedError": 503, "MalformedRequestError": 400,
+           "UnknownDeviceError": 404, "UnsupportedRequestError": 422,
+           "InvalidWorkloadError": 400, "ExecutionError": 500}
+
+
+# ----------------------------------------------------------------------
+# wire <-> typed conversions
+# ----------------------------------------------------------------------
+
+def result_to_dict(res: PredictResult) -> Dict[str, Any]:
+    d = dataclasses.asdict(res)
+    d["workload"] = dataclasses.asdict(res.workload)
+    return d
+
+
+def predict_request_from_dict(d: Any) -> PredictRequest:
+    if not isinstance(d, dict):
+        raise MalformedRequestError(
+            f"predict payload must be a JSON object, got {type(d).__name__}")
+    try:
+        w = d["workload"]
+        workload = Workload(model=str(w["model"]), batch=int(w["batch"]),
+                            pix=int(w["pix"]))
+        profile = d.get("profile")
+        if profile is not None:
+            profile = {str(k): float(v) for k, v in profile.items()}
+        return PredictRequest(anchor=str(d["anchor"]),
+                              target=str(d["target"]), workload=workload,
+                              profile=profile,
+                              mode=str(d.get("mode", MODE_AUTO)),
+                              knob=str(d.get("knob", KNOB_BATCH)))
+    except ApiError:
+        raise                      # typed already (e.g. InvalidWorkloadError)
+    except (KeyError, TypeError, ValueError, AttributeError) as e:
+        raise MalformedRequestError(f"bad predict payload: {e!r}") from e
+
+
+def grid_request_from_dict(d: Any) -> GridRequest:
+    if not isinstance(d, dict):
+        raise MalformedRequestError(
+            f"grid payload must be a JSON object, got {type(d).__name__}")
+    try:
+        return GridRequest(anchor=str(d["anchor"]), model=str(d["model"]),
+                           targets=tuple(str(t) for t in d["targets"]),
+                           batches=tuple(int(b) for b in d["batches"]),
+                           pixels=tuple(int(p) for p in d["pixels"]))
+    except (KeyError, TypeError, ValueError) as e:
+        raise MalformedRequestError(f"bad grid payload: {e!r}") from e
+
+
+def _error_payload(e: Exception) -> Tuple[int, Dict[str, Any]]:
+    name = type(e).__name__
+    return (_STATUS.get(name, 400 if isinstance(e, ApiError) else 500),
+            {"ok": False, "error": {"type": name, "message": str(e)}})
+
+
+# ----------------------------------------------------------------------
+# the asyncio server
+# ----------------------------------------------------------------------
+
+class TransportServer:
+    """HTTP/1.1 front end over one :class:`LatencyService`.
+
+    Run it inside an event loop (``await server.start()``) or, from
+    synchronous code, via :class:`BackgroundServer`. ``max_queue`` bounds
+    unresolved admissions; ``pause()``/``resume()`` gate the wave pump
+    (drain-for-maintenance, and a deterministic seam for overload tests).
+    """
+
+    def __init__(self, service: LatencyService, *, host: str = "127.0.0.1",
+                 port: int = 0, max_queue: int = 1024,
+                 batch_window_s: float = 0.005):
+        self.service = service
+        self.host = host
+        self.port = port
+        self.max_queue = int(max_queue)
+        self.batch_window_s = float(batch_window_s)
+        self._futs: Dict[int, asyncio.Future] = {}
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._pump_task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._paused = False
+
+    # ------------------------------------------------------------------
+    async def start(self) -> "TransportServer":
+        self._loop = asyncio.get_running_loop()
+        self._wake = asyncio.Event()
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._pump_task = asyncio.create_task(self._pump())
+        return self
+
+    async def stop(self) -> None:
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            try:
+                await self._pump_task
+            except asyncio.CancelledError:
+                pass
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        for fut in self._futs.values():
+            if not fut.done():
+                fut.set_exception(ConnectionError("server stopped"))
+        self._futs.clear()
+
+    def pause(self) -> None:
+        """Stop admitting waves (queued requests wait; admissions still
+        accepted until ``max_queue``)."""
+        self._paused = True
+
+    def resume(self) -> None:
+        self._paused = False
+        self._loop.call_soon_threadsafe(self._wake.set)
+
+    # ------------------------------------------------------------------
+    # admission + wave pump
+    # ------------------------------------------------------------------
+    def _admit(self, reqs: Sequence[PredictRequest]) -> List[asyncio.Future]:
+        """Bounded admission: all-or-nothing enqueue of a request group."""
+        if len(self._futs) + len(reqs) > self.max_queue:
+            self.service.stats.overloads += 1
+            raise OverloadedError(
+                f"admission queue full ({len(self._futs)} unresolved, "
+                f"max {self.max_queue}); retry later")
+        futs = []
+        for r in reqs:
+            sr = self.service.submit(r)
+            fut = self._loop.create_future()
+            self._futs[sr.uid] = fut
+            futs.append(fut)
+        self._wake.set()
+        return futs
+
+    async def _pump(self) -> None:
+        while True:
+            await self._wake.wait()
+            self._wake.clear()
+            while self.service.pending() and not self._paused:
+                # admission window (the standard microbatching trade): give
+                # concurrently-arriving requests a moment to join the wave,
+                # then run the blocking fused drain on a worker thread —
+                # the loop keeps accepting + admitting meanwhile, so
+                # requests landing mid-wave batch into the next one
+                if self.batch_window_s > 0:
+                    await asyncio.sleep(self.batch_window_s)
+                # ONE wave per hop, so a wave's responses flush the moment
+                # it completes — a full-drain call would withhold early
+                # waves' results while later admissions keep it looping.
+                # The service fails broken waves per-request, so run_once()
+                # raising is already a bug — but a dead pump would hang
+                # every queued client behind a green /healthz, so resolve
+                # what finished, fail what the wave lost (neither finished
+                # nor still queued), and keep pumping regardless.
+                try:
+                    await self._loop.run_in_executor(None,
+                                                     self.service.run_once)
+                except asyncio.CancelledError:
+                    raise
+                except Exception as e:
+                    for sr in self.service.take_finished():
+                        fut = self._futs.pop(sr.uid, None)
+                        if fut is not None and not fut.done():
+                            fut.set_result(sr)
+                    queued = self.service.queued_uids()
+                    for uid in [u for u in self._futs if u not in queued]:
+                        fut = self._futs.pop(uid)
+                        if not fut.done():
+                            fut.set_exception(e)
+                    continue
+                for sr in self.service.take_finished():
+                    fut = self._futs.pop(sr.uid, None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(sr)
+
+    # ------------------------------------------------------------------
+    # HTTP plumbing
+    # ------------------------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                parsed = await self._read_request(reader)
+                if parsed is None:
+                    break
+                method, path, headers, body, framing_ok = parsed
+                if not framing_ok:
+                    status, payload = 400, {
+                        "ok": False,
+                        "error": {"type": "MalformedRequestError",
+                                  "message": "unparseable HTTP framing"}}
+                    keep = False
+                else:
+                    keep = headers.get("connection", "").lower() != "close"
+                    status, payload = await self._dispatch(method, path,
+                                                           body)
+                data = json.dumps(payload).encode()
+                writer.write(
+                    b"HTTP/1.1 %d %s\r\n"
+                    b"Content-Type: application/json\r\n"
+                    b"Content-Length: %d\r\n"
+                    b"X-Profet-Protocol: %s\r\n"
+                    b"Connection: %s\r\n\r\n"
+                    % (status, _reason(status).encode(), len(data),
+                       PROTOCOL.encode(),
+                       b"keep-alive" if keep else b"close"))
+                writer.write(data)
+                await writer.drain()
+                if not keep:
+                    break
+        except (ConnectionError, asyncio.IncompleteReadError,
+                asyncio.LimitOverrunError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _read_request(self, reader: asyncio.StreamReader):
+        """One HTTP request off the stream. Returns None on clean EOF,
+        or (method, path, headers, body, framing_ok). ``framing_ok=False``
+        flags an unparseable request line/headers — answered with a typed
+        400, then the connection closes (resync is impossible)."""
+        headers: Dict[str, str] = {}
+        try:
+            line = await reader.readline()
+            if not line:
+                return None
+            parts = line.decode("latin-1").strip().split()
+            if len(parts) != 3:
+                return "?", "?", headers, b"", False
+            method, path, _ = parts
+            while True:
+                h = await reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                if b":" not in h:
+                    return method, path, headers, b"", False
+                k, v = h.decode("latin-1").split(":", 1)
+                headers[k.strip().lower()] = v.strip()
+            n = int(headers.get("content-length", "0"))
+            body = await reader.readexactly(n) if n else b""
+        except ValueError:
+            # over-limit request/header line (StreamReader raises bare
+            # ValueError past its 64 KiB limit) or a bad content-length —
+            # answer with the typed 400, don't drop the connection silently
+            return "?", "?", headers, b"", False
+        return method, path, headers, body, True
+
+    async def _dispatch(self, method: str, path: str,
+                        body: bytes) -> Tuple[int, Dict[str, Any]]:
+        try:
+            if path == "/healthz":
+                if method != "GET":
+                    return 405, _method_not_allowed(method)
+                return 200, {"ok": True, "status": "ok",
+                             "protocol": PROTOCOL,
+                             "epoch": self.service.epoch,
+                             "pairs": len(self.service.oracle.pairs()),
+                             "pending": len(self._futs),
+                             "paused": self._paused}
+            if path == "/statsz":
+                if method != "GET":
+                    return 405, _method_not_allowed(method)
+                return 200, {"ok": True,
+                             "stats": self.service.stats.summary(),
+                             "pending": len(self._futs),
+                             "max_queue": self.max_queue}
+            if path == "/predict":
+                if method != "POST":
+                    return 405, _method_not_allowed(method)
+                return await self._predict(_decode_json(body))
+            if path == "/grid":
+                if method != "POST":
+                    return 405, _method_not_allowed(method)
+                return await self._grid(_decode_json(body))
+            if path == "/advise":
+                if method != "POST":
+                    return 405, _method_not_allowed(method)
+                return await self._advise(_decode_json(body))
+            return 404, {"ok": False,
+                         "error": {"type": "NotFound",
+                                   "message": f"no route {path!r}"}}
+        except Exception as e:  # every error leaves as a typed payload
+            return _error_payload(e)
+
+    # ------------------------------------------------------------------
+    # endpoints
+    # ------------------------------------------------------------------
+    async def _predict(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+        req = predict_request_from_dict(payload)
+        [fut] = self._admit([req])
+        sr = await fut
+        if sr.error is not None:
+            status, out = _error_payload(sr.error)
+            return status, out
+        return 200, {"ok": True, "result": result_to_dict(sr.result),
+                     "service_ms": sr.latency_ms}
+
+    def _check_sweep_size(self, what: str, n: int) -> None:
+        """A sweep larger than the whole admission queue can never be
+        admitted — that is a permanent request-shape problem (422), not a
+        transient overload (503 'retry later')."""
+        if n > self.max_queue:
+            raise UnsupportedRequestError(
+                f"{what} expands to {n} cell requests, more than the "
+                f"admission queue holds ({self.max_queue}); split the "
+                "sweep")
+
+    async def _grid(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+        greq = grid_request_from_dict(payload)
+        oracle = self.service.oracle
+        reqs, scatter = oracle.stage_grid(greq)   # validates anchor/pairs
+        self._check_sweep_size("grid", len(reqs))
+        srs = [await f for f in self._admit(reqs)]
+        for sr in srs:
+            if sr.error is not None:
+                return _error_payload(sr.error)
+        lat = np.array([sr.result.latency_ms for sr in srs])
+        grid = oracle_mod.assemble_grid(greq, scatter, lat)
+        return 200, {"ok": True, "grid": grid.to_dict(),
+                     "epochs": sorted({sr.result.epoch for sr in srs})}
+
+    async def _advise(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+        if not isinstance(payload, dict):
+            raise MalformedRequestError(
+                f"advise payload must be a JSON object, "
+                f"got {type(payload).__name__}")
+        try:
+            anchor = str(payload["anchor"])
+            w = payload["workload"]
+            workload = Workload(model=str(w["model"]),
+                                batch=int(w["batch"]), pix=int(w["pix"]))
+            profile = payload.get("profile")
+            if profile is not None:
+                profile = {str(k): float(v) for k, v in profile.items()}
+            measured = payload.get("measured_ms")
+            measured = None if measured is None else float(measured)
+            targets = payload.get("targets")
+            targets = None if targets is None else [str(t) for t in targets]
+        except ApiError:
+            raise
+        except (KeyError, TypeError, ValueError, AttributeError) as e:
+            raise MalformedRequestError(f"bad advise payload: {e!r}") from e
+        oracle = self.service.oracle
+        reqs, scatter = oracle.stage_advise(anchor, workload, profile,
+                                            measured, targets)
+        self._check_sweep_size("advise", len(reqs))
+        srs = [await f for f in self._admit(reqs)]
+        for sr in srs:
+            if sr.error is not None:
+                return _error_payload(sr.error)
+        rows = oracle_mod.assemble_advise(scatter,
+                                          [sr.result for sr in srs],
+                                          epoch=self.service.epoch)
+        return 200, {"ok": True,
+                     "rows": [result_to_dict(r) for r in rows]}
+
+
+def _decode_json(body: bytes) -> Any:
+    try:
+        return json.loads(body.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise MalformedRequestError(f"body is not valid JSON: {e}") from e
+
+
+def _method_not_allowed(method: str) -> Dict[str, Any]:
+    return {"ok": False, "error": {"type": "MethodNotAllowed",
+                                   "message": f"method {method!r}"}}
+
+
+def _reason(status: int) -> str:
+    return {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 422: "Unprocessable Entity",
+            500: "Internal Server Error",
+            503: "Service Unavailable"}.get(status, "Unknown")
+
+
+# ----------------------------------------------------------------------
+# background runner (tests, benchmarks, CLI)
+# ----------------------------------------------------------------------
+
+class BackgroundServer:
+    """A :class:`TransportServer` on its own event-loop thread, so
+    synchronous code (pytest, benchmarks, the CLI's self-replay mode) can
+    stand a live socket up and tear it down."""
+
+    def __init__(self, service: LatencyService, **kwargs):
+        self.server = TransportServer(service, **kwargs)
+        self._thread = threading.Thread(target=self._run,
+                                        name="profet-transport", daemon=True)
+        self._started = threading.Event()
+        self._stop_event: Optional[asyncio.Event] = None
+
+    def _run(self) -> None:
+        asyncio.run(self._main())
+
+    async def _main(self) -> None:
+        await self.server.start()
+        self._stop_event = asyncio.Event()
+        self._started.set()
+        await self._stop_event.wait()
+        await self.server.stop()
+
+    def start(self, timeout: float = 10.0) -> "BackgroundServer":
+        self._thread.start()
+        if not self._started.wait(timeout):
+            raise RuntimeError("transport server failed to start")
+        return self
+
+    @property
+    def port(self) -> int:
+        return self.server.port
+
+    @property
+    def host(self) -> str:
+        return self.server.host
+
+    def stop(self, timeout: float = 10.0) -> None:
+        if self._stop_event is not None:
+            self.server._loop.call_soon_threadsafe(self._stop_event.set)
+        self._thread.join(timeout)
+
+
+# ----------------------------------------------------------------------
+# blocking client + load generator
+# ----------------------------------------------------------------------
+
+class TransportError(RuntimeError):
+    """A non-2xx transport response, carrying the typed error payload."""
+
+    def __init__(self, status: int, error: Dict[str, Any]):
+        super().__init__(f"[{status}] {error.get('type')}: "
+                         f"{error.get('message')}")
+        self.status = status
+        self.error = error or {}
+
+    @property
+    def error_type(self) -> str:
+        return str(self.error.get("type", ""))
+
+
+class Client:
+    """Minimal blocking keep-alive HTTP client for the transport (stdlib
+    ``socket`` only). One instance == one connection; use one per thread."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self._sock: Optional[socket.socket] = None
+
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            self._sock = socket.create_connection((self.host, self.port),
+                                                  timeout=self.timeout)
+        return self._sock
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            finally:
+                self._sock = None
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- low level ------------------------------------------------------
+    def request(self, method: str, path: str,
+                payload: Any = None) -> Tuple[int, Dict[str, Any]]:
+        body = b"" if payload is None else json.dumps(payload).encode()
+        head = (f"{method} {path} HTTP/1.1\r\n"
+                f"Host: {self.host}:{self.port}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: keep-alive\r\n\r\n").encode()
+        for attempt in (0, 1):
+            sock = self._connect()
+            try:
+                sock.sendall(head + body)
+                return self._read_response(sock)
+            except (ConnectionError, socket.timeout, OSError):
+                self.close()
+                if attempt:
+                    raise
+        raise ConnectionError("unreachable")   # pragma: no cover
+
+    def _read_response(self, sock: socket.socket) -> Tuple[int, Dict]:
+        buf = b""
+        while b"\r\n\r\n" not in buf:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed mid-response")
+            buf += chunk
+        head, rest = buf.split(b"\r\n\r\n", 1)
+        lines = head.decode("latin-1").split("\r\n")
+        status = int(lines[0].split()[1])
+        headers = {}
+        for ln in lines[1:]:
+            k, _, v = ln.partition(":")
+            headers[k.strip().lower()] = v.strip()
+        n = int(headers.get("content-length", "0"))
+        while len(rest) < n:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed mid-body")
+            rest += chunk
+        if headers.get("connection", "").lower() == "close":
+            self.close()
+        return status, json.loads(rest[:n].decode("utf-8"))
+
+    # -- typed endpoints ------------------------------------------------
+    def _checked(self, method: str, path: str, payload: Any = None) -> Dict:
+        status, out = self.request(method, path, payload)
+        if status != 200 or not out.get("ok", False):
+            raise TransportError(status, out.get("error", {}))
+        return out
+
+    def predict(self, req) -> Dict[str, Any]:
+        """``req``: a ``PredictRequest`` or an equivalent dict. Returns the
+        result dict (latency_ms, mode, price_hr, epoch, ...)."""
+        if isinstance(req, PredictRequest):
+            req = request_to_dict(req)
+        return self._checked("POST", "/predict", req)["result"]
+
+    def grid(self, req) -> Dict[str, Any]:
+        if isinstance(req, GridRequest):
+            req = dataclasses.asdict(req)
+        return self._checked("POST", "/grid", req)
+
+    def advise(self, payload: Dict[str, Any]) -> List[Dict[str, Any]]:
+        return self._checked("POST", "/advise", payload)["rows"]
+
+    def healthz(self) -> Dict[str, Any]:
+        return self._checked("GET", "/healthz")
+
+    def statsz(self) -> Dict[str, Any]:
+        return self._checked("GET", "/statsz")
+
+
+def request_to_dict(req: PredictRequest) -> Dict[str, Any]:
+    return {"anchor": req.anchor, "target": req.target,
+            "workload": dataclasses.asdict(req.workload),
+            "profile": None if req.profile is None else dict(req.profile),
+            "mode": req.mode, "knob": req.knob}
+
+
+def replay(host: str, port: int, requests: Sequence[PredictRequest],
+           clients: int = 8) -> Dict[str, Any]:
+    """Client-replay load generator: partition ``requests`` round-robin
+    over ``clients`` threads (one keep-alive connection each) and fire them
+    concurrently. Returns wall time, per-request client-side latencies, the
+    responses in original request order, and any typed errors."""
+    results: List[Optional[Dict[str, Any]]] = [None] * len(requests)
+    errors: List[Tuple[int, str]] = []
+    lat_ms: List[float] = []
+    lock = threading.Lock()
+
+    def worker(offset: int) -> None:
+        with Client(host, port) as c:
+            for i in range(offset, len(requests), clients):
+                t0 = time.perf_counter()
+                try:
+                    res = c.predict(requests[i])
+                except TransportError as e:
+                    with lock:
+                        errors.append((i, e.error_type))
+                    continue
+                dt = 1e3 * (time.perf_counter() - t0)
+                with lock:
+                    results[i] = res
+                    lat_ms.append(dt)
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(max(1, int(clients)))]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    arr = np.array(lat_ms) if lat_ms else np.array([np.nan])
+    return {"wall_s": wall, "n": len(requests), "clients": clients,
+            "ok": sum(r is not None for r in results),
+            "errors": errors, "results": results,
+            "client_p50_ms": float(np.nanpercentile(arr, 50)),
+            "client_p99_ms": float(np.nanpercentile(arr, 99)),
+            "latencies_ms": lat_ms,
+            "requests_per_s": len(requests) / wall if wall else 0.0}
