@@ -1,0 +1,161 @@
+"""Stacked ModelBank wave execution vs the per-group executor path.
+
+One full-catalog mixed wave — every trained (anchor, target) pair, cross +
+two-phase + measured requests shuffled together — executed twice from the
+same prebuilt plans:
+
+  baseline = the per-group path (one fused ``MedianEnsemble.predict`` per
+  pair: O(pairs) Python dispatches, O(pairs) forest traversals, O(pairs)
+  separately padded MLP applies);
+  stacked  = ``oracle.execute`` through the ModelBank (ONE grouped forest
+  launch + ONE stacked MLP apply + row-stable linear/median for the whole
+  wave, ``fused_calls == 1``).
+
+Equality is asserted on every run: stacked answers must match the
+per-group path element-wise — bit-for-bit for the float64 members (linear,
+forest, phase-2 interpolation, checked member-wise across every pair), and
+to float32 precision for the DNN member. Acceptance floor: >= 3x.
+
+    PYTHONPATH=src python -m benchmarks.bench_bank           # full
+    PYTHONPATH=src python -m benchmarks.bench_bank --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro import api
+from repro.api import executor
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.core.regressors import LinearRegressor
+from repro.kernels import forest_eval
+from repro.serve import synthetic_requests
+
+TARGET_SPEEDUP = 3.0
+N_REQUESTS = 600
+
+
+def _fit_oracle(smoke: bool) -> api.LatencyOracle:
+    # the win scales with the pair count (the per-group path pays O(pairs)
+    # dispatches), so both tiers sweep SIX devices = 30 pairs; smoke keeps
+    # the fit cheap with fewer models and a token DNN
+    if smoke:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60", "A10", "P100"),
+            models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(dnn_epochs=5, n_trees=30, seed=0)
+    else:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60", "A10", "P100"),
+            models=("LeNet5", "AlexNet", "ResNet18", "VGG11", "ResNet50",
+                    "MobileNetV2"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=60, seed=0)
+    return api.LatencyOracle.fit(ds, cfg)
+
+
+def _assert_float64_members_exact(oracle: api.LatencyOracle) -> None:
+    """Bank linear + forest stacks vs each pair's own fitted members —
+    must agree bit-for-bit on shared rows."""
+    bank = oracle.bank
+    f = bank.forest
+    for pair in oracle.pairs():
+        anchor, _ = pair
+        X = oracle.feature_matrix(anchor, oracle.dataset.cases[:8])
+        gids = np.full(len(X), bank.gid[pair])
+        ens = oracle.ensemble(*pair)
+        np.testing.assert_array_equal(
+            LinearRegressor.apply(LinearRegressor._design(X),
+                                  bank.lin_coef[gids]),
+            ens.models["linear"].predict(X))
+        np.testing.assert_array_equal(
+            forest_eval.predict_grouped(
+                X, gids, f["feat"], f["thr"], f["left"], f["right"],
+                f["value"], depth=f["depth"], backend="numpy"),
+            ens.models["forest"].predict(X))
+
+
+def _timed(fn, *args, reps: int):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return ts
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    oracle.warmup(max_rows=N_REQUESTS)     # compiles out of the timed loop
+    reqs = synthetic_requests(oracle, n=N_REQUESTS, seed=0)
+    plans = [oracle.plan(r) for r in reqs]
+
+    def per_group():
+        return executor.execute_plans(oracle.profet, plans, epoch="bench",
+                                      bank=None)
+
+    def stacked():
+        return oracle.execute(plans)
+
+    banked, legacy = stacked(), per_group()   # warm both + equality audit
+    assert banked.banked and banked.fused_calls == 1, banked.fused_calls
+    assert not legacy.banked and legacy.fused_calls == len(
+        {(p.anchor, p.target) for p in plans
+         if p.mode != api.MODE_MEASURED})
+    pairs_hit = {(r.anchor, r.target) for r in banked
+                 if r.anchor != r.target}
+    assert pairs_hit == set(oracle.pairs()), "wave must cover every pair"
+    if "dnn" in oracle.config.members:
+        np.testing.assert_allclose(banked.latencies(), legacy.latencies(),
+                                   rtol=1e-5)
+    else:
+        np.testing.assert_array_equal(banked.latencies(),
+                                      legacy.latencies())
+    _assert_float64_members_exact(oracle)
+
+    launches0 = oracle.bank.forest_launches
+    reps = 5 if smoke else 3
+    t_group = min(_timed(per_group, reps=reps))
+    t_stack = min(_timed(stacked, reps=reps))
+    assert oracle.bank.forest_launches == launches0 + reps
+    speedup = t_group / t_stack
+    out = {"smoke": smoke, "n_requests": len(reqs),
+           "pairs": len(oracle.pairs()),
+           "per_group_fused_calls": legacy.fused_calls,
+           "stacked_fused_calls": banked.fused_calls,
+           "rows": banked.rows, "modes": dict(banked.mode_counts),
+           "per_group_ms": 1e3 * t_group, "stacked_ms": 1e3 * t_stack,
+           "speedup": speedup, "target_speedup": TARGET_SPEEDUP}
+    from benchmarks import common
+    common.save("bank", out)
+    return {"n_requests": len(reqs), "pairs": len(oracle.pairs()),
+            "per_group_ms": out["per_group_ms"],
+            "stacked_ms": out["stacked_ms"], "speedup": speedup}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
+    print(f"bank: {r['n_requests']} mixed requests over {r['pairs']} pairs "
+          f"-> per-group {r['per_group_ms']:.1f} ms  "
+          f"stacked {r['stacked_ms']:.1f} ms  "
+          f"speedup {r['speedup']:.1f}x (target >= {TARGET_SPEEDUP:.0f}x)")
+    from benchmarks import common
+    ok = r["speedup"] >= TARGET_SPEEDUP
+    common.save_bench("bank", speedup=r["speedup"], floor=TARGET_SPEEDUP,
+                      wall_s=wall, passed=ok, smoke=smoke,
+                      extra={"pairs": r["pairs"],
+                             "stacked_fused_calls": 1})
+    if not ok:
+        print("FAIL: stacked wave execution under the speedup floor")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,8 @@ BENCHES = [
     ("serve", "benchmarks.bench_serve", "fused predict_many vs predict loop"),
     ("transport", "benchmarks.bench_transport",
      "HTTP transport concurrent vs sequential clients"),
+    ("bank", "benchmarks.bench_bank",
+     "stacked ModelBank wave vs per-group dispatch"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

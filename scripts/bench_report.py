@@ -2,12 +2,18 @@
 """Print the bench-trajectory table from ``results/bench/BENCH_*.json``.
 
 Each floor-gated benchmark (``bench_grid``, ``bench_fit``, ``bench_serve``,
-``bench_transport``) writes one machine-readable record per run — speedup,
-floor, wall time, git SHA — via ``benchmarks.common.save_bench``. CI
-uploads the records as a build artifact; this script renders them so the
-perf trajectory is visible at a glance in the job log.
+``bench_transport``, ``bench_bank``) writes one machine-readable record per
+run — speedup, floor, wall time, git SHA — via
+``benchmarks.common.save_bench``. CI uploads the records as a build
+artifact; this script renders them so the perf trajectory is visible at a
+glance in the job log.
 
-    python scripts/bench_report.py [results/bench]
+When a PREVIOUS trajectory artifact is present (its ``BENCH_*.json`` files
+dropped under ``results/bench/prev`` by default, or any directory named
+with ``--prev``), the table adds a per-bench speedup delta column against
+it — the at-a-glance answer to "did this commit move any gate".
+
+    python scripts/bench_report.py [results/bench] [--prev DIR]
 
 Exit status is 0 even when a gate failed — the gate itself already failed
 the bench stage; this is reporting only.
@@ -17,25 +23,46 @@ import pathlib
 import sys
 
 
-def rows_from(out_dir: pathlib.Path):
-    rows = []
+def _records(out_dir: pathlib.Path):
+    recs, bad = {}, []
     for path in sorted(out_dir.glob("BENCH_*.json")):
         try:
             rec = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError) as e:
-            rows.append([path.name, "-", "-", "-", "-", "-",
-                         f"unreadable: {e}"])
+            bad.append((path.name, f"unreadable: {e}"))
             continue
+        recs[rec.get("benchmark", path.stem)] = rec
+    return recs, bad
+
+
+def _fmt_delta(cur, prev):
+    if prev is None:
+        return "-"
+    try:
+        d = float(cur.get("speedup")) - float(prev.get("speedup"))
+    except (TypeError, ValueError):
+        return "-"
+    return f"{d:+.2f}x"
+
+
+def rows_from(out_dir: pathlib.Path, prev_dir: pathlib.Path):
+    recs, bad = _records(out_dir)
+    prev, _ = _records(prev_dir) if prev_dir.is_dir() else ({}, [])
+    rows = []
+    for name, rec in recs.items():
         rows.append([
-            rec.get("benchmark", path.stem),
+            name,
             f"{rec.get('speedup', float('nan')):.2f}x",
+            _fmt_delta(rec, prev.get(name)),
             f">={rec.get('floor', float('nan')):.1f}x",
             "pass" if rec.get("passed") else "FAIL",
             f"{rec.get('wall_s', float('nan')):.1f}s",
             str(rec.get("git_sha", "?")),
             str(rec.get("timestamp_iso", "?")),
         ])
-    return rows
+    for name, why in bad:
+        rows.append([name, "-", "-", "-", "-", "-", "-", why])
+    return rows, bool(prev)
 
 
 def fmt_table(rows, headers):
@@ -47,16 +74,27 @@ def fmt_table(rows, headers):
 
 
 def main(argv=None):
-    argv = argv if argv is not None else sys.argv[1:]
+    argv = list(argv if argv is not None else sys.argv[1:])
+    prev_dir = None
+    if "--prev" in argv:
+        i = argv.index("--prev")
+        if i + 1 >= len(argv):
+            print("usage: bench_report.py [results/bench] [--prev DIR]")
+            return 2
+        prev_dir = pathlib.Path(argv[i + 1])
+        del argv[i:i + 2]
     out_dir = pathlib.Path(argv[0] if argv else "results/bench")
-    rows = rows_from(out_dir)
+    if prev_dir is None:
+        prev_dir = out_dir / "prev"
+    rows, have_prev = rows_from(out_dir, prev_dir)
     if not rows:
         print(f"bench trajectory: no BENCH_*.json records under {out_dir} "
               "(run a bench_* --smoke gate first)")
         return 0
-    print(f"bench trajectory ({out_dir}):")
-    print(fmt_table(rows, ["benchmark", "speedup", "floor", "gate",
-                           "wall", "git", "when"]))
+    vs = f" (delta vs {prev_dir})" if have_prev else ""
+    print(f"bench trajectory ({out_dir}){vs}:")
+    print(fmt_table(rows, ["benchmark", "speedup", "delta", "floor",
+                           "gate", "wall", "git", "when"]))
     return 0
 
 

@@ -5,15 +5,19 @@
 #   lint         byte-compile every tree we ship (cheap syntax/import-shape
 #                sanity; no third-party linter is vendored)
 #   test         the full pytest suite
-#   bench-smoke  the four floor-gated smoke benchmarks — predict_grid (5x
+#   bench-smoke  the five floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
-#                predict_many (5x floor + element-wise equality), and the
+#                predict_many (5x floor + element-wise equality), the
 #                HTTP transport (3x concurrent-vs-sequential client floor +
-#                equality vs direct predict_many) — each writing its
-#                results/bench/BENCH_*.json trajectory record
-#                (scripts/bench_report.py renders them; ci.yml runs it and
-#                uploads the records as the bench-trajectory artifact)
+#                equality vs direct predict_many), and the stacked
+#                ModelBank (3x stacked-vs-per-group floor + bitwise
+#                float64-member equality + fused_calls==1 accounting) —
+#                each writing its results/bench/BENCH_*.json trajectory
+#                record (scripts/bench_report.py renders them, with deltas
+#                vs a previous artifact when one is present; ci.yml runs
+#                it and uploads the records as the bench-trajectory
+#                artifact)
 #
 #   usage: scripts/check.sh [stage ...]      # default: all stages
 set -euo pipefail
@@ -33,6 +37,7 @@ stage_bench_smoke() {
     python -m benchmarks.bench_fit --smoke
     python -m benchmarks.bench_serve --smoke
     python -m benchmarks.bench_transport --smoke
+    python -m benchmarks.bench_bank --smoke
     # trajectory table: printed by a dedicated always() step in ci.yml;
     # run `python scripts/bench_report.py` locally for the same view
 }

@@ -24,6 +24,7 @@ See ``src/repro/api/README.md`` for the full surface.
 from repro.api.artifacts import (ArtifactError, FingerprintMismatchError,
                                  SchemaVersionError, config_fingerprint,
                                  fit_or_load, load, save)
+from repro.api.bank import BankUnsupportedError, ModelBank
 from repro.api.oracle import LatencyOracle
 from repro.api.planner import (choose_anchor, plan_request,
                                request_fingerprint)
@@ -37,11 +38,13 @@ from repro.api.types import (ANCHOR_ANY, KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
                              UnsupportedRequestError, Workload)
 
 __all__ = [
-    "ANCHOR_ANY", "ApiError", "ArtifactError", "BatchPredictResult",
+    "ANCHOR_ANY", "ApiError", "ArtifactError", "BankUnsupportedError",
+    "BatchPredictResult",
     "ExecutionError", "FingerprintMismatchError", "GridRequest",
     "GridResult", "InvalidWorkloadError", "KNOB_BATCH", "KNOB_PIXEL",
     "LatencyOracle", "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED",
-    "MODE_TWO_PHASE", "MalformedRequestError", "OverloadedError",
+    "MODE_TWO_PHASE", "MalformedRequestError", "ModelBank",
+    "OverloadedError",
     "PredictPlan", "PredictRequest", "PredictResult", "SchemaVersionError",
     "ServiceStats", "UnknownDeviceError", "UnsupportedRequestError",
     "Workload", "choose_anchor", "config_fingerprint", "fit_or_load",

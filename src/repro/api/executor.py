@@ -2,24 +2,27 @@
 
 Stages 2+3 of the plan -> batch -> execute pipeline. A heterogeneous plan
 list (measured + cross + two-phase, any mix of device pairs) is answered
-with one ``MedianEnsemble.predict`` call per (anchor, target) pair:
+in one pass:
 
   1. **gather** — every phase-1 row any plan needs is registered per anchor
-     and deduplicated by (profile identity, case): a cross plan contributes
+     and deduplicated by (profile content, case): a cross plan contributes
      its own row, a two-phase plan contributes its oracle-chosen min/max
      config rows.  Grid sweeps and repeated requests collapse onto shared
-     rows for free (the dataset hands out one profile dict per case).
+     rows for free, including equal-by-value client-supplied profiles.
   2. **batch** — ONE feature matrix per anchor over its deduped rows, then
-     per (anchor, target) group a single fused ensemble call on the row
-     slice that group needs.
-  3. **execute** — latencies scatter back to plans; two-phase plans
-     interpolate vectorized, one ``PolyScaler.predict`` per (target, knob)
-     group over the whole value/min/max arrays.
+     a group id per (anchor, target) pair.
+  3. **execute** — with a :class:`repro.api.bank.ModelBank` the WHOLE wave
+     is one stacked dispatch: one grouped forest launch + one stacked MLP
+     apply + row-stable linear/median, however many device pairs the wave
+     mixes (``fused_calls == 1``). Without a bank (or when the bank cannot
+     serve the wave's pairs) each (anchor, target) group falls back to its
+     own fused ``MedianEnsemble.predict`` call. Two-phase plans then
+     interpolate vectorized — one Horner pass over all rows (bank) or one
+     ``PolyScaler.predict`` per (target, knob) group (fallback).
 
-The numpy forest backend routes rows independently and the linear/poly
-members are elementwise, so fused answers match the one-request path to
-float precision (exactly, for the float64 members) — ``benchmarks/
-bench_serve.py`` asserts it on every run.
+Both paths are bit-identical for the float64 members (routing gathers,
+row-stable linear evaluation, tree-sequential forest mean, Horner ==
+polyval) — ``benchmarks/bench_bank.py`` asserts it on every run.
 """
 from __future__ import annotations
 
@@ -40,9 +43,17 @@ def _result(plan: PredictPlan, latency_ms: float,
                          price_hr=plan.price_hr, epoch=epoch)
 
 
+def _profile_key(profile) -> tuple:
+    """Stable content identity of a profile mapping. ``id(profile)`` is NOT
+    usable: CPython reuses addresses, so a transient dict (e.g. a client
+    profile decoded from a ``/predict`` payload) can alias a previously
+    registered one after GC and silently share its row."""
+    return tuple(sorted(profile.items()))
+
+
 class _RowRegistry:
     """Deduplicated phase-1 rows, per anchor, plus the per-(anchor, target)
-    row groups that become one fused ensemble call each."""
+    row groups the executor batches over."""
 
     def __init__(self):
         self.index: Dict[str, Dict[tuple, int]] = {}    # anchor -> key -> row
@@ -50,10 +61,19 @@ class _RowRegistry:
         self.cases: Dict[str, list] = {}
         self.groups: Dict[Tuple[str, str], list] = {}   # pair -> ordered keys
         self._in_group: Dict[Tuple[str, str], set] = {}
+        # content keys memoized per object; the memo holds the profile
+        # itself so an id can never be reused (and thus never alias) while
+        # this registry lives — the failure mode of keying rows by id()
+        # alone.
+        self._key_memo: Dict[int, tuple] = {}
 
     def add(self, anchor: str, target: str, profile, case) -> tuple:
         """Register one needed row; returns its dedup key."""
-        key = (id(profile), case)
+        memo = self._key_memo.get(id(profile))
+        if memo is None:
+            memo = (profile, _profile_key(profile))
+            self._key_memo[id(profile)] = memo
+        key = (memo[1], case)
         rows = self.index.setdefault(anchor, {})
         if key not in rows:
             rows[key] = len(rows)
@@ -72,11 +92,14 @@ class _RowRegistry:
 
 
 def execute_plans(profet, plans: Sequence[PredictPlan],
-                  epoch: Optional[str] = None) -> BatchPredictResult:
-    """Answer every plan with the minimum number of fused ensemble calls
-    (one per (anchor, target) pair present in the batch). ``epoch`` — the
-    oracle generation executing the batch — is stamped on every result so
-    a serving layer's refresh swaps are observable per response."""
+                  epoch: Optional[str] = None,
+                  bank=None) -> BatchPredictResult:
+    """Answer every plan with the minimum number of fused model dispatches:
+    ONE stacked dispatch for the whole wave when ``bank`` (a fitted
+    :class:`repro.api.bank.ModelBank`) covers its pairs, else one fused
+    ensemble call per (anchor, target) pair. ``epoch`` — the oracle
+    generation executing the batch — is stamped on every result so a
+    serving layer's refresh swaps are observable per response."""
     n = len(plans)
     lat = np.full(n, np.nan)
     reg = _RowRegistry()
@@ -106,36 +129,70 @@ def execute_plans(profet, plans: Sequence[PredictPlan],
                                        reg.cases[anchor])
          for anchor in reg.index}
 
-    # one fused ensemble call per (anchor, target) group
-    fused = 0
+    banked = (bank is not None and bool(reg.groups)
+              and bank.supports(reg.groups))
     phase1: Dict[Tuple[str, str, tuple], float] = {}
-    for (anchor, target), keys in reg.groups.items():
-        idx = np.array([reg.index[anchor][k] for k in keys])
-        pred = profet.predict_cross_matrix(anchor, target, X[anchor][idx])
-        fused += 1
-        for k, v in zip(keys, pred):
-            phase1[(anchor, target, k)] = float(v)
+    fused = 0
+    if banked:
+        # stacked single-dispatch path: one grouped forest launch + one
+        # stacked MLP apply for the whole wave
+        rows, gids, flat_keys = [], [], []
+        for (anchor, target), keys in reg.groups.items():
+            idx = np.array([reg.index[anchor][k] for k in keys])
+            rows.append(X[anchor][idx])
+            gids.append(np.full(len(keys), bank.gid[(anchor, target)],
+                                np.int64))
+            flat_keys.extend((anchor, target, k) for k in keys)
+        pred = bank.execute(np.concatenate(rows), np.concatenate(gids))
+        fused = 1
+        for fk, v in zip(flat_keys, pred):
+            phase1[fk] = float(v)
+    else:
+        # per-group fallback: one fused ensemble call per (anchor, target)
+        for (anchor, target), keys in reg.groups.items():
+            idx = np.array([reg.index[anchor][k] for k in keys])
+            pred = profet.predict_cross_matrix(anchor, target, X[anchor][idx])
+            fused += 1
+            for k, v in zip(keys, pred):
+                phase1[(anchor, target, k)] = float(v)
 
-    # scatter cross answers; collect two-phase groups for one vectorized
-    # interpolation per (target, knob)
-    tp_groups: Dict[Tuple[str, str], list] = {}
+    # scatter cross answers; collect two-phase rows
+    tp_rows: List[Tuple[int, PredictPlan]] = []
     for i, plan in enumerate(plans):
         if plan.mode == MODE_CROSS:
             lat[i] = phase1[(plan.anchor, plan.target, cross_key[i])]
         elif plan.mode == MODE_TWO_PHASE:
-            k_min, k_max = tp_keys[i]
-            tp_groups.setdefault((plan.target, plan.request.knob), []).append(
-                (i, plan.knob_value,
-                 phase1[(plan.anchor, plan.target, k_min)],
-                 phase1[(plan.anchor, plan.target, k_max)]))
-    for (target, knob), rows in tp_groups.items():
-        ii = np.array([r[0] for r in rows])
-        vals = np.array([r[1] for r in rows])
-        t_min = np.array([r[2] for r in rows])
-        t_max = np.array([r[3] for r in rows])
-        lat[ii] = profet.predict_knob(target, knob, vals, t_min, t_max)
+            tp_rows.append((i, plan))
+    if tp_rows:
+        if banked:
+            # one Horner pass over every two-phase row, any (target, knob)
+            ii = np.array([i for i, _ in tp_rows])
+            vals = np.array([p.knob_value for _, p in tp_rows])
+            kinds = [p.request.knob for _, p in tp_rows]
+            dev = np.array([bank.dev_id[p.target] for _, p in tp_rows])
+            t_min = np.array([phase1[(p.anchor, p.target, tp_keys[i][0])]
+                              for i, p in tp_rows])
+            t_max = np.array([phase1[(p.anchor, p.target, tp_keys[i][1])]
+                              for i, p in tp_rows])
+            lat[ii] = bank.interpolate(kinds, dev, vals, t_min, t_max)
+        else:
+            tp_groups: Dict[Tuple[str, str], list] = {}
+            for i, plan in tp_rows:
+                k_min, k_max = tp_keys[i]
+                tp_groups.setdefault(
+                    (plan.target, plan.request.knob), []).append(
+                        (i, plan.knob_value,
+                         phase1[(plan.anchor, plan.target, k_min)],
+                         phase1[(plan.anchor, plan.target, k_max)]))
+            for (target, knob), rows_ in tp_groups.items():
+                ii = np.array([r[0] for r in rows_])
+                vals = np.array([r[1] for r in rows_])
+                t_min = np.array([r[2] for r in rows_])
+                t_max = np.array([r[3] for r in rows_])
+                lat[ii] = profet.predict_knob(target, knob, vals,
+                                              t_min, t_max)
 
     results = tuple(_result(p, lat[i], epoch) for i, p in enumerate(plans))
     return BatchPredictResult(results=results, fused_calls=fused,
                               rows=reg.n_rows, mode_counts=mode_counts,
-                              epoch=epoch)
+                              epoch=epoch, banked=banked)

@@ -10,10 +10,13 @@ three-stage plan -> batch -> execute pipeline:
     the target's catalog price — with every routing error raised here, per
     request, before the model is touched.
   - **batch + execute** (``repro.api.executor``): heterogeneous plans are
-    grouped by (anchor, target) and each group is answered with ONE feature
-    matrix slice and ONE ``MedianEnsemble.predict`` call; two-phase plans
-    ride their min/max rows in the same fused call and interpolate
-    vectorized afterwards.
+    grouped by (anchor, target) and the WHOLE batch is answered in one
+    stacked dispatch through the oracle's :class:`repro.api.bank.ModelBank`
+    (one grouped forest launch + one stacked MLP apply, ``fused_calls ==
+    1``); unbankable models fall back to one fused
+    ``MedianEnsemble.predict`` per group. Two-phase plans ride their
+    min/max rows in the same dispatch and interpolate vectorized
+    afterwards.
 
 ``predict_many`` is the primary entry point; ``predict`` and
 ``predict_grid`` are thin wrappers over the same engine — there is no
@@ -94,6 +97,8 @@ class LatencyOracle:
     def __init__(self, profet: Profet, dataset: workloads.Dataset):
         self.profet = profet
         self.dataset = dataset
+        self._bank = None
+        self._bank_built = False
 
     # ------------------------------------------------------------------
     # construction
@@ -145,6 +150,35 @@ class LatencyOracle:
         self._check_pair(anchor, target)
         return self.profet.cross[(anchor, target)]
 
+    # ------------------------------------------------------------------
+    # stacked execution (ModelBank)
+    # ------------------------------------------------------------------
+    @property
+    def bank(self):
+        """This oracle's :class:`repro.api.bank.ModelBank` — every fitted
+        pair packed into stacked tensors so a wave is ONE grouped forest
+        launch + one stacked MLP apply. Built on first use (or eagerly via
+        :meth:`warmup`) and owned by the oracle, so a serving layer's
+        ``oracle_refreshed`` swap replaces model and bank atomically.
+        ``None`` when the fitted members cannot be stacked (e.g. frozen
+        reference models) — execution then falls back per group."""
+        if not self._bank_built:
+            from repro.api.bank import BankUnsupportedError, ModelBank
+            try:
+                self._bank = ModelBank.build(self.profet)
+            except BankUnsupportedError:
+                self._bank = None
+            self._bank_built = True
+        return self._bank
+
+    def warmup(self, max_rows: int = 64) -> float:
+        """Epoch-aware warm-up: build the bank and pre-compile the MLP
+        bucket shapes up to ``max_rows`` so the first wave served after a
+        deploy/refresh pays zero compiles. Returns wall seconds spent
+        (0.0 when the model is unbankable)."""
+        bank = self.bank
+        return bank.warmup(max_rows=max_rows) if bank is not None else 0.0
+
     def feature_matrix(self, anchor: str, cases: Sequence) -> np.ndarray:
         """Phase-1 feature matrix of dataset profiles taken on ``anchor``."""
         return self.profet.feature_matrix(
@@ -162,13 +196,16 @@ class LatencyOracle:
 
     def execute(self, plans: Sequence[PredictPlan],
                 epoch: Optional[str] = None) -> BatchPredictResult:
-        """Stages 2+3: answer already-planned requests with one fused
-        ensemble call per (anchor, target) pair in the batch. Results are
-        stamped with ``epoch`` (a serving layer's cache epoch); when omitted
-        the oracle's own config fingerprint is used."""
+        """Stages 2+3: answer already-planned requests in ONE stacked
+        dispatch through the oracle's :attr:`bank` (grouped forest launch +
+        stacked MLP apply for the whole batch, ``fused_calls == 1``);
+        unbankable models fall back to one fused ensemble call per
+        (anchor, target) pair. Results are stamped with ``epoch`` (a
+        serving layer's cache epoch); when omitted the oracle's own config
+        fingerprint is used."""
         return execute_plans(self.profet, plans,
                              epoch=self.fingerprint if epoch is None
-                             else epoch)
+                             else epoch, bank=self.bank)
 
     def predict_many(self,
                      reqs: Sequence[PredictRequest]) -> BatchPredictResult:

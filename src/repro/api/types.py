@@ -180,10 +180,13 @@ class BatchPredictResult:
     """Results of one fused ``predict_many`` execution, in request order,
     plus the batching telemetry the serving layer reports."""
     results: Tuple[PredictResult, ...]
-    fused_calls: int          # MedianEnsemble.predict invocations
+    fused_calls: int          # fused model dispatches: 1 per wave on the
+                              # stacked ModelBank path, else one
+                              # MedianEnsemble.predict per (anchor, target)
     rows: int                 # deduped phase-1 feature rows evaluated
     mode_counts: Mapping[str, int]
     epoch: Optional[str] = None   # oracle generation that executed the batch
+    banked: bool = False          # answered via the stacked ModelBank path
 
     def __len__(self) -> int:
         return len(self.results)
@@ -215,7 +218,10 @@ class ServiceStats:
     show), while ``cache_hits`` stays a lifetime total. ``invalidated``
     counts cache entries purged by swaps, ``overloads`` counts admissions
     rejected by the transport's bounded queue, and ``rerouted`` counts
-    ``ANCHOR_ANY`` requests the planner sent to a concrete anchor."""
+    ``ANCHOR_ANY`` requests the planner sent to a concrete anchor.
+    ``warmup_ms`` is wall time spent in epoch-aware warm-up (ModelBank
+    build + MLP bucket pre-compiles) before traffic was admitted — at
+    service construction and again on every ``oracle_refreshed`` swap."""
     requests: int = 0
     waves: int = 0
     fused_calls: int = 0
@@ -228,6 +234,7 @@ class ServiceStats:
     invalidated: int = 0
     overloads: int = 0
     rerouted: int = 0
+    warmup_ms: float = 0.0
     latencies_ms: "deque" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
@@ -256,6 +263,7 @@ class ServiceStats:
                 "epoch_cache_hits": self.epoch_cache_hits,
                 "invalidated": self.invalidated,
                 "overloads": self.overloads, "rerouted": self.rerouted,
+                "warmup_ms": self.warmup_ms,
                 "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
                 "requests_per_s": self.requests_per_s}
 

@@ -166,6 +166,22 @@ class Profet:
         rows (the per-(anchor, target) hot path of the grid predictor)."""
         return self.cross[(anchor, target)].predict(np.asarray(X))
 
+    def scaler_stack(self, devices: Sequence[str]) -> Dict[str, tuple]:
+        """Stacked phase-2 coefficient matrices for ``repro.api.bank``:
+        per knob kind, the ``(n_devices, order+1)`` polyfit coefficients
+        plus the ``(n_devices,)`` knob-range vectors, row ``i`` belonging
+        to ``devices[i]``. Evaluating them row-wise with Horner's rule is
+        bit-identical to each device's ``PolyScaler.predict``."""
+        out = {}
+        for kind, scalers in (("batch", self.batch_scalers),
+                              ("pixel", self.pixel_scalers)):
+            coef = np.stack([np.asarray(scalers[d].coef, np.float64)
+                             for d in devices])
+            lo = np.array([scalers[d].min_knob for d in devices])
+            hi = np.array([scalers[d].max_knob for d in devices])
+            out[kind] = (coef, lo, hi)
+        return out
+
     def predict_knob(self, device: str, kind: str, value,
                      t_min: float, t_max: float) -> np.ndarray:
         """Phase 2: latency at batch/pixel ``value`` given min/max-config

@@ -49,7 +49,17 @@ class LinearRegressor:
         return self
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        return self._design(X) @ self.coef_
+        return self.apply(self._design(X), self.coef_)
+
+    @staticmethod
+    def apply(design: np.ndarray, coef: np.ndarray) -> np.ndarray:
+        """Row-stable evaluation: elementwise product + contiguous-axis sum
+        instead of a BLAS gemv. A gemv's reduction blocking changes with the
+        row count, so slicing rows out of a bigger matrix changes last-ulp
+        results; this form reduces each row independently, which lets the
+        stacked bank path (``coef`` per row) match per-group prediction
+        bit-for-bit. ``coef`` broadcasts: ``(D+1,)`` or ``(rows, D+1)``."""
+        return (design * coef).sum(axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -533,8 +543,64 @@ class DNNRegressor:
         mu, sd, ys = self._stats
         Xn = ((np.asarray(X) - mu) / sd).astype(np.float32)
         n = Xn.shape[0]
-        m = max(self.PREDICT_BUCKET_MIN, 1 << max(n - 1, 0).bit_length())
+        m = bucket(n, self.PREDICT_BUCKET_MIN)
         if m != n:
             Xn = np.pad(Xn, ((0, m - n), (0, 0)))
         out = np.asarray(_mlp_apply(self.params, jnp.asarray(Xn)))
         return out[:n] * ys
+
+
+# ---------------------------------------------------------------------------
+# stacked multi-head apply (ModelBank hot path)
+# ---------------------------------------------------------------------------
+
+
+def bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — THE shape-bucketing rule
+    shared by ``DNNRegressor.predict``, the ModelBank's stacked apply, and
+    the grouped Pallas launch, so jit/XLA compilations are keyed on one
+    bounded shape set."""
+    return max(floor, 1 << max(n - 1, 0).bit_length())
+
+
+_APPLY_MULTI_FN = None
+
+
+def _mlp_apply_multi():
+    """The one jitted stacked-head apply, hoisted to module level like
+    ``_trainer`` so its jit cache is keyed purely on bucket shapes.
+
+    The compiled function takes the FULL stacked param pytree (leading
+    group axis ``G``), a padded index vector selecting which heads a wave
+    needs, and a dense ``(groups, rows, features)`` input block; the head
+    gather happens on device inside the trace, so waves touching different
+    group subsets reuse the same compilation as long as their bucketed
+    (groups, rows) shape matches."""
+    global _APPLY_MULTI_FN
+    if _APPLY_MULTI_FN is not None:
+        return _APPLY_MULTI_FN
+    import jax
+
+    @jax.jit
+    def apply(params, gidx, Xn):
+        picked = jax.tree.map(lambda a: a[gidx], params)
+        return jax.vmap(_mlp_apply)(picked, Xn)      # (Gb, Rb)
+
+    _APPLY_MULTI_FN = apply
+    return apply
+
+
+def stack_dnn_heads(models: List["DNNRegressor"]):
+    """Stack fitted DNN heads into the bank's vmapped pytree + stat arrays:
+    params with a leading group axis, ``(G, D)`` z-score mu/sd, and the
+    float32 per-head target scales (float32 so the bank's denormalization
+    ``out_f32 * ys_f32`` reproduces ``DNNRegressor.predict``'s
+    weak-scalar float32 multiply exactly)."""
+    import jax
+    import jax.numpy as jnp
+    params = jax.tree.map(lambda *ls: jnp.stack(ls),
+                          *[m.params for m in models])
+    mu = np.stack([m._stats[0] for m in models])
+    sd = np.stack([m._stats[1] for m in models])
+    ys = np.array([m._stats[2] for m in models], np.float32)
+    return params, mu, sd, ys

@@ -10,10 +10,19 @@ Two backends behind one ``predict``:
     routes all trees x rows in lockstep via ``take_along_axis`` gathers.
 
 Both backends return per-tree LEAF VALUES ``(n_trees, n_rows)`` from their
-inner routine; the tree-mean is taken by the shared wrapper in float64, so
-the two paths agree exactly whenever their routing agrees (see
+inner routine; the tree-mean is taken by the shared ``tree_mean`` in
+float64, so the two paths agree exactly whenever their routing agrees (see
 ``tests/test_fit_path.py`` for the bit-equality check on a float32-quantized
 forest).
+
+The GROUPED entry points (``leaf_values_grouped_numpy`` /
+``leaf_values_grouped_pallas`` / ``predict_grouped``) evaluate a whole
+STACK of forests — ``(n_groups, n_trees, n_nodes)`` arrays, every row
+carrying its group id — in ONE launch. This is the ``repro.api.bank``
+hot path: a serving wave mixing any number of (anchor, target) pairs costs
+one traversal, not one per pair. Because routing gathers and the tree-mean
+are elementwise/per-row operations, grouped answers are bit-identical to
+running each group's forest separately.
 """
 from __future__ import annotations
 
@@ -24,6 +33,19 @@ import numpy as np
 DEFAULT_BLOCK_ROWS = 256
 
 _AUTO_BACKEND: Optional[str] = None
+
+
+def tree_mean(vals: np.ndarray) -> np.ndarray:
+    """Float64 mean over the tree axis of ``(n_trees, n_rows)`` leaf values,
+    accumulated tree-sequentially so every ROW's result is independent of
+    how many other rows ride in the batch. (``np.mean(axis=0)`` is not
+    column-stable: its pairwise blocking changes with the row count, so
+    per-group and stacked evaluation would disagree in the last ulp.)"""
+    vals = np.asarray(vals, np.float64)
+    acc = np.zeros(vals.shape[1], np.float64)
+    for t in range(vals.shape[0]):
+        acc += vals[t]
+    return acc / vals.shape[0]
 
 
 def _auto_backend() -> str:
@@ -38,25 +60,99 @@ def _auto_backend() -> str:
     return _AUTO_BACKEND
 
 
-def leaf_values_numpy(X, feat, thr, left, right, value) -> np.ndarray:
+def leaf_values_numpy(X, feat, thr, left, right, value,
+                      depth: Optional[int] = None) -> np.ndarray:
     """Route every row through every tree; returns (n_trees, n_rows) leaf
-    values. Comparisons run in the dtype of ``X``/``thr`` as given."""
+    values. Comparisons run in the dtype of ``X``/``thr`` as given.
+
+    ``depth`` (the packed forest's grown depth) bounds the traversal
+    exactly: after ``depth`` routing steps every node is a leaf, so the
+    loop needs no per-iteration liveness re-scan over all trees. Without
+    it the traversal falls back to scanning for live nodes each step.
+    """
     X = np.asarray(X)
     m = X.shape[0]
     T = feat.shape[0]
     nid = np.zeros((T, m), np.int64)
     cols = np.arange(m)[None, :]
+    step = 0
     while True:
+        if depth is not None and step >= depth:
+            break
         F = np.take_along_axis(feat, nid, axis=1).astype(np.int64)
         live = F >= 0
-        if not live.any():
+        if depth is None and not live.any():
             break
         TH = np.take_along_axis(thr, nid, axis=1)
         L = np.take_along_axis(left, nid, axis=1).astype(np.int64)
         R = np.take_along_axis(right, nid, axis=1).astype(np.int64)
         xv = X[cols, np.maximum(F, 0)]
         nid = np.where(live, np.where(xv <= TH, L, R), nid)
+        step += 1
     return np.take_along_axis(value, nid, axis=1)
+
+
+def leaf_values_grouped_numpy(X, gid, feat, thr, left, right, value,
+                              depth) -> np.ndarray:
+    """Grouped traversal: forest arrays are stacked ``(G, T, N)``, ``gid``
+    assigns every row of ``X`` to one group, and ``depth`` is the per-group
+    grown depth. Returns ``(T, n_rows)`` leaf values in ROW order, each row
+    routed through its own group's forest — one launch for the whole wave.
+
+    Rows are processed deepest-group-first so the active set is always a
+    prefix: once a step exceeds a group's depth its rows (already at
+    leaves) drop out of the gathers entirely instead of being re-routed
+    in place. Routing is elementwise per row, so results are bit-identical
+    to per-group :func:`leaf_values_numpy` calls.
+    """
+    X = np.asarray(X)
+    gid = np.asarray(gid, np.int64)
+    m = X.shape[0]
+    G, T, _ = feat.shape
+    depth = np.asarray(depth, np.int64)
+    if m == 0:
+        return np.empty((T, 0), np.asarray(value).dtype)
+
+    # deepest group first: active columns at step s are the prefix with
+    # depth > s (fully-leaf groups — depth 0 — never enter the loop)
+    order = np.argsort(-depth[gid], kind="stable")
+    gs = gid[order]
+    Xs = np.ascontiguousarray(X[order])
+    neg = -depth[gs]                      # ascending, for searchsorted
+
+    # flat gather bases: element (t, j) of the stacked arrays lives at
+    # gs[j]*T*N + t*N + node — one precomputed base + np.take per gather
+    # is several times faster than broadcast 3-array fancy indexing
+    N = feat.shape[2]
+    base = gs[None, :] * (T * N) + np.arange(T)[:, None] * N   # (T, m)
+    d_feats = Xs.shape[1]
+    xbase = np.arange(m)[None, :] * d_feats
+    feat_f = np.ascontiguousarray(feat).reshape(-1)
+    thr_f = np.ascontiguousarray(thr).reshape(-1)
+    left_f = np.ascontiguousarray(left).reshape(-1)
+    right_f = np.ascontiguousarray(right).reshape(-1)
+    value_f = np.ascontiguousarray(value).reshape(-1)
+    Xs_f = Xs.reshape(-1)
+
+    nid = np.zeros((T, m), np.int32)   # node ids fit int32; the flat
+    max_depth = int(depth.max(initial=0))  # gather index is int64 via base
+    for step in range(max_depth):
+        k = int(np.searchsorted(neg, -step, side="left"))  # depth > step
+        if k == 0:
+            break
+        sub = nid[:, :k]
+        flat = base[:, :k] + sub
+        F = feat_f.take(flat)
+        live = F >= 0
+        TH = thr_f.take(flat)
+        L = left_f.take(flat)
+        R = right_f.take(flat)
+        xv = Xs_f.take(xbase[:, :k] + np.maximum(F, 0))
+        nid[:, :k] = np.where(live, np.where(xv <= TH, L, R), sub)
+    leaves = value_f.take(base + nid)
+    out = np.empty_like(leaves)
+    out[:, order] = leaves
+    return out
 
 
 def leaf_values_pallas(X, feat, thr, left, right, value, *, depth: int,
@@ -118,6 +214,109 @@ def leaf_values_pallas(X, feat, thr, left, right, value, *, depth: int,
     return np.asarray(out)[:, :m]
 
 
+def leaf_values_grouped_pallas(X, gid, feat, thr, left, right, value, *,
+                               depth, block_rows: int = DEFAULT_BLOCK_ROWS,
+                               interpret: Optional[bool] = None) -> np.ndarray:
+    """Grouped Pallas kernel: ONE launch over (group, row-block) pairs.
+
+    Rows are sorted by group and padded per group to ``block_rows``
+    multiples; the grid is the flat block list and two scalar-prefetch
+    vectors steer it — ``block_gid[i]`` selects which ``(1, T, N)`` forest
+    slice block ``i``'s BlockSpec index_map DMAs into VMEM, and
+    ``block_depth[i]`` bounds its ``fori_loop`` (leaves self-loop, so a
+    shallow group simply stops routing early). The row-block size and the
+    block COUNT are both power-of-two bucketed (padding blocks carry
+    depth 0, so they route nothing) — the launch's static shapes come from
+    a bounded set and a warmed executable serves any wave mix. float32,
+    like the per-forest kernel; returns ``(T, n_rows)`` in original row
+    order.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.core.regressors import bucket
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    X = np.asarray(X)
+    gid = np.asarray(gid, np.int64)
+    m, d = X.shape
+    G, T, N = feat.shape
+    depth = np.asarray(depth, np.int64)
+    if m == 0:
+        return np.empty((T, 0), np.float32)
+    blk = min(block_rows, bucket(m, 8))
+
+    # sort rows by group; pad each group's run to a block multiple, and
+    # the block list itself to a power-of-two count
+    order = np.argsort(gid, kind="stable")
+    groups, counts = np.unique(gid, return_counts=True)
+    blocks_per = -(-counts // blk)
+    n_blocks = bucket(int(blocks_per.sum()))
+    Xp = np.zeros((n_blocks * blk, d), X.dtype)
+    pos = np.empty(m, np.int64)            # padded slot of each sorted row
+    off = 0
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    block_gid = np.zeros(n_blocks, np.int32)
+    block_gid[:int(blocks_per.sum())] = np.repeat(groups, blocks_per)
+    block_depth = np.zeros(n_blocks, np.int32)
+    block_depth[:int(blocks_per.sum())] = depth[
+        block_gid[:int(blocks_per.sum())]]
+    for gi in range(len(groups)):
+        c = int(counts[gi])
+        pos[starts[gi]:starts[gi] + c] = off + np.arange(c)
+        off += int(blocks_per[gi]) * blk
+    Xp[pos] = X[order]
+
+    def kernel(g_ref, dep_ref, x_ref, f_ref, t_ref, l_ref, r_ref, v_ref,
+               o_ref):
+        i = pl.program_id(0)
+        xT = x_ref[...].T                               # (d, blk)
+        fm, tm = f_ref[0], t_ref[0]
+        lm, rm = l_ref[0], r_ref[0]
+
+        def body(_, nid):
+            f = jnp.take_along_axis(fm, nid, axis=1)    # (T, blk)
+            t = jnp.take_along_axis(tm, nid, axis=1)
+            nl = jnp.take_along_axis(lm, nid, axis=1)
+            nr = jnp.take_along_axis(rm, nid, axis=1)
+            xv = jnp.take_along_axis(xT, jnp.maximum(f, 0), axis=0)
+            return jnp.where(f >= 0, jnp.where(xv <= t, nl, nr), nid)
+
+        nid = jax.lax.fori_loop(0, dep_ref[i], body,
+                                jnp.zeros((T, xT.shape[1]), jnp.int32))
+        o_ref[...] = jnp.take_along_axis(v_ref[0], nid, axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i, g, dep: (i, 0)),
+            pl.BlockSpec((1, T, N), lambda i, g, dep: (g[i], 0, 0)),
+            pl.BlockSpec((1, T, N), lambda i, g, dep: (g[i], 0, 0)),
+            pl.BlockSpec((1, T, N), lambda i, g, dep: (g[i], 0, 0)),
+            pl.BlockSpec((1, T, N), lambda i, g, dep: (g[i], 0, 0)),
+            pl.BlockSpec((1, T, N), lambda i, g, dep: (g[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, blk), lambda i, g, dep: (0, i)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, n_blocks * blk), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(block_gid, jnp.int32), jnp.asarray(block_depth, jnp.int32),
+      jnp.asarray(Xp, jnp.float32), jnp.asarray(feat, jnp.int32),
+      jnp.asarray(thr, jnp.float32), jnp.asarray(left, jnp.int32),
+      jnp.asarray(right, jnp.int32), jnp.asarray(value, jnp.float32))
+    out = np.asarray(out)
+    res = np.empty((T, m), np.float32)
+    res[:, order] = out[:, pos]
+    return res
+
+
 def predict(X, feat, thr, left, right, value, *, depth: int,
             backend: str = "auto") -> np.ndarray:
     """Forest prediction = float64 mean over per-tree leaf values.
@@ -129,10 +328,29 @@ def predict(X, feat, thr, left, right, value, *, depth: int,
     if backend == "auto":
         backend = _auto_backend()
     if backend == "numpy":
-        vals = leaf_values_numpy(X, feat, thr, left, right, value)
+        vals = leaf_values_numpy(X, feat, thr, left, right, value,
+                                 depth=depth)
     elif backend == "pallas":
         vals = leaf_values_pallas(X, feat, thr, left, right, value,
                                   depth=depth)
     else:
         raise ValueError(f"unknown forest_eval backend {backend!r}")
-    return np.asarray(vals, np.float64).mean(axis=0)
+    return tree_mean(vals)
+
+
+def predict_grouped(X, gid, feat, thr, left, right, value, *, depth,
+                    backend: str = "auto") -> np.ndarray:
+    """Grouped forest prediction: every row routed through its own group's
+    stacked forest, ONE launch + one shared float64 tree-mean. Same backend
+    policy as :func:`predict`."""
+    if backend == "auto":
+        backend = _auto_backend()
+    if backend == "numpy":
+        vals = leaf_values_grouped_numpy(X, gid, feat, thr, left, right,
+                                         value, depth)
+    elif backend == "pallas":
+        vals = leaf_values_grouped_pallas(X, gid, feat, thr, left, right,
+                                          value, depth=depth)
+    else:
+        raise ValueError(f"unknown forest_eval backend {backend!r}")
+    return tree_mean(vals)

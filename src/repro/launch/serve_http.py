@@ -119,7 +119,8 @@ def main(argv=None):
         print(f"service: {s.waves} waves  {s.fused_calls} fused calls  "
               f"{s.cache_hits} cache hits  {s.errors} errors  "
               f"epoch {s.epoch} (swaps {s.epoch_swaps}, "
-              f"invalidated {s.invalidated})")
+              f"invalidated {s.invalidated})  "
+              f"warm-up {s.warmup_ms:.0f} ms")
         with Client(bg.host, bg.port) as c:
             h = c.healthz()
             print(f"healthz: {h['status']}  epoch {h['epoch']}  "

@@ -58,6 +58,8 @@ def main(argv=None):
                              cache_size=args.cache_size)
 
     print(f"pairs: {', '.join(f'{a}->{t}' for a, t in oracle.pairs())}")
+    print(f"warm-up: {service.stats.warmup_ms:.0f} ms (bank + MLP bucket "
+          "pre-compiles before traffic)")
     for replay in range(1, args.replays + 1):
         for r in reqs:
             service.submit(r)

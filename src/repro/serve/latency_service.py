@@ -2,12 +2,13 @@
 
 The latency-prediction sibling of the token engine in ``serve/engine.py``:
 requests queue up, a *wave* of up to ``max_wave`` is admitted, the wave is
-answered with the minimum number of fused ensemble calls (via the oracle's
-plan -> batch -> execute pipeline), and completed requests carry their
-result or a typed per-request error. Mixed traffic — measured, cross, and
-two-phase requests over any set of device pairs — shares one execution
-engine, so a wave costs one ``MedianEnsemble.predict`` per device pair
-present, not one Python round-trip per request.
+answered with the minimum number of fused model dispatches (via the
+oracle's plan -> batch -> execute pipeline and its stacked ``ModelBank``),
+and completed requests carry their result or a typed per-request error.
+Mixed traffic — measured, cross, and two-phase requests over any set of
+device pairs — shares one execution engine, so a wave costs ONE grouped
+forest launch + one stacked MLP apply total, not one Python round-trip per
+request or per device pair.
 
 On top of the executor the service adds:
 
@@ -20,6 +21,12 @@ On top of the executor the service adds:
     atomically replaces the oracle mid-traffic — in-flight waves drain on
     the oracle they were admitted under, new admissions plan/execute/cache
     under the new epoch, and every stale cache entry is invalidated;
+  - **epoch-aware warm-up**: at construction and before every swap the
+    incoming oracle's ModelBank is built and its MLP bucket shapes are
+    pre-compiled up to ``warmup_rows`` (default: ``2 * max_wave``, the
+    most phase-1 rows a wave of all-two-phase requests can register), so
+    the first wave served under a new epoch pays zero compiles
+    (``ServiceStats.warmup_ms``);
   - **per-request error isolation**: planning happens per request, so one
     unroutable request (unknown device, off-catalog price, no min/max
     configs) marks only itself failed — the rest of the wave executes;
@@ -73,7 +80,8 @@ class LatencyService:
     """Queue -> admit wave -> fused execute -> complete."""
 
     def __init__(self, oracle: LatencyOracle, *, max_wave: int = 64,
-                 cache_size: int = 4096, epoch: Optional[str] = None):
+                 cache_size: int = 4096, epoch: Optional[str] = None,
+                 warmup: bool = True, warmup_rows: Optional[int] = None):
         self.oracle = oracle
         self.max_wave = int(max_wave)
         self.cache_size = int(cache_size)
@@ -86,6 +94,23 @@ class LatencyService:
         self._epoch = epoch if epoch is not None else oracle.fingerprint
         self._used_epochs = {self._epoch}
         self.stats.epoch = self._epoch
+        # epoch-aware warm-up: build the oracle's ModelBank and pre-compile
+        # the MLP bucket shapes up to one full wave BEFORE any traffic is
+        # admitted, so the first wave pays zero compiles. Re-run on every
+        # oracle_refreshed swap for the incoming oracle.
+        self._warmup_enabled = bool(warmup)
+        # a wave of max_wave requests can register up to 2*max_wave phase-1
+        # rows (two-phase plans contribute a min AND a max row), so the
+        # default warm-up must cover the doubled bucket or the first
+        # two-phase-heavy wave would still pay a compile
+        self._warmup_rows = int(warmup_rows if warmup_rows is not None
+                                else 2 * self.max_wave)
+        if self._warmup_enabled:
+            self._warm(oracle)
+
+    def _warm(self, oracle: LatencyOracle) -> None:
+        self.stats.warmup_ms += 1e3 * oracle.warmup(
+            max_rows=self._warmup_rows)
 
     @property
     def epoch(self) -> str:
@@ -124,7 +149,14 @@ class LatencyService:
         every wave admitted after this returns plans, executes, and caches
         under the new epoch. Stale cache entries are purged (counted in
         ``stats.invalidated``) and the per-epoch hit counter resets.
-        Returns the new epoch."""
+        Returns the new epoch.
+
+        The incoming oracle is warmed BEFORE the swap (bank built, MLP
+        bucket shapes compiled, ``stats.warmup_ms`` accumulated) so the
+        first post-swap wave pays zero compiles — in-flight traffic keeps
+        draining on the old oracle/bank meanwhile."""
+        if oracle is not None and self._warmup_enabled:
+            self._warm(oracle)
         with self._lock:
             if oracle is not None:
                 self.oracle = oracle

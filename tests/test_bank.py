@@ -1,0 +1,358 @@
+"""ModelBank stacked execution: bitwise equality vs the per-group executor
+path on mixed waves, ragged group shapes, single-dispatch accounting,
+grouped kernel backends, the row-registry content key, and epoch-swap bank
+rebuilds under concurrent replay."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import executor
+from repro.api.bank import BankUnsupportedError, ModelBank
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.core.regressors import RandomForestRegressor, bucket
+from repro.kernels import forest_eval
+from repro.serve import LatencyService, synthetic_requests
+
+# float64-only members: stacked vs per-group must be bit-identical
+CFG = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    ds = workloads.generate(devices=("T4", "V100", "K80"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    return api.LatencyOracle.fit(ds, CFG)
+
+
+@pytest.fixture(scope="module")
+def dnn_oracle():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet"))
+    return api.LatencyOracle.fit(ds, ProfetConfig(dnn_epochs=5, n_trees=10,
+                                                  seed=0))
+
+
+@pytest.fixture(scope="module")
+def stream(oracle):
+    return synthetic_requests(oracle, n=200, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# stacked vs per-group equality
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_matches_per_group_bitwise(oracle, stream):
+    """Mixed measured/cross/two-phase wave over every pair: the banked
+    single-dispatch answer equals the per-group path bit-for-bit (all
+    members are float64)."""
+    plans = [oracle.plan(r) for r in stream]
+    banked = oracle.execute(plans)
+    legacy = executor.execute_plans(oracle.profet, plans, epoch="x",
+                                    bank=None)
+    assert banked.banked and not legacy.banked
+    np.testing.assert_array_equal(banked.latencies(), legacy.latencies())
+    assert set(banked.mode_counts) == {api.MODE_MEASURED, api.MODE_CROSS,
+                                       api.MODE_TWO_PHASE}
+
+
+def test_stacked_matches_with_dnn_member(dnn_oracle):
+    """With the float32 DNN member the stacked wave agrees to float32
+    precision; the float64 members stay exact (asserted member-wise)."""
+    reqs = synthetic_requests(dnn_oracle, n=120, seed=2)
+    plans = [dnn_oracle.plan(r) for r in reqs]
+    banked = dnn_oracle.execute(plans)
+    legacy = executor.execute_plans(dnn_oracle.profet, plans, epoch="x",
+                                    bank=None)
+    np.testing.assert_allclose(banked.latencies(), legacy.latencies(),
+                               rtol=1e-5)
+    bank = dnn_oracle.bank
+    pair = dnn_oracle.pairs()[0]
+    X = dnn_oracle.feature_matrix(pair[0], dnn_oracle.dataset.cases[:9])
+    gids = np.full(len(X), bank.gid[pair])
+    ens = dnn_oracle.ensemble(*pair)
+    from repro.core.regressors import LinearRegressor
+    np.testing.assert_array_equal(
+        LinearRegressor.apply(LinearRegressor._design(X),
+                              bank.lin_coef[gids]),
+        ens.models["linear"].predict(X))
+    f = bank.forest
+    np.testing.assert_array_equal(
+        forest_eval.predict_grouped(X, gids, f["feat"], f["thr"], f["left"],
+                                    f["right"], f["value"],
+                                    depth=f["depth"], backend="numpy"),
+        ens.models["forest"].predict(X))
+
+
+def test_ragged_groups_one_row_next_to_sweep(oracle):
+    """A grid sweep (many rows, one pair) mixed with 1-row groups on other
+    pairs still executes as one dispatch and matches per-group answers."""
+    ds = oracle.dataset
+    sweep = [api.PredictRequest("T4", "V100", api.Workload.from_case(c))
+             for c in ds.cases]
+    singles = [api.PredictRequest("V100", "K80",
+                                  api.Workload.from_case(ds.cases[0])),
+               api.PredictRequest("K80", "T4",
+                                  api.Workload.from_case(ds.cases[1]))]
+    plans = [oracle.plan(r) for r in sweep + singles]
+    banked = oracle.execute(plans)
+    legacy = executor.execute_plans(oracle.profet, plans, epoch="x",
+                                    bank=None)
+    assert banked.fused_calls == 1 and legacy.fused_calls == 3
+    np.testing.assert_array_equal(banked.latencies(), legacy.latencies())
+
+
+def test_single_dispatch_accounting(oracle, dnn_oracle, stream):
+    """One grouped forest launch + one stacked MLP apply per wave,
+    regardless of how many pairs the wave mixes."""
+    plans = [oracle.plan(r) for r in stream]
+    before = oracle.bank.forest_launches
+    batch = oracle.execute(plans)
+    assert batch.fused_calls == 1
+    assert oracle.bank.forest_launches == before + 1
+
+    reqs = synthetic_requests(dnn_oracle, n=60, seed=4)
+    f0, m0 = dnn_oracle.bank.forest_launches, dnn_oracle.bank.mlp_applies
+    batch = dnn_oracle.predict_many(reqs)
+    assert batch.fused_calls == 1
+    assert dnn_oracle.bank.forest_launches == f0 + 1
+    assert dnn_oracle.bank.mlp_applies == m0 + 1
+
+
+def test_all_measured_wave_needs_no_dispatch(oracle):
+    ds = oracle.dataset
+    reqs = [api.PredictRequest("T4", "T4", api.Workload.from_case(c))
+            for c in ds.cases[:5]]
+    batch = oracle.predict_many(reqs)
+    assert batch.fused_calls == 0
+    assert [r.mode for r in batch] == [api.MODE_MEASURED] * 5
+
+
+# ---------------------------------------------------------------------------
+# bank construction / fallback
+# ---------------------------------------------------------------------------
+
+
+def test_unbankable_members_fall_back_per_group(oracle):
+    """Ensembles holding non-production members (the frozen reference
+    models) cannot stack; the oracle serves per-group instead of failing."""
+    from repro.core import reference
+    ds = workloads.generate(devices=("T4", "V100"), models=("LeNet5",))
+    profet = reference.fit_profet_reference(
+        ds, ProfetConfig(members=("linear", "forest"), n_trees=5, seed=0))
+    with pytest.raises(BankUnsupportedError):
+        ModelBank.build(profet)
+    ref_oracle = api.LatencyOracle(profet, ds)
+    assert ref_oracle.bank is None
+    req = api.PredictRequest("T4", "V100",
+                             api.Workload.from_case(ds.cases[0]))
+    batch = ref_oracle.predict_many([req])
+    assert not batch.banked and batch.fused_calls == 1
+    assert np.isfinite(batch.latencies()).all()
+
+
+def test_bank_pads_ragged_forests(oracle):
+    """Pairs grow different node counts; the (G, T, N_max) stack pads with
+    leaves and keeps per-group depth."""
+    bank = oracle.bank
+    f = bank.forest
+    assert f["feat"].shape[0] == len(oracle.pairs())
+    assert f["feat"].shape[1] == CFG.n_trees
+    assert (f["depth"] > 0).all()
+    # pad nodes are leaves (feat < 0) — routing can never enter them
+    assert (f["feat"] < f["feat"].shape[2]).all()
+
+
+# ---------------------------------------------------------------------------
+# grouped kernels
+# ---------------------------------------------------------------------------
+
+
+def _toy_forest_stack(seed=0, n_groups=3):
+    rng = np.random.default_rng(seed)
+    forests = []
+    for g in range(n_groups):
+        X = rng.uniform(-2, 2, size=(50 + 30 * g, 4))
+        y = np.sin(X[:, 0] * (g + 1)) + X[:, 1]
+        rf = RandomForestRegressor(n_estimators=8, max_depth=5 + g,
+                                   seed=g).fit(X, y)
+        forests.append(rf.forest_)
+    T = forests[0].n_trees
+    n_max = max(f.feat.shape[1] for f in forests)
+    stack = {}
+    for name, fill in (("feat", -1), ("thr", 0.0), ("left", 0),
+                       ("right", 0), ("value", 0.0)):
+        arr = np.full((n_groups, T, n_max), fill,
+                      getattr(forests[0], name).dtype)
+        for g, f in enumerate(forests):
+            arr[g, :, :f.feat.shape[1]] = getattr(f, name)
+        stack[name] = arr
+    stack["depth"] = np.array([f.depth for f in forests])
+    return forests, stack
+
+
+def test_grouped_numpy_matches_per_group_kernel():
+    forests, s = _toy_forest_stack()
+    rng = np.random.default_rng(7)
+    X = rng.uniform(-2, 2, size=(83, 4))
+    gid = rng.integers(0, len(forests), size=83)
+    got = forest_eval.leaf_values_grouped_numpy(
+        X, gid, s["feat"], s["thr"], s["left"], s["right"], s["value"],
+        s["depth"])
+    for g, f in enumerate(forests):
+        sel = gid == g
+        ref = forest_eval.leaf_values_numpy(X[sel], f.feat, f.thr, f.left,
+                                            f.right, f.value, depth=f.depth)
+        np.testing.assert_array_equal(got[:, sel], ref)
+
+
+def test_grouped_pallas_interpret_matches_grouped_numpy():
+    """The (group, row-block) Pallas kernel (interpret mode) agrees exactly
+    with the grouped numpy traversal on a float32-quantized bank."""
+    _, s = _toy_forest_stack(seed=3)
+    rng = np.random.default_rng(11)
+    X = rng.uniform(-2, 2, size=(37, 4)).astype(np.float32).astype(
+        np.float64)
+    thr32 = s["thr"].astype(np.float32).astype(np.float64)
+    gid = rng.integers(0, s["feat"].shape[0], size=37)
+    v_np = forest_eval.leaf_values_grouped_numpy(
+        X, gid, s["feat"], thr32, s["left"], s["right"], s["value"],
+        s["depth"])
+    v_pl = forest_eval.leaf_values_grouped_pallas(
+        X, gid, s["feat"], thr32, s["left"], s["right"], s["value"],
+        depth=s["depth"], block_rows=8, interpret=True)
+    np.testing.assert_array_equal(v_np.astype(np.float32), v_pl)
+
+
+def test_leaf_values_depth_bound_matches_unbounded():
+    forests, _ = _toy_forest_stack(seed=5)
+    f = forests[0]
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, size=(29, 4))
+    a = forest_eval.leaf_values_numpy(X, f.feat, f.thr, f.left, f.right,
+                                      f.value)
+    b = forest_eval.leaf_values_numpy(X, f.feat, f.thr, f.left, f.right,
+                                      f.value, depth=f.depth)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# row registry content key (id-aliasing regression)
+# ---------------------------------------------------------------------------
+
+
+def test_row_registry_keys_by_content_not_identity():
+    """Two DISTINCT dict objects with equal content must share one row
+    (under the old ``id(profile)`` key they got two), and different
+    content must never share — the id-aliasing bug where a GC'd transient
+    profile's address is reused by a new, different profile."""
+    reg = executor._RowRegistry()
+    case = ("LeNet5", 32, 64)
+    k1 = reg.add("T4", "V100", {"conv": 1.0, "relu": 0.5}, case)
+    k2 = reg.add("T4", "V100", {"conv": 1.0, "relu": 0.5}, case)
+    assert k1 == k2 and reg.n_rows == 1
+    k3 = reg.add("T4", "V100", {"conv": 2.0, "relu": 0.5}, case)
+    assert k3 != k1 and reg.n_rows == 2
+
+
+def test_equal_content_client_profiles_dedup_end_to_end(oracle):
+    ds = oracle.dataset
+    case = ds.cases[0]
+    reqs = [api.PredictRequest("T4", "V100", api.Workload.from_case(case),
+                               profile=dict(ds.profile("T4", case)))
+            for _ in range(4)]
+    batch = oracle.predict_many(reqs)
+    assert batch.rows == 1
+    assert len(set(batch.latencies())) == 1
+
+
+# ---------------------------------------------------------------------------
+# warm-up + epoch swaps
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_builds_bank_and_reports_ms(oracle):
+    svc = LatencyService(oracle, max_wave=16, warmup=True)
+    assert oracle.bank is not None
+    assert svc.stats.warmup_ms >= 0.0
+    assert "warmup_ms" in svc.stats.summary()
+    # warm-up happens again for the incoming oracle of a refresh
+    before = svc.stats.warmup_ms
+    svc.oracle_refreshed(oracle, fingerprint="deploy-2")
+    assert svc.stats.warmup_ms >= before
+
+
+def test_mlp_bucket_warmup_covers_wave_shapes(dnn_oracle):
+    """After warm-up every bucket shape a wave can produce is compiled:
+    serving a fresh mixed wave triggers no new compilation."""
+    import jax
+    bank = dnn_oracle.bank
+    # the service default: 2x the wave size, since every two-phase request
+    # registers a min AND a max phase-1 row
+    bank.warmup(max_rows=64)
+    reqs = synthetic_requests(dnn_oracle, n=32, seed=9)
+    plans = [dnn_oracle.plan(r) for r in reqs]
+    with jax.log_compiles(True):
+        import logging
+        records = []
+        handler = logging.Handler()
+        handler.emit = lambda r: records.append(r)
+        logger = logging.getLogger("jax._src.dispatch")
+        logger.addHandler(handler)
+        try:
+            dnn_oracle.execute(plans)
+        finally:
+            logger.removeHandler(handler)
+    compiles = [r for r in records if "Compiling" in r.getMessage()]
+    assert not compiles, [r.getMessage() for r in compiles]
+
+
+def test_bucket_helper():
+    assert bucket(0) == 1 and bucket(1) == 1
+    assert bucket(5) == 8 and bucket(8) == 8 and bucket(9) == 16
+    assert bucket(3, floor=8) == 8
+
+
+def test_epoch_swap_rebuilds_bank_no_stale_answers(oracle):
+    """Concurrent replay across an oracle_refreshed swap: every response's
+    latency must match what the oracle generation named by its epoch
+    would answer — zero stale (old-model, new-epoch) answers."""
+    ds = workloads.generate(devices=("T4", "V100", "K80"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    o1 = api.LatencyOracle.fit(ds, CFG)
+    o2 = api.LatencyOracle.fit(
+        ds, ProfetConfig(members=("linear", "forest"), n_trees=7, seed=3))
+    reqs = synthetic_requests(o1, n=120, seed=6)
+    expected = {"e1": o1.predict_many(reqs).latencies(),
+                "e2": o2.predict_many(reqs).latencies()}
+    assert not np.allclose(expected["e1"], expected["e2"])
+
+    svc = LatencyService(o1, max_wave=8, cache_size=0, epoch="e1")
+    stop = threading.Event()
+
+    def drain():
+        while not stop.is_set():
+            svc.run_once()
+        svc.run()
+
+    t = threading.Thread(target=drain)
+    t.start()
+    submitted = []
+    try:
+        for i, r in enumerate(reqs):
+            submitted.append((i, svc.submit(r)))
+            if i == len(reqs) // 2:
+                svc.oracle_refreshed(o2, fingerprint="e2")
+    finally:
+        stop.set()
+        t.join()
+    assert all(sr.done for _, sr in submitted)
+    for i, sr in submitted:
+        assert sr.error is None
+        epoch = sr.result.epoch
+        assert epoch in expected
+        np.testing.assert_array_equal(sr.result.latency_ms,
+                                      expected[epoch][i])

@@ -54,8 +54,9 @@ def test_stream_covers_all_modes_and_pairs(oracle, stream):
 
 def test_batch_telemetry(oracle, stream):
     fused = oracle.predict_many(stream)
-    # one fused ensemble call per trained pair present, NOT per request
-    assert fused.fused_calls == len(oracle.pairs())
+    # ONE stacked ModelBank dispatch for the whole wave, NOT one call per
+    # request or per pair
+    assert fused.banked and fused.fused_calls == 1
     assert 0 < fused.rows < sum(2 if r.mode == api.MODE_TWO_PHASE else 1
                                 for r in fused if r.mode != api.MODE_MEASURED)
     assert sum(fused.mode_counts.values()) == len(stream)
