@@ -24,6 +24,8 @@ BENCHES = [
      "HTTP transport concurrent vs sequential clients"),
     ("bank", "benchmarks.bench_bank",
      "stacked ModelBank wave vs per-group dispatch"),
+    ("calibrate", "benchmarks.bench_calibrate",
+     "live calibration drift->refit->canary->promote recovery"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

@@ -2,8 +2,8 @@
 """Print the bench-trajectory table from ``results/bench/BENCH_*.json``.
 
 Each floor-gated benchmark (``bench_grid``, ``bench_fit``, ``bench_serve``,
-``bench_transport``, ``bench_bank``) writes one machine-readable record per
-run — speedup, floor, wall time, git SHA — via
+``bench_transport``, ``bench_bank``, ``bench_calibrate``) writes one
+machine-readable record per run — speedup, floor, wall time, git SHA — via
 ``benchmarks.common.save_bench``. CI uploads the records as a build
 artifact; this script renders them so the perf trajectory is visible at a
 glance in the job log.
@@ -35,9 +35,20 @@ def _records(out_dir: pathlib.Path):
     return recs, bad
 
 
-def _fmt_delta(cur, prev):
-    if prev is None:
+def _num(rec, key, fmt):
+    """Render a numeric record field; '-' for absent/null/non-numeric
+    values (a half-written record must not crash the report)."""
+    try:
+        return fmt.format(float(rec.get(key)))
+    except (TypeError, ValueError):
         return "-"
+
+
+def _fmt_delta(cur, prev):
+    """Speedup delta vs the previous trajectory; a bench the previous
+    artifact never ran is 'new' (no delta exists, not zero)."""
+    if prev is None:
+        return "new"
     try:
         d = float(cur.get("speedup")) - float(prev.get("speedup"))
     except (TypeError, ValueError):
@@ -52,14 +63,21 @@ def rows_from(out_dir: pathlib.Path, prev_dir: pathlib.Path):
     for name, rec in recs.items():
         rows.append([
             name,
-            f"{rec.get('speedup', float('nan')):.2f}x",
-            _fmt_delta(rec, prev.get(name)),
-            f">={rec.get('floor', float('nan')):.1f}x",
+            _num(rec, "speedup", "{:.2f}x"),
+            _fmt_delta(rec, prev.get(name)) if prev else "-",
+            ">=" + _num(rec, "floor", "{:.1f}x"),
             "pass" if rec.get("passed") else "FAIL",
-            f"{rec.get('wall_s', float('nan')):.1f}s",
+            _num(rec, "wall_s", "{:.1f}s"),
             str(rec.get("git_sha", "?")),
             str(rec.get("timestamp_iso", "?")),
         ])
+    # benches the previous artifact ran but this one did not: surface them
+    # as dropped instead of silently shrinking the table
+    for name in sorted(set(prev) - set(recs)):
+        rows.append([name, "-", "dropped",
+                     ">=" + _num(prev[name], "floor", "{:.1f}x"),
+                     "-", "-", str(prev[name].get("git_sha", "?")),
+                     str(prev[name].get("timestamp_iso", "?"))])
     for name, why in bad:
         rows.append([name, "-", "-", "-", "-", "-", "-", why])
     return rows, bool(prev)

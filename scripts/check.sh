@@ -5,14 +5,17 @@
 #   lint         byte-compile every tree we ship (cheap syntax/import-shape
 #                sanity; no third-party linter is vendored)
 #   test         the full pytest suite
-#   bench-smoke  the five floor-gated smoke benchmarks — predict_grid (5x
+#   bench-smoke  the six floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
 #                predict_many (5x floor + element-wise equality), the
 #                HTTP transport (3x concurrent-vs-sequential client floor +
-#                equality vs direct predict_many), and the stacked
+#                equality vs direct predict_many), the stacked
 #                ModelBank (3x stacked-vs-per-group floor + bitwise
-#                float64-member equality + fused_calls==1 accounting) —
+#                float64-member equality + fused_calls==1 accounting), and
+#                live calibration (drift-injected replay must detect,
+#                refit, canary and promote: 3x MAPE recovery floor, one
+#                promotion, zero rollbacks, zero added hot-path p99) —
 #                each writing its results/bench/BENCH_*.json trajectory
 #                record (scripts/bench_report.py renders them, with deltas
 #                vs a previous artifact when one is present; ci.yml runs
@@ -38,6 +41,7 @@ stage_bench_smoke() {
     python -m benchmarks.bench_serve --smoke
     python -m benchmarks.bench_transport --smoke
     python -m benchmarks.bench_bank --smoke
+    python -m benchmarks.bench_calibrate --smoke
     # trajectory table: printed by a dedicated always() step in ci.yml;
     # run `python scripts/bench_report.py` locally for the same view
 }

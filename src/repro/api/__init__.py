@@ -22,8 +22,8 @@ microbatching + caching on top.
 See ``src/repro/api/README.md`` for the full surface.
 """
 from repro.api.artifacts import (ArtifactError, FingerprintMismatchError,
-                                 SchemaVersionError, config_fingerprint,
-                                 fit_or_load, load, save)
+                                 SchemaVersionError, calibration_fingerprint,
+                                 config_fingerprint, fit_or_load, load, save)
 from repro.api.bank import BankUnsupportedError, ModelBank
 from repro.api.oracle import LatencyOracle
 from repro.api.planner import (choose_anchor, plan_request,
@@ -47,6 +47,7 @@ __all__ = [
     "OverloadedError",
     "PredictPlan", "PredictRequest", "PredictResult", "SchemaVersionError",
     "ServiceStats", "UnknownDeviceError", "UnsupportedRequestError",
-    "Workload", "choose_anchor", "config_fingerprint", "fit_or_load",
+    "Workload", "calibration_fingerprint", "choose_anchor",
+    "config_fingerprint", "fit_or_load",
     "load", "plan_request", "request_fingerprint", "save",
 ]

@@ -53,6 +53,19 @@ def config_fingerprint(config: ProfetConfig) -> str:
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
+def calibration_fingerprint(config: ProfetConfig, pairs, n_obs: int) -> str:
+    """Epoch label for a live-calibrated candidate oracle: the base config
+    fingerprint plus a ``+cal<digest>`` suffix over the refit pairs and the
+    number of live observations folded in. Two candidates refit from the
+    same config on different live evidence get different labels, and the
+    ``+cal`` marker makes calibrated epochs recognisable in ``/statsz``.
+    (The serving swap additionally uniquifies reused labels.)"""
+    payload = json.dumps({"pairs": sorted(list(p) for p in pairs),
+                          "n_obs": int(n_obs)}, sort_keys=True)
+    digest = hashlib.sha256(payload.encode()).hexdigest()[:8]
+    return f"{config_fingerprint(config)}+cal{digest}"
+
+
 def save(oracle: LatencyOracle, path: Union[str, pathlib.Path]) -> dict:
     """Write the oracle under a versioned envelope; returns the manifest."""
     path = pathlib.Path(path)

@@ -120,6 +120,25 @@ class LatencyOracle:
             ds, train_cases, anchors=anchors, targets=targets)
         return cls(profet, ds)
 
+    def clone_with_pairs(self, overrides: Dict[Tuple[str, str], object]
+                         ) -> "LatencyOracle":
+        """A candidate oracle with ``overrides``' phase-1 ensembles swapped
+        in over this oracle's pairs (live-calibration refits): the clone
+        shares the dataset, the fitted feature clustering, and the phase-2
+        knob scalers — overridden ensembles MUST have been fit on feature
+        matrices from this oracle's :meth:`feature_matrix` — but owns its
+        own ``cross`` table and ModelBank, so banking/warming/serving the
+        candidate never mutates the incumbent. Every overridden pair must
+        already be trained here."""
+        for anchor, target in overrides:
+            self._check_pair(anchor, target)
+        profet = Profet(self.config)
+        profet.features = self.profet.features
+        profet.batch_scalers = self.profet.batch_scalers
+        profet.pixel_scalers = self.profet.pixel_scalers
+        profet.cross = {**self.profet.cross, **dict(overrides)}
+        return LatencyOracle(profet, self.dataset)
+
     # ------------------------------------------------------------------
     # introspection (kept public so benchmarks never reach into Profet)
     # ------------------------------------------------------------------

@@ -1,0 +1,26 @@
+"""repro.calibrate — streaming live-calibration over the serving stack.
+
+A control plane that makes ``repro.serve`` self-correcting: client-measured
+latencies stream in (``POST /measure`` or the advise path), per-pair rolling
+MAPE detects drift, drifted pairs are refit in the background into a
+candidate oracle, a shadow canary scores the candidate on mirrored live
+traffic and held-out truth, and the candidate is promoted through the
+warm-up-aware epoch swap only if it wins — with an automatic rollback
+re-swap if live error regresses after promotion.
+"""
+from repro.calibrate.buffer import MeasurementBuffer
+from repro.calibrate.canary import CanaryReport, heldout_scores, verdict
+from repro.calibrate.controller import Calibrator
+from repro.calibrate.drift import DriftDetector
+from repro.calibrate.refit import (RefitReport, build_candidate,
+                                   calibrated_latencies)
+from repro.calibrate.types import (STATE_CONFIRM, STATE_IDLE, STATE_SHADOW,
+                                   CalibrationConfig, CalibrationStats,
+                                   Observation, pair_label)
+
+__all__ = [
+    "Calibrator", "CalibrationConfig", "CalibrationStats", "Observation",
+    "MeasurementBuffer", "DriftDetector", "RefitReport", "build_candidate",
+    "calibrated_latencies", "CanaryReport", "heldout_scores", "verdict",
+    "pair_label", "STATE_IDLE", "STATE_SHADOW", "STATE_CONFIRM",
+]

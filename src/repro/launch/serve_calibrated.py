@@ -1,0 +1,145 @@
+"""Live-calibrated latency service entrypoint.
+
+Stands the full self-correcting stack up — oracle, wave service,
+``repro.calibrate.Calibrator`` control loop, HTTP transport — and either
+serves foreground traffic or runs a *drift-injection replay* against
+itself: synthetic clients measure their "real" latencies from the offline
+dataset, one (anchor, target) pair's truth is scaled by ``--drift`` from
+round ``--onset`` onward, and the measured latencies stream back through
+``POST /measure``. Watch the control loop detect the drift, refit the pair
+in the background, shadow-canary the candidate, and promote it mid-traffic
+(timeline printed at the end):
+
+    # drift-injection replay (default)
+    PYTHONPATH=src python -m repro.launch.serve_calibrated \
+        --rounds 6 --drift 1.6
+
+    # stay up and serve real clients (calibration daemon included)
+    PYTHONPATH=src python -m repro.launch.serve_calibrated --serve \
+        --port 8080
+"""
+import argparse
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = pick a free port")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve foreground until interrupted (no replay)")
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="replay rounds (calibration progresses between)")
+    ap.add_argument("--requests", type=int, default=120,
+                    help="requests per replay round")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--wave", type=int, default=32)
+    ap.add_argument("--drift", type=float, default=1.6,
+                    help="factor applied to the drifted pair's true "
+                         "latency from the onset round on")
+    ap.add_argument("--onset", type=int, default=1,
+                    help="round index the drift starts at")
+    ap.add_argument("--noise", type=float, default=0.01,
+                    help="relative measurement noise")
+    ap.add_argument("--trigger-mape", type=float, default=10.0)
+    ap.add_argument("--interval", type=float, default=0.05,
+                    help="calibration control-loop period (seconds)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper 4-device grid + DNN member (slow fit, "
+                         "cached)")
+    ap.add_argument("--cache", default="results/serve_latency_oracle.pkl",
+                    help="oracle artifact path (--full only)")
+    ap.add_argument("--epochs", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.calibrate import CalibrationConfig, Calibrator
+    from repro.launch.serve_http import _fit_oracle
+    from repro.serve import (BackgroundServer, Client, LatencyService,
+                             replay, synthetic_requests)
+
+    oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
+                         args.epochs, args.seed)
+    service = LatencyService(oracle, max_wave=args.wave)
+    calibrator = Calibrator(service, CalibrationConfig(
+        trigger_mape=args.trigger_mape, min_obs=8, min_refit_obs=6,
+        canary_min_obs=4, confirm_obs=16, cooldown_scored=16))
+    calibrator.start(interval=args.interval)
+    bg = BackgroundServer(service, host=args.host, port=args.port,
+                          calibrator=calibrator).start()
+    print(f"serving http://{bg.host}:{bg.port}  epoch {service.epoch}  "
+          f"pairs: {', '.join(f'{a}->{t}' for a, t in oracle.pairs())}")
+
+    try:
+        if args.serve:
+            print("endpoints: POST /predict /grid /advise /measure  "
+                  "GET /healthz /statsz  (ctrl-c to stop)")
+            try:
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("\ninterrupted")
+            return 0
+
+        ds = oracle.dataset
+        pair = oracle.pairs()[0]
+        rng = np.random.default_rng(args.seed)
+        drifting = {"on": False}
+
+        def measure_fn(req, res):
+            """The replay clients' 'ground truth': dataset latency, the
+            drifted pair scaled once the onset round starts."""
+            case = (res["workload"]["model"], res["workload"]["batch"],
+                    res["workload"]["pix"])
+            if case not in ds.measurements.get(res["target"], {}):
+                return None                    # off-grid: client never ran it
+            truth = ds.latency(res["target"], case)
+            if drifting["on"] and (res["anchor"], res["target"]) == pair:
+                truth *= args.drift
+            return truth * (1.0 + rng.normal(0.0, args.noise))
+
+        label = f"{pair[0]}->{pair[1]}"
+        print(f"drift injection: {label} x{args.drift} from round "
+              f"{args.onset}, trigger MAPE {args.trigger_mape}")
+        for rnd in range(args.rounds):
+            drifting["on"] = rnd >= args.onset
+            reqs = synthetic_requests(oracle, n=args.requests,
+                                      seed=args.seed + rnd)
+            rep = replay(bg.host, bg.port, reqs, clients=args.clients,
+                         measure_fn=measure_fn)
+            time.sleep(max(0.2, 4 * args.interval))  # let the loop catch up
+            s = calibrator.summary()
+            mape = s["rolling_mape"].get(label, float("nan"))
+            print(f"round {rnd}: drift={'on' if drifting['on'] else 'off'}  "
+                  f"{rep['ok']}/{rep['n']} ok  "
+                  f"{rep['measured']} measured  state={s['state']}  "
+                  f"{label} MAPE={mape:.1f}  epoch={s['epoch']}")
+        calibrator.stop()
+
+        print("\ncalibration timeline:")
+        for ev in calibrator.stats.events:
+            print(f"  * {ev}")
+        s = calibrator.summary()
+        print(f"\nfinal: state={s['state']}  scored={s['scored']}  "
+              f"drift_events={s['drift_events']}  refits={s['refits']}  "
+              f"canary {s['canary_pass']}/{s['canary_pass'] + s['canary_fail']}"
+              f" passed  promotions={s['promotions']}  "
+              f"rollbacks={s['rollbacks']}  confirms={s['confirms']}")
+        with Client(bg.host, bg.port) as c:
+            st = c.statsz()
+            print(f"statsz: epoch {st['stats']['epoch']}  "
+                  f"swaps {st['stats']['epoch_swaps']}  "
+                  f"calibration state {st['calibration']['state']}")
+        return 0
+    finally:
+        calibrator.stop()
+        bg.stop()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,6 +105,10 @@ class LatencyService:
         # two-phase-heavy wave would still pay a compile
         self._warmup_rows = int(warmup_rows if warmup_rows is not None
                                 else 2 * self.max_wave)
+        # wave observer (live calibration): called after each completed
+        # wave with its finished requests. Never on the submit path, and
+        # exceptions are swallowed — observers must not break serving.
+        self._observer = None
         if self._warmup_enabled:
             self._warm(oracle)
 
@@ -116,6 +120,23 @@ class LatencyService:
     def epoch(self) -> str:
         """The cache epoch new admissions are served under."""
         return self._epoch
+
+    def set_observer(self, callback) -> None:
+        """Register a wave observer: ``callback(completed)`` runs after
+        each wave with that wave's finished :class:`ServiceRequest` list
+        (results and errors both included). Used by ``repro.calibrate`` to
+        mirror live traffic onto shadow candidates without touching the
+        serving path; any exception it raises is swallowed."""
+        self._observer = callback
+
+    def _notify_observer(self, wave: Sequence["ServiceRequest"]) -> None:
+        cb = self._observer
+        if cb is None:
+            return
+        try:
+            cb([sr for sr in wave if sr.error is None])
+        except Exception:
+            pass
 
     # ------------------------------------------------------------------
     def submit(self, request: PredictRequest) -> ServiceRequest:
@@ -230,6 +251,7 @@ class LatencyService:
                     self._complete(sr)
                 self.stats.requests += len(wave)
                 self.stats.waves += 1
+                self._notify_observer(wave)
                 return
             self.stats.fused_calls += batch.fused_calls
             for (sr, key), res in zip(pending, batch.results):
@@ -246,6 +268,7 @@ class LatencyService:
                 self._complete(sr)
         self.stats.requests += len(wave)
         self.stats.waves += 1
+        self._notify_observer(wave)
 
     def _next_wave(self) -> Tuple[List[ServiceRequest], LatencyOracle, str]:
         """Atomically admit the next wave under the current oracle epoch."""

@@ -17,10 +17,19 @@ Endpoints (all bodies and responses are JSON):
     the same wave queue (shared rows fuse in the executor) and reassembles
     into the dense NaN-padded grid.
   - ``POST /advise``  — the advisor sweep (anchor, workload, optional
-    measured_ms/targets); one row per reachable target.
+    measured_ms/targets); one row per reachable target. When a calibrator
+    is attached, a supplied ``measured_ms`` is also ingested as a live
+    observation (free ground truth off the advise path).
+  - ``POST /measure`` — the measurement firehose: a *columnar* batch
+    (array per field: anchor/target/model/batch/pix/latency_ms, optional
+    predicted_ms) of client-measured latencies for live calibration;
+    answers ``{"ok": true, "accepted": n, "dropped": d}``. 422 when the
+    server runs without a calibrator.
   - ``GET /healthz``  — liveness + current epoch + queue depth.
   - ``GET /statsz``   — ``ServiceStats.summary()`` (waves, fused calls,
-    cache hits lifetime/per-epoch, swaps, overloads, p50/p99, ...).
+    cache hits lifetime/per-epoch, swaps, overloads, p50/p99, ...) plus a
+    ``calibration`` block (state, drift, canary verdicts, promotions)
+    when a calibrator is attached.
 
 Back-pressure: admission is bounded by ``max_queue`` *unresolved* requests
 (queued + mid-wave). Past it, requests are rejected immediately with a
@@ -132,8 +141,11 @@ class TransportServer:
 
     def __init__(self, service: LatencyService, *, host: str = "127.0.0.1",
                  port: int = 0, max_queue: int = 1024,
-                 batch_window_s: float = 0.005):
+                 batch_window_s: float = 0.005, calibrator=None):
         self.service = service
+        # optional repro.calibrate.Calibrator: receives /measure batches
+        # and advise-path ground truth; exports its stats under /statsz
+        self.calibrator = calibrator
         self.host = host
         self.port = port
         self.max_queue = int(max_queue)
@@ -330,10 +342,13 @@ class TransportServer:
             if path == "/statsz":
                 if method != "GET":
                     return 405, _method_not_allowed(method)
-                return 200, {"ok": True,
-                             "stats": self.service.stats.summary(),
-                             "pending": len(self._futs),
-                             "max_queue": self.max_queue}
+                out = {"ok": True,
+                       "stats": self.service.stats.summary(),
+                       "pending": len(self._futs),
+                       "max_queue": self.max_queue}
+                if self.calibrator is not None:
+                    out["calibration"] = self.calibrator.summary()
+                return 200, out
             if path == "/predict":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
@@ -346,6 +361,10 @@ class TransportServer:
                 if method != "POST":
                     return 405, _method_not_allowed(method)
                 return await self._advise(_decode_json(body))
+            if path == "/measure":
+                if method != "POST":
+                    return 405, _method_not_allowed(method)
+                return self._measure(_decode_json(body))
             return 404, {"ok": False,
                          "error": {"type": "NotFound",
                                    "message": f"no route {path!r}"}}
@@ -410,6 +429,14 @@ class TransportServer:
             raise
         except (KeyError, TypeError, ValueError, AttributeError) as e:
             raise MalformedRequestError(f"bad advise payload: {e!r}") from e
+        if measured is not None and self.calibrator is not None:
+            # a client that measured its own anchor latency just handed us
+            # live ground truth for the (anchor, anchor) measured-mode pair
+            # — feed the calibrator for free (never fail the sweep over it)
+            try:
+                self.calibrator.ingest(anchor, anchor, workload, measured)
+            except Exception:
+                pass
         oracle = self.service.oracle
         reqs, scatter = oracle.stage_advise(anchor, workload, profile,
                                             measured, targets)
@@ -423,6 +450,76 @@ class TransportServer:
                                           epoch=self.service.epoch)
         return 200, {"ok": True,
                      "rows": [result_to_dict(r) for r in rows]}
+
+    def _measure(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+        if self.calibrator is None:
+            raise UnsupportedRequestError(
+                "this server runs without a calibrator; /measure is "
+                "unavailable")
+        accepted, dropped = self.calibrator.ingest_rows(
+            measure_rows_from_columnar(payload))
+        return 200, {"ok": True, "accepted": accepted, "dropped": dropped}
+
+
+# columnar /measure wire format: one array per field, row i across all
+# arrays is one observation. Dense, schema-checked once per batch, and
+# cheap to build from the flat lists a load generator already keeps.
+_MEASURE_FIELDS = ("anchor", "target", "model", "batch", "pix",
+                   "latency_ms")
+
+
+def measure_rows_from_columnar(payload: Any) -> List[Dict[str, Any]]:
+    """Decode a columnar ``/measure`` batch into per-observation rows.
+    ``predicted_ms`` and ``epoch`` are optional (arrays with ``null``
+    holes allowed); ragged or missing columns raise
+    :class:`MalformedRequestError`."""
+    if not isinstance(payload, dict):
+        raise MalformedRequestError(
+            f"measure payload must be a JSON object of arrays, "
+            f"got {type(payload).__name__}")
+    cols: Dict[str, list] = {}
+    n = None
+    for field in _MEASURE_FIELDS:
+        col = payload.get(field)
+        if not isinstance(col, (list, tuple)):
+            raise MalformedRequestError(
+                f"measure field {field!r} must be an array "
+                f"(columnar batch), got {type(col).__name__}")
+        if n is None:
+            n = len(col)
+        elif len(col) != n:
+            raise MalformedRequestError(
+                f"ragged measure batch: field {field!r} has {len(col)} "
+                f"rows, expected {n}")
+        cols[field] = list(col)
+    optional = {}
+    for field in ("predicted_ms", "epoch"):
+        col = payload.get(field)
+        if col is None:
+            continue
+        if not isinstance(col, (list, tuple)) or len(col) != n:
+            raise MalformedRequestError(
+                f"measure field {field!r} must be an array matching the "
+                "batch length (null holes allowed)")
+        optional[field] = list(col)
+    rows = []
+    for i in range(n or 0):
+        row = {field: cols[field][i] for field in _MEASURE_FIELDS}
+        for field, col in optional.items():
+            if col[i] is not None:
+                row[field] = col[i]
+        rows.append(row)
+    return rows
+
+
+def measure_columnar_from_rows(rows: Sequence[Dict[str, Any]]
+                               ) -> Dict[str, list]:
+    """The inverse: per-observation rows -> the columnar wire body."""
+    body: Dict[str, list] = {f: [r[f] for r in rows]
+                             for f in _MEASURE_FIELDS}
+    body["predicted_ms"] = [r.get("predicted_ms") for r in rows]
+    body["epoch"] = [r.get("epoch") for r in rows]
+    return body
 
 
 def _decode_json(body: bytes) -> Any:
@@ -603,6 +700,15 @@ class Client:
     def advise(self, payload: Dict[str, Any]) -> List[Dict[str, Any]]:
         return self._checked("POST", "/advise", payload)["rows"]
 
+    def measure(self, rows: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+        """Report a batch of client-measured latencies for live
+        calibration. ``rows``: dicts with anchor/target/model/batch/pix/
+        latency_ms (+ optional predicted_ms); sent as ONE columnar body.
+        Returns ``{"accepted": n, "dropped": d}``."""
+        out = self._checked("POST", "/measure",
+                            measure_columnar_from_rows(rows))
+        return {"accepted": out["accepted"], "dropped": out["dropped"]}
+
     def healthz(self) -> Dict[str, Any]:
         return self._checked("GET", "/healthz")
 
@@ -618,17 +724,39 @@ def request_to_dict(req: PredictRequest) -> Dict[str, Any]:
 
 
 def replay(host: str, port: int, requests: Sequence[PredictRequest],
-           clients: int = 8) -> Dict[str, Any]:
+           clients: int = 8, measure_fn=None,
+           measure_every: int = 32) -> Dict[str, Any]:
     """Client-replay load generator: partition ``requests`` round-robin
     over ``clients`` threads (one keep-alive connection each) and fire them
     concurrently. Returns wall time, per-request client-side latencies, the
-    responses in original request order, and any typed errors."""
+    responses in original request order, and any typed errors.
+
+    ``measure_fn(request, result_dict) -> float | None`` simulates a client
+    that actually ran its workload: a non-``None`` return is the measured
+    latency, reported back through ``POST /measure`` in columnar batches of
+    ``measure_every`` rows per thread (each row echoes the prediction it is
+    scored against as ``predicted_ms``), driving live calibration."""
     results: List[Optional[Dict[str, Any]]] = [None] * len(requests)
     errors: List[Tuple[int, str]] = []
     lat_ms: List[float] = []
     lock = threading.Lock()
+    measured = {"reported": 0, "dropped": 0}
+
+    def flush(c: Client, rows: List[Dict[str, Any]]) -> None:
+        if not rows:
+            return
+        try:
+            out = c.measure(rows)
+        except (TransportError, ConnectionError, OSError):
+            return
+        finally:
+            rows.clear()
+        with lock:
+            measured["reported"] += out["accepted"]
+            measured["dropped"] += out["dropped"]
 
     def worker(offset: int) -> None:
+        rows: List[Dict[str, Any]] = []
         with Client(host, port) as c:
             for i in range(offset, len(requests), clients):
                 t0 = time.perf_counter()
@@ -642,6 +770,21 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
                 with lock:
                     results[i] = res
                     lat_ms.append(dt)
+                if measure_fn is None:
+                    continue
+                truth = measure_fn(requests[i], res)
+                if truth is None:
+                    continue
+                w = res["workload"]
+                rows.append({"anchor": res["anchor"],
+                             "target": res["target"],
+                             "model": w["model"], "batch": w["batch"],
+                             "pix": w["pix"], "latency_ms": float(truth),
+                             "predicted_ms": res["latency_ms"],
+                             "epoch": res.get("epoch")})
+                if len(rows) >= max(1, int(measure_every)):
+                    flush(c, rows)
+            flush(c, rows)
 
     threads = [threading.Thread(target=worker, args=(k,))
                for k in range(max(1, int(clients)))]
@@ -655,6 +798,8 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
     return {"wall_s": wall, "n": len(requests), "clients": clients,
             "ok": sum(r is not None for r in results),
             "errors": errors, "results": results,
+            "measured": measured["reported"],
+            "measure_dropped": measured["dropped"],
             "client_p50_ms": float(np.nanpercentile(arr, 50)),
             "client_p99_ms": float(np.nanpercentile(arr, 99)),
             "latencies_ms": lat_ms,

@@ -1,0 +1,84 @@
+"""Bench-trajectory report: delta rendering against a previous artifact,
+including benches that exist on only one side ("new" / "dropped") and
+half-written records — none of which may crash the report."""
+import json
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "scripts"))
+
+import bench_report  # noqa: E402
+
+
+def _write(dirpath, name, **over):
+    rec = {"benchmark": name, "speedup": 5.0, "floor": 3.0, "passed": True,
+           "wall_s": 1.2, "git_sha": "abc1234",
+           "timestamp_iso": "2026-08-07T00:00:00"}
+    rec.update(over)
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / f"BENCH_{name}.json").write_text(json.dumps(rec))
+
+
+def _row(rows, name):
+    return next(r for r in rows if r[0] == name)
+
+
+def test_delta_against_previous(tmp_path):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    _write(cur, "serve", speedup=6.0)
+    _write(prev, "serve", speedup=5.0)
+    rows, have_prev = bench_report.rows_from(cur, prev)
+    assert have_prev
+    assert _row(rows, "serve")[2] == "+1.00x"
+
+
+def test_current_only_bench_renders_as_new(tmp_path):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    _write(cur, "serve")
+    _write(cur, "calibrate", speedup=4.0)
+    _write(prev, "serve")
+    rows, _ = bench_report.rows_from(cur, prev)
+    row = _row(rows, "calibrate")
+    assert row[1] == "4.00x" and row[2] == "new"
+
+
+def test_prev_only_bench_renders_as_dropped(tmp_path):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    _write(cur, "serve")
+    _write(prev, "serve")
+    _write(prev, "grid", floor=2.0)
+    rows, _ = bench_report.rows_from(cur, prev)
+    row = _row(rows, "grid")
+    assert row[1] == "-" and row[2] == "dropped" and row[3] == ">=2.0x"
+    # dropped rows render in the table without error
+    assert "dropped" in bench_report.fmt_table(
+        rows, ["benchmark", "speedup", "delta", "floor", "gate", "wall",
+               "git", "when"])
+
+
+def test_no_prev_dir_means_no_deltas(tmp_path):
+    cur = tmp_path / "cur"
+    _write(cur, "serve")
+    rows, have_prev = bench_report.rows_from(cur, tmp_path / "missing")
+    assert not have_prev
+    assert _row(rows, "serve")[2] == "-"
+
+
+def test_null_speedup_does_not_crash(tmp_path):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    _write(cur, "serve", speedup=None, wall_s=None, passed=False)
+    _write(prev, "serve")
+    rows, _ = bench_report.rows_from(cur, prev)
+    row = _row(rows, "serve")
+    assert row[1] == "-" and row[2] == "-" and row[4] == "FAIL"
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    _write(cur, "serve", speedup=6.0)
+    _write(prev, "serve", speedup=5.0)
+    _write(prev, "grid")
+    assert bench_report.main([str(cur), "--prev", str(prev)]) == 0
+    out = capsys.readouterr().out
+    assert "+1.00x" in out and "dropped" in out

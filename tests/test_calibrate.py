@@ -1,0 +1,422 @@
+"""Live calibration: ingest buffer, drift detection, per-pair refits,
+shadow canary verdicts, and the full detect -> refit -> canary ->
+promote / rollback loop over a live LatencyService (driven synchronously
+through ``Calibrator.step`` for determinism)."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import workloads
+from repro.core.ensemble import MedianEnsemble, mape
+from repro.core.predictor import ProfetConfig
+from repro.calibrate import (STATE_CONFIRM, STATE_IDLE, STATE_SHADOW,
+                             CalibrationConfig, Calibrator, DriftDetector,
+                             MeasurementBuffer, Observation, RefitReport,
+                             build_candidate, heldout_scores, verdict)
+from repro.serve import LatencyService
+
+CFG = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=0)
+PAIR = ("T4", "V100")
+
+# small windows so the whole loop runs in a handful of waves
+CAL = CalibrationConfig(drift_window=32, min_obs=6, trigger_mape=10.0,
+                        min_refit_obs=6, drift_confirm_obs=12,
+                        cooldown_scored=8, canary_min_obs=4,
+                        confirm_obs=10)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    return api.LatencyOracle.fit(ds, CFG)
+
+
+def _obs(pair=PAIR, case=("LeNet5", 4, 32), latency=10.0, pred=None):
+    return Observation(anchor=pair[0], target=pair[1], case=case,
+                       latency_ms=latency, predicted_ms=pred)
+
+
+# ---------------------------------------------------------------------------
+# ingest buffer
+# ---------------------------------------------------------------------------
+
+
+def test_buffer_ring_and_drop_accounting():
+    buf = MeasurementBuffer(per_pair=4, max_pairs=2)
+    for i in range(6):
+        assert buf.add(_obs(latency=float(i + 1)))
+    assert buf.count(PAIR) == 4 and buf.evicted == 2
+    # freshest survive, oldest fell off the back
+    assert [o.latency_ms for o in buf.observations(PAIR)] == [3, 4, 5, 6]
+    assert [o.latency_ms for o in buf.observations(PAIR, last=2)] == [5, 6]
+    # non-finite / non-positive latencies never enter
+    assert not buf.add(_obs(latency=float("nan")))
+    assert not buf.add(_obs(latency=-1.0))
+    # pair table is bounded
+    assert buf.add(_obs(pair=("V100", "T4")))
+    assert not buf.add(_obs(pair=("A100", "T4")))
+    assert buf.rejected == 3
+    assert buf.total() == 5
+
+
+def test_buffer_rejects_unroutable_pairs():
+    buf = MeasurementBuffer(allowed_pairs={PAIR})
+    assert buf.add(_obs())
+    assert not buf.add(_obs(pair=("T4", "TPUv9")))
+    # target == anchor (measured-mode ground truth) is always ingestible
+    assert buf.add(_obs(pair=("K80", "K80")))
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+
+def test_drift_trigger_and_hysteresis():
+    det = DriftDetector(window=16, min_obs=4, trigger_mape=10.0,
+                        clear_ratio=0.5)
+    # 3 bad samples: below min_obs, cannot trigger yet
+    assert [det.update(PAIR, 100.0, 120.0) for _ in range(3)] == [None] * 3
+    assert det.update(PAIR, 100.0, 120.0) is True     # the transition
+    assert det.is_drifted(PAIR) and det.drifted_pairs() == [PAIR]
+    # perfect predictions pull the rolling MAPE down, but not below the
+    # clear threshold (5.0) yet -> still drifted, no transition
+    assert det.update(PAIR, 100.0, 100.0) is None
+    assert det.is_drifted(PAIR)
+    while det.is_drifted(PAIR):
+        out = det.update(PAIR, 100.0, 100.0)
+    assert out is False and det.mape(PAIR) < 5.0
+    det.update(PAIR, 100.0, 200.0)
+    det.reset([PAIR])
+    assert det.samples(PAIR) == 0 and not det.is_drifted(PAIR)
+
+
+# ---------------------------------------------------------------------------
+# refit + candidate cloning
+# ---------------------------------------------------------------------------
+
+
+def _fill_drifted(buf, ds, pair, cases, factor, n_per_case=2, noise=0.0,
+                  seed=0):
+    rng = np.random.default_rng(seed)
+    for case in cases:
+        for _ in range(n_per_case):
+            truth = ds.latency(pair[1], case) * factor
+            buf.add(Observation(pair[0], pair[1], case,
+                                truth * (1 + rng.normal(0, noise))))
+
+
+def test_build_candidate_learns_live_truth(oracle):
+    ds = oracle.dataset
+    buf = MeasurementBuffer()
+    factor = 1.7
+    _fill_drifted(buf, ds, PAIR, ds.cases[:12], factor, noise=0.01)
+    cand, rep = build_candidate(oracle, buf, [PAIR], min_refit_obs=6)
+    assert cand is not None and rep.pairs == (PAIR,)
+    assert rep.scale[PAIR] == pytest.approx(factor, rel=0.05)
+    assert rep.total_obs == 24
+    # candidate tracks the drifted truth; incumbent does not
+    truth = np.array([ds.latency("V100", c) * factor for c in ds.cases])
+    reqs = [api.PredictRequest("T4", "V100", api.Workload.from_case(c))
+            for c in ds.cases]
+    assert mape(truth, cand.predict_many(reqs).latencies()) < 5.0
+    assert mape(truth, oracle.predict_many(reqs).latencies()) > 20.0
+    # the untouched pair still answers identically to the incumbent
+    other = [api.PredictRequest("V100", "T4", api.Workload.from_case(c))
+             for c in ds.cases[:8]]
+    np.testing.assert_allclose(cand.predict_many(other).latencies(),
+                               oracle.predict_many(other).latencies(),
+                               rtol=1e-12)
+
+
+def test_build_candidate_requires_enough_observations(oracle):
+    buf = MeasurementBuffer()
+    _fill_drifted(buf, oracle.dataset, PAIR, oracle.dataset.cases[:2], 1.5,
+                  n_per_case=1)
+    cand, rep = build_candidate(oracle, buf, [PAIR], min_refit_obs=6)
+    assert cand is None and rep.pairs == () and rep.skipped == (PAIR,)
+
+
+def test_build_candidate_skips_untrained_and_measured_pairs(oracle):
+    ds = oracle.dataset
+    buf = MeasurementBuffer()
+    _fill_drifted(buf, ds, ("T4", "T4"), ds.cases[:8], 1.5)
+    _fill_drifted(buf, ds, PAIR, ds.cases[:8], 1.5)
+    cand, rep = build_candidate(oracle, buf, [("T4", "T4"), PAIR],
+                                min_refit_obs=6)
+    assert rep.pairs == (PAIR,) and ("T4", "T4") in rep.skipped
+    assert cand is not None
+
+
+def test_clone_with_pairs_validates(oracle):
+    with pytest.raises(api.UnknownDeviceError):
+        oracle.clone_with_pairs({("T4", "TPUv9"): object()})
+
+
+def test_clone_with_pairs_is_isolated(oracle):
+    ds = oracle.dataset
+    X = oracle.feature_matrix("T4", ds.cases)
+    y = np.array([ds.latency("V100", c) for c in ds.cases]) * 2.0
+    ens = MedianEnsemble(seed=0, n_trees=15,
+                        members=("linear", "forest")).fit(X, y)
+    clone = oracle.clone_with_pairs({PAIR: ens})
+    assert clone.profet is not oracle.profet
+    assert clone.features is oracle.features          # shared feature space
+    assert clone.ensemble(*PAIR) is ens
+    assert oracle.ensemble(*PAIR) is not ens          # incumbent untouched
+    # the clone banks and serves on its own
+    assert clone.predict_many(
+        [api.PredictRequest("T4", "V100",
+                            api.Workload.from_case(ds.cases[0]))]).banked
+
+
+# ---------------------------------------------------------------------------
+# shadow canary verdicts
+# ---------------------------------------------------------------------------
+
+
+def test_canary_passes_genuinely_better_candidate(oracle):
+    ds = oracle.dataset
+    buf = MeasurementBuffer()
+    _fill_drifted(buf, ds, PAIR, ds.cases[:10], 1.6, noise=0.01)
+    cand, _ = build_candidate(oracle, buf, [PAIR], min_refit_obs=6)
+    rep = verdict(oracle, cand, buf, [PAIR], min_obs=4)
+    assert rep.passed and PAIR in rep.pair_scores
+    inc, c, n = rep.pair_scores[PAIR]
+    assert c < inc and n == 20
+
+
+def test_canary_fails_on_shadow_errors(oracle):
+    buf = MeasurementBuffer()
+    _fill_drifted(buf, oracle.dataset, PAIR, oracle.dataset.cases[:10], 1.6)
+    cand, _ = build_candidate(oracle, buf, [PAIR], min_refit_obs=6)
+    rep = verdict(oracle, cand, buf, [PAIR], min_obs=4, shadow_errors=2)
+    assert not rep.passed and "shadow" in rep.reason
+
+
+def test_canary_fails_without_refit_pair_coverage(oracle):
+    rep = verdict(oracle, oracle, MeasurementBuffer(), [PAIR], min_obs=4)
+    assert not rep.passed and "no held-out" in rep.reason
+
+
+def test_canary_fails_non_improving_candidate(oracle):
+    buf = MeasurementBuffer()
+    _fill_drifted(buf, oracle.dataset, PAIR, oracle.dataset.cases[:10], 1.6)
+    rep = verdict(oracle, oracle, buf, [PAIR], min_obs=4)
+    assert not rep.passed and "did not improve" in rep.reason
+
+
+# ---------------------------------------------------------------------------
+# the full loop over a live service
+# ---------------------------------------------------------------------------
+
+
+def _drive_round(svc, cal, reqs, truth_fn):
+    """One traffic round: serve ``reqs``, feed measured truth back like a
+    client echoing predictions+epoch, then run one control step."""
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    for sr in svc.take_finished():
+        if sr.error is not None:
+            continue
+        truth = truth_fn(sr.request)
+        if truth is None:
+            continue
+        cal.ingest(sr.request.anchor, sr.request.target,
+                   sr.request.workload, truth,
+                   predicted_ms=sr.result.latency_ms,
+                   epoch=sr.result.epoch)
+    return cal.step()
+
+
+def _cross_reqs(ds, cases):
+    return [api.PredictRequest("T4", "V100", api.Workload.from_case(c))
+            for c in cases]
+
+
+def _drift_truth(ds, factor, rng, noise=0.01):
+    def fn(req):
+        truth = ds.latency(req.target, req.workload.case) * factor
+        return truth * (1 + rng.normal(0, noise))
+    return fn
+
+
+def test_e2e_drift_refit_canary_promote(oracle):
+    ds = oracle.dataset
+    svc = LatencyService(oracle, max_wave=32)
+    cal = Calibrator(svc, CAL)
+    base_epoch = svc.epoch
+    rng = np.random.default_rng(1)
+    drifted = _drift_truth(ds, 1.6, rng)
+    states, seen_epochs = [], set()
+    for rnd in range(14):
+        reqs = _cross_reqs(ds, [ds.cases[(rnd * 7 + i) % len(ds.cases)]
+                                for i in range(16)])
+        states.append(_drive_round(svc, cal, reqs, drifted))
+        seen_epochs |= {sr.result.epoch
+                        for sr in svc.finished if sr.result is not None}
+        if cal.stats.confirms:
+            break
+    s = cal.stats
+    # the whole arc ran: detect -> refit -> shadow -> promote -> confirm
+    assert s.drift_events >= 1 and s.refits == 1
+    assert s.canary_pass == 1 and s.canary_fail == 0
+    assert s.promotions == 1 and s.rollbacks == 0 and s.confirms == 1
+    assert STATE_SHADOW in states and STATE_CONFIRM in states
+    assert states[-1] == STATE_IDLE
+    # promoted epoch is a recognisable calibration epoch
+    assert svc.epoch != base_epoch and "+cal" in svc.epoch
+    # zero stale-epoch answers: every response carried an epoch that was
+    # current when it was served
+    assert seen_epochs <= {base_epoch, svc.epoch}
+    # live error recovered below the trigger
+    assert cal.detector.mape(PAIR) < CAL.trigger_mape
+    # and the service keeps serving under the promoted oracle
+    for r in _cross_reqs(ds, ds.cases[:4]):
+        svc.submit(r)
+    done = svc.run()
+    assert all(sr.result.epoch == svc.epoch for sr in done[-4:])
+    # shadow canary actually replayed mirrored live waves off-path
+    assert s.shadow_waves >= 1 and s.shadow_requests > 0
+    assert s.shadow_errors == 0
+
+
+def test_e2e_poisoned_candidate_rolls_back_before_promotion(oracle):
+    ds = oracle.dataset
+    svc = LatencyService(oracle, max_wave=32)
+
+    def poisoned_refit(oracle_, buffer, pairs, **kw):
+        # a catastrophically wrong candidate: predicts ~0 everywhere
+        overrides = {}
+        for pair in pairs:
+            X = oracle_.feature_matrix(pair[0], ds.cases)
+            overrides[pair] = MedianEnsemble(
+                seed=0, n_trees=5, members=("linear", "forest")).fit(
+                    X, np.full(len(ds.cases), 1e-3))
+        rep = RefitReport(pairs=tuple(pairs), skipped=(), scale={},
+                          n_obs={p: 99 for p in pairs}, total_obs=99)
+        return oracle_.clone_with_pairs(overrides), rep
+
+    cal = Calibrator(svc, CAL, refit_fn=poisoned_refit)
+    base_epoch = svc.epoch
+    rng = np.random.default_rng(2)
+    drifted = _drift_truth(ds, 1.6, rng)
+    for rnd in range(14):
+        reqs = _cross_reqs(ds, [ds.cases[(rnd * 5 + i) % len(ds.cases)]
+                                for i in range(16)])
+        _drive_round(svc, cal, reqs, drifted)
+        if cal.stats.canary_fail:
+            break
+    s = cal.stats
+    # the canary caught the poison: no promotion, incumbent never stopped
+    assert s.refits == 1 and s.canary_fail == 1 and s.canary_pass == 0
+    assert s.promotions == 0 and s.rollbacks == 0
+    assert s.state == STATE_IDLE
+    assert svc.epoch == base_epoch
+    assert s.last_verdict is not None and not s.last_verdict["passed"]
+    assert any("canary failed" in e for e in s.events)
+    # incumbent still serves correctly
+    done_before = svc.stats.requests
+    for r in _cross_reqs(ds, ds.cases[:4]):
+        svc.submit(r)
+    svc.run()
+    assert svc.stats.requests == done_before + 4
+    assert svc.stats.errors == 0
+
+
+def test_e2e_transient_drift_promotes_then_rolls_back(oracle):
+    ds = oracle.dataset
+    svc = LatencyService(oracle, max_wave=32)
+    cal = Calibrator(svc, CAL)
+    base_epoch = svc.epoch
+    rng = np.random.default_rng(3)
+    regime = {"factor": 1.6}
+
+    def truth_fn(req):
+        t = ds.latency(req.target, req.workload.case) * regime["factor"]
+        return t * (1 + rng.normal(0, 0.01))
+
+    promoted_epoch = None
+    for rnd in range(20):
+        reqs = _cross_reqs(ds, [ds.cases[(rnd * 7 + i) % len(ds.cases)]
+                                for i in range(16)])
+        _drive_round(svc, cal, reqs, truth_fn)
+        if cal.stats.promotions and promoted_epoch is None:
+            promoted_epoch = svc.epoch
+            regime["factor"] = 1.0    # the drift was transient: truth reverts
+        if cal.stats.rollbacks:
+            break
+    s = cal.stats
+    assert promoted_epoch is not None and "+cal" in promoted_epoch
+    assert s.promotions == 1 and s.rollbacks == 1 and s.confirms == 0
+    assert s.state == STATE_IDLE
+    # the rollback re-swap restored the pre-promotion oracle under a fresh
+    # uniquified epoch, and purged every cache key of the failed epoch
+    assert svc.epoch not in (base_epoch, promoted_epoch)
+    assert svc.epoch.startswith(base_epoch)
+    assert all(k[0] != promoted_epoch for k in svc._cache)
+    assert svc.oracle.ensemble(*PAIR) is oracle.ensemble(*PAIR)
+    # post-rollback traffic scores cleanly against the restored oracle
+    for rnd in range(3):
+        _drive_round(svc, cal,
+                     _cross_reqs(ds, ds.cases[:12]), truth_fn)
+    assert cal.detector.mape(PAIR) < CAL.trigger_mape
+
+
+def test_promotion_failure_leaves_incumbent_serving(oracle):
+    """A candidate whose warm-up blows up mid-promote is discarded like a
+    failed canary; the incumbent epoch keeps serving."""
+    ds = oracle.dataset
+    svc = LatencyService(oracle, max_wave=32)
+
+    def exploding_refit(oracle_, buffer, pairs, **kw):
+        cand, rep = build_candidate(oracle_, buffer, pairs,
+                                    min_refit_obs=CAL.min_refit_obs,
+                                    window=CAL.drift_confirm_obs)
+        if cand is not None:
+            cand.warmup = lambda max_rows=64: (_ for _ in ()).throw(
+                RuntimeError("bank exploded"))
+        return cand, rep
+
+    cal = Calibrator(svc, CAL, refit_fn=exploding_refit)
+    base_epoch = svc.epoch
+    rng = np.random.default_rng(4)
+    drifted = _drift_truth(ds, 1.6, rng)
+    for rnd in range(14):
+        _drive_round(svc, cal,
+                     _cross_reqs(ds, [ds.cases[(rnd * 5 + i) % len(ds.cases)]
+                                      for i in range(16)]), drifted)
+        if cal.stats.canary_fail:
+            break
+    assert cal.stats.promotions == 0 and cal.stats.canary_fail == 1
+    assert svc.epoch == base_epoch and cal.stats.state == STATE_IDLE
+    assert any("promotion failed" in e for e in cal.stats.events)
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_summary_exports_control_plane(oracle):
+    svc = LatencyService(oracle, warmup=False)
+    cal = Calibrator(svc, CAL)
+    cal.ingest("T4", "V100", ("LeNet5", 4, 32), 12.0, predicted_ms=10.0)
+    cal.step()
+    s = cal.summary()
+    assert s["state"] == STATE_IDLE
+    assert s["observations"] == 1 and s["scored"] == 1
+    assert s["buffered"] == 1 and s["epoch"] == svc.epoch
+    assert "T4->V100" in s["rolling_mape"]
+    # malformed rows are dropped with accounting, never raised
+    accepted, dropped = cal.ingest_rows([
+        {"anchor": "T4", "target": "V100", "model": "LeNet5", "batch": 4,
+         "pix": 32, "latency_ms": 11.0},
+        {"anchor": "T4", "target": "V100", "model": "LeNet5",
+         "batch": "not-a-number", "pix": 32, "latency_ms": 11.0},
+        {"missing": "everything"},
+    ])
+    assert (accepted, dropped) == (1, 2)
+    assert cal.stats.dropped == 2

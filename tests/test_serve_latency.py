@@ -174,3 +174,97 @@ def test_public_exports():
     assert LS is LatencyService
     assert {"PredictPlan", "BatchPredictResult", "ServiceStats",
             "InvalidWorkloadError"} <= set(api.__all__)
+
+
+# ---------------------------------------------------------------------------
+# oracle_refreshed failure paths (the swap guarantees live calibration
+# promotion/rollback rest on)
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_warmup_failure_leaves_incumbent_intact(oracle, stream):
+    svc = LatencyService(oracle, max_wave=32)
+    for r in stream[:16]:
+        svc.submit(r)
+    svc.run()
+    epoch0 = svc.epoch
+    cache0 = dict(svc._cache)
+    assert cache0, "cache should be warm before the failed swap"
+
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet"))
+    fresh = api.LatencyOracle.fit(ds, ProfetConfig(
+        members=("linear", "forest"), n_trees=15, seed=9))
+    fresh.warmup = lambda max_rows=64: (_ for _ in ()).throw(
+        RuntimeError("warm-up exploded"))
+    with pytest.raises(RuntimeError, match="warm-up exploded"):
+        svc.oracle_refreshed(fresh, "next-epoch")
+    # warm-up runs BEFORE the swap lock: nothing is half-swapped
+    assert svc.oracle is oracle
+    assert svc.epoch == epoch0
+    assert svc.stats.epoch_swaps == 0 and svc.stats.invalidated == 0
+    assert dict(svc._cache) == cache0
+    # and the incumbent keeps serving (replay hits the intact cache)
+    hits0 = svc.stats.cache_hits
+    for r in stream[:16]:
+        svc.submit(r)
+    svc.run()
+    assert svc.stats.cache_hits == hits0 + 16
+    assert all(sr.error is None for sr in svc.finished)
+
+
+def test_rollback_reswap_purges_every_failed_epoch_key(oracle, stream):
+    """The calibration rollback pattern: swap to a candidate, serve under
+    it, swap BACK — every cache key of the abandoned epoch must purge and
+    the restored oracle must serve under a fresh uniquified epoch."""
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet", "VGG11",
+                                    "ResNet18"))
+    candidate = api.LatencyOracle.fit(ds, ProfetConfig(
+        members=("linear", "forest"), n_trees=15, seed=9))
+    svc = LatencyService(oracle, max_wave=32, warmup=False)
+    base_epoch = svc.epoch
+    for r in stream[:24]:
+        svc.submit(r)
+    svc.run()
+    promoted = svc.oracle_refreshed(candidate, "candidate-epoch")
+    for r in stream[:24]:
+        svc.submit(r)
+    svc.run()
+    assert any(k[0] == promoted for k in svc._cache)
+    invalidated0 = svc.stats.invalidated
+
+    restored = svc.oracle_refreshed(oracle, base_epoch)   # the rollback
+    assert svc.oracle is oracle
+    # the label was already used at construction -> uniquified, never reused
+    assert restored != base_epoch and restored.startswith(base_epoch)
+    # every key of the failed epoch (and any older epoch) is gone
+    assert all(k[0] == restored for k in svc._cache) or not svc._cache
+    assert not any(k[0] == promoted for k in svc._cache)
+    assert svc.stats.invalidated > invalidated0
+    assert svc.stats.epoch_swaps == 2
+    assert svc.stats.epoch_cache_hits == 0   # per-epoch counter reset
+    # post-rollback traffic serves + caches under the restored epoch only
+    for r in stream[:8]:
+        svc.submit(r)
+    done = svc.run()
+    assert all(sr.result.epoch == restored for sr in done[-8:]
+               if sr.result is not None)
+
+
+def test_wave_observer_sees_completed_waves(oracle, stream):
+    svc = LatencyService(oracle, max_wave=16, warmup=False)
+    seen = []
+    svc.set_observer(lambda wave: seen.append(list(wave)))
+    for r in stream[:32]:
+        svc.submit(r)
+    svc.run()
+    assert len(seen) == 2
+    assert sum(len(w) for w in seen) == 32
+    assert all(sr.done and sr.error is None for w in seen for sr in w)
+    # a raising observer is swallowed, never breaks serving
+    svc.set_observer(lambda wave: 1 / 0)
+    for r in stream[:8]:
+        svc.submit(r)
+    svc.run()
+    assert svc.stats.errors == 0

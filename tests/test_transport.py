@@ -542,3 +542,114 @@ def test_serve_public_exports():
             "TransportServer", "replay"} <= set(serve.__all__)
     assert {"ANCHOR_ANY", "MalformedRequestError",
             "OverloadedError"} <= set(api.__all__)
+
+
+# ---------------------------------------------------------------------------
+# /measure + live calibration over the wire
+# ---------------------------------------------------------------------------
+
+
+def _measure_rows(n=3, pair=("T4", "V100"), latency=12.0):
+    return [{"anchor": pair[0], "target": pair[1], "model": "LeNet5",
+             "batch": 4, "pix": 32, "latency_ms": latency + i,
+             "predicted_ms": 10.0} for i in range(n)]
+
+
+def test_measure_without_calibrator_is_422(server):
+    with _client(server) as c:
+        with pytest.raises(TransportError) as ei:
+            c.measure(_measure_rows())
+        assert ei.value.status == 422
+        assert ei.value.error_type == "UnsupportedRequestError"
+
+
+def test_measure_columnar_round_trip(oracle):
+    from repro.calibrate import CalibrationConfig, Calibrator
+    svc = LatencyService(oracle, max_wave=32)
+    cal = Calibrator(svc, CalibrationConfig())
+    bg = BackgroundServer(svc, batch_window_s=0.0, calibrator=cal).start()
+    try:
+        with Client(bg.host, bg.port) as c:
+            out = c.measure(_measure_rows(4))
+            assert out == {"accepted": 4, "dropped": 0}
+            # bad rows drop with accounting instead of failing the batch
+            rows = _measure_rows(2)
+            rows[1]["latency_ms"] = -5.0
+            rows.append({"anchor": "T4", "target": "TPUv9",
+                         "model": "LeNet5", "batch": 4, "pix": 32,
+                         "latency_ms": 9.0})
+            out = c.measure(rows)
+            assert out == {"accepted": 1, "dropped": 2}
+            # the observations landed in the calibrator, echo intact
+            obs = cal.buffer.observations(("T4", "V100"))
+            assert len(obs) == 5
+            assert obs[0].predicted_ms == 10.0
+            # ragged columnar batches are malformed, not dropped
+            status, body = c.request("POST", "/measure",
+                                     {"anchor": ["T4"], "target": [],
+                                      "model": ["LeNet5"], "batch": [4],
+                                      "pix": [32], "latency_ms": [9.0]})
+            assert status == 400
+            assert body["error"]["type"] == "MalformedRequestError"
+            # calibration block is exported through /statsz
+            s = c.statsz()
+            assert s["calibration"]["observations"] == 5
+            assert s["calibration"]["dropped"] == 2
+            assert s["calibration"]["state"] == "idle"
+    finally:
+        bg.stop()
+
+
+def test_advise_measured_ms_feeds_calibrator(oracle, dataset):
+    from repro.calibrate import CalibrationConfig, Calibrator
+    svc = LatencyService(oracle, max_wave=32)
+    cal = Calibrator(svc, CalibrationConfig())
+    bg = BackgroundServer(svc, batch_window_s=0.0, calibrator=cal).start()
+    try:
+        case = dataset.cases[0]
+        with Client(bg.host, bg.port) as c:
+            rows = c.advise({"anchor": "T4",
+                             "workload": {"model": case[0],
+                                          "batch": case[1],
+                                          "pix": case[2]},
+                             "measured_ms": 12.5})
+            assert rows[0]["latency_ms"] == 12.5
+        # the client-measured anchor latency became a live observation
+        obs = cal.buffer.observations(("T4", "T4"))
+        assert len(obs) == 1 and obs[0].latency_ms == 12.5
+        assert cal.stats.observations == 1
+    finally:
+        bg.stop()
+
+
+def test_replay_reports_measurements_columnar(oracle, dataset, stream):
+    """The load generator's measure_fn path: measured latencies stream
+    back through /measure in columnar batches and reach the calibrator."""
+    from repro.calibrate import CalibrationConfig, Calibrator
+    svc = LatencyService(oracle, max_wave=32)
+    cal = Calibrator(svc, CalibrationConfig())
+    bg = BackgroundServer(svc, batch_window_s=0.0, calibrator=cal).start()
+    try:
+        def measure_fn(req, res):
+            case = (res["workload"]["model"], res["workload"]["batch"],
+                    res["workload"]["pix"])
+            if case not in dataset.measurements.get(res["target"], {}):
+                return None
+            return dataset.latency(res["target"], case)
+
+        rep = replay(bg.host, bg.port, stream, clients=4,
+                     measure_fn=measure_fn, measure_every=8)
+        assert rep["ok"] == len(stream)
+        assert rep["measured"] > 0 and rep["measure_dropped"] == 0
+        assert cal.stats.observations == rep["measured"]
+        # echoes carry prediction + epoch for drift scoring
+        some = [o for p in cal.buffer.pairs()
+                for o in cal.buffer.observations(p)]
+        assert all(o.predicted_ms is not None for o in some)
+        assert all(o.epoch == svc.epoch for o in some)
+        cal.step()
+        assert cal.stats.scored == rep["measured"]
+        # healthy traffic: nothing drifts
+        assert cal.detector.drifted_pairs() == []
+    finally:
+        bg.stop()
