@@ -1,0 +1,144 @@
+"""Fault-injected replay resilience gate: the serving plane must keep
+its throughput and tail latency through scripted chaos, losing zero
+requests.
+
+Two replays of the same mixed traffic against the HTTP transport:
+a clean one, and one with a seeded ``FaultPlan`` injecting wave-execute
+failures at FAULT_RATE plus short wave delays. Every request hit by an
+injected fault must come back as a *typed* error (HTTP 500 Execution /
+503 CircuitOpen) — never a hang, a dropped connection, or a silent loss.
+
+Acceptance floors:
+  - zero lost requests: answered + typed errors == total, in both runs
+    (the clean run additionally has zero errors);
+  - throughput under chaos >= THROUGHPUT_FLOOR x clean throughput —
+    failing waves fast-fail instead of stalling the pump;
+  - client p99 under chaos <= P99_SLACK x clean p99 (+1 ms).
+
+    PYTHONPATH=src python -m benchmarks.bench_faults           # full
+    PYTHONPATH=src python -m benchmarks.bench_faults --smoke   # CI gate
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro import api
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.serve import (BackgroundServer, FaultInjector, FaultPlan,
+                         FaultRule, LatencyService, replay,
+                         synthetic_requests)
+from repro.serve import faults as faults_mod
+
+FAULT_RATE = 0.10         # Bernoulli wave-execute failure rate
+DELAY_RATE = 0.10         # Bernoulli wave-delay rate
+DELAY_S = 0.002
+THROUGHPUT_FLOOR = 0.7    # chaos rps >= floor x clean rps
+P99_SLACK = 3.0           # chaos p99 <= slack x clean p99 (+1 ms)
+N_CLIENTS = 4
+
+
+def _fit_oracle(smoke: bool) -> api.LatencyOracle:
+    if smoke:
+        ds = workloads.generate(devices=("T4", "V100"),
+                                models=("LeNet5", "AlexNet", "ResNet18"))
+        cfg = ProfetConfig(members=("linear", "forest"), n_trees=30, seed=0)
+    else:
+        ds = workloads.generate(
+            devices=("T4", "V100", "K80", "M60"),
+            models=("LeNet5", "AlexNet", "ResNet18", "VGG11", "ResNet50",
+                    "MobileNetV2"))
+        cfg = ProfetConfig(dnn_epochs=40, n_trees=60, seed=0)
+    return api.LatencyOracle.fit(ds, config=cfg)
+
+
+def _replay_once(oracle, reqs, faults=None) -> dict:
+    svc = LatencyService(oracle, max_wave=16, faults=faults)
+    bg = BackgroundServer(svc).start()
+    try:
+        rep = replay(bg.host, bg.port, reqs, clients=N_CLIENTS)
+    finally:
+        bg.stop()
+    rep["stats"] = svc.stats.summary()
+    return rep
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    n = 160 if smoke else 400
+    reqs = synthetic_requests(oracle, n=n, seed=13)
+
+    clean = _replay_once(oracle, reqs)
+    injector = FaultInjector(FaultPlan(rules=(
+        FaultRule(site=faults_mod.SITE_EXECUTE, rate=FAULT_RATE),
+        FaultRule(site=faults_mod.SITE_EXECUTE, kind=faults_mod.DELAY,
+                  rate=DELAY_RATE, delay_s=DELAY_S)), seed=13))
+    chaos = _replay_once(oracle, reqs, faults=injector)
+
+    ratio = chaos["requests_per_s"] / max(clean["requests_per_s"], 1e-9)
+    p99_ok = chaos["client_p99_ms"] <= P99_SLACK * clean["client_p99_ms"] + 1.0
+    clean_lossless = clean["ok"] == clean["n"] and not clean["errors"]
+    # chaos loses nothing: every request is answered or typed-failed
+    chaos_lossless = (chaos["ok"] + len(chaos["errors"]) == chaos["n"]
+                      and all(etype for _, etype in chaos["errors"]))
+    injected = [f for f in injector.fired if f[1] == faults_mod.ERROR]
+    out = {"smoke": smoke, "n": n, "clients": N_CLIENTS,
+           "fault_rate": FAULT_RATE, "delay_rate": DELAY_RATE,
+           "injected_errors": len(injected),
+           "injected_delays": len(injector.fired) - len(injected),
+           "clean_rps": clean["requests_per_s"],
+           "chaos_rps": chaos["requests_per_s"],
+           "throughput_ratio": ratio,
+           "throughput_floor": THROUGHPUT_FLOOR,
+           "clean_p99_ms": clean["client_p99_ms"],
+           "chaos_p99_ms": chaos["client_p99_ms"], "p99_ok": p99_ok,
+           "clean_ok": clean["ok"], "chaos_ok": chaos["ok"],
+           "chaos_typed_errors": len(chaos["errors"]),
+           "error_types": sorted({t for _, t in chaos["errors"]}),
+           "clean_lossless": clean_lossless,
+           "chaos_lossless": chaos_lossless,
+           "chaos_stats": chaos["stats"]}
+    from benchmarks import common
+    common.save("faults", out)
+    return out
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
+    print(f"faults: {r['n']} requests x{r['clients']} clients  "
+          f"{r['injected_errors']} injected wave faults "
+          f"(+{r['injected_delays']} delays)")
+    print(f"  throughput: clean {r['clean_rps']:.0f} rps -> chaos "
+          f"{r['chaos_rps']:.0f} rps  (ratio {r['throughput_ratio']:.2f}, "
+          f"floor {r['throughput_floor']:.1f})")
+    print(f"  p99: clean {r['clean_p99_ms']:.2f} ms -> chaos "
+          f"{r['chaos_p99_ms']:.2f} ms  (slack {P99_SLACK:.1f}x)")
+    print(f"  accounting: {r['chaos_ok']} answered + "
+          f"{r['chaos_typed_errors']} typed errors "
+          f"{r['error_types']} == {r['n']}  "
+          f"lossless={r['chaos_lossless']}")
+    ok = (r["clean_lossless"] and r["chaos_lossless"]
+          and r["throughput_ratio"] >= r["throughput_floor"]
+          and r["p99_ok"])
+    from benchmarks import common
+    common.save_bench("faults", speedup=r["throughput_ratio"],
+                      floor=r["throughput_floor"], wall_s=wall, passed=ok,
+                      smoke=smoke,
+                      extra={"chaos_lossless": r["chaos_lossless"],
+                             "injected_errors": r["injected_errors"],
+                             "chaos_typed_errors": r["chaos_typed_errors"],
+                             "chaos_p99_ms": r["chaos_p99_ms"]})
+    if not ok:
+        print("FAIL: the serving plane did not hold its resilience floors "
+              "under injected chaos (see record)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

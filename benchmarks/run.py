@@ -26,6 +26,8 @@ BENCHES = [
      "stacked ModelBank wave vs per-group dispatch"),
     ("calibrate", "benchmarks.bench_calibrate",
      "live calibration drift->refit->canary->promote recovery"),
+    ("faults", "benchmarks.bench_faults",
+     "fault-injected replay resilience floors (zero lost requests)"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

@@ -5,7 +5,7 @@
 #   lint         byte-compile every tree we ship (cheap syntax/import-shape
 #                sanity; no third-party linter is vendored)
 #   test         the full pytest suite
-#   bench-smoke  the six floor-gated smoke benchmarks — predict_grid (5x
+#   bench-smoke  the seven floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
 #                predict_many (5x floor + element-wise equality), the
@@ -15,7 +15,9 @@
 #                float64-member equality + fused_calls==1 accounting), and
 #                live calibration (drift-injected replay must detect,
 #                refit, canary and promote: 3x MAPE recovery floor, one
-#                promotion, zero rollbacks, zero added hot-path p99) —
+#                promotion, zero rollbacks, zero added hot-path p99), and
+#                fault-injected replay (10% wave-fault chaos: zero lost
+#                requests, 0.7x throughput floor, bounded p99) —
 #                each writing its results/bench/BENCH_*.json trajectory
 #                record (scripts/bench_report.py renders them, with deltas
 #                vs a previous artifact when one is present; ci.yml runs
@@ -42,6 +44,7 @@ stage_bench_smoke() {
     python -m benchmarks.bench_transport --smoke
     python -m benchmarks.bench_bank --smoke
     python -m benchmarks.bench_calibrate --smoke
+    python -m benchmarks.bench_faults --smoke
     # trajectory table: printed by a dedicated always() step in ci.yml;
     # run `python scripts/bench_report.py` locally for the same view
 }

@@ -30,7 +30,9 @@ from repro.api.planner import (choose_anchor, plan_request,
                                request_fingerprint)
 from repro.api.types import (ANCHOR_ANY, KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
                              MODE_CROSS, MODE_MEASURED, MODE_TWO_PHASE,
-                             ApiError, BatchPredictResult, ExecutionError,
+                             ApiError, BatchPredictResult,
+                             CircuitOpenError, DeadlineExceededError,
+                             ExecutionError,
                              GridRequest, GridResult, InvalidWorkloadError,
                              MalformedRequestError, OverloadedError,
                              PredictPlan, PredictRequest, PredictResult,
@@ -39,7 +41,7 @@ from repro.api.types import (ANCHOR_ANY, KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
 
 __all__ = [
     "ANCHOR_ANY", "ApiError", "ArtifactError", "BankUnsupportedError",
-    "BatchPredictResult",
+    "BatchPredictResult", "CircuitOpenError", "DeadlineExceededError",
     "ExecutionError", "FingerprintMismatchError", "GridRequest",
     "GridResult", "InvalidWorkloadError", "KNOB_BATCH", "KNOB_PIXEL",
     "LatencyOracle", "MODE_AUTO", "MODE_CROSS", "MODE_MEASURED",

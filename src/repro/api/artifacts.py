@@ -21,9 +21,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
 import pickle
-from typing import Optional, Union
+import threading
+import time
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.predictor import ProfetConfig
 from repro.core.regressors import LegacyForestError, RandomForestRegressor
@@ -67,7 +70,9 @@ def calibration_fingerprint(config: ProfetConfig, pairs, n_obs: int) -> str:
 
 
 def save(oracle: LatencyOracle, path: Union[str, pathlib.Path]) -> dict:
-    """Write the oracle under a versioned envelope; returns the manifest."""
+    """Write the oracle under a versioned envelope; returns the manifest.
+    The write is atomic (tmp + rename): a crash mid-write leaves either
+    the previous artifact or none, never a truncated pickle."""
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     manifest = {
@@ -80,9 +85,11 @@ def save(oracle: LatencyOracle, path: Union[str, pathlib.Path]) -> dict:
         "pairs": [list(p) for p in oracle.pairs()],
         "forest_format": "packed-arrays",
     }
-    with open(path, "wb") as f:
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
         pickle.dump({**manifest,
                      "payload": (oracle.profet, oracle.dataset)}, f)
+    os.replace(tmp, path)
     return manifest
 
 
@@ -132,6 +139,121 @@ def load(path: Union[str, pathlib.Path],
                 f"{path}: pair {pair} carries a non-packed forest member; "
                 "only packed-array forests load — refit and re-save")
     return LatencyOracle(profet, dataset)
+
+
+# ----------------------------------------------------------------------
+# crash-safe calibration persistence
+# ----------------------------------------------------------------------
+
+def _epoch_filename(epoch: str) -> str:
+    """A filesystem-safe artifact name for an epoch label (labels carry
+    ``+`` suffixes and may be operator-supplied)."""
+    safe = "".join(c if c.isalnum() or c in "._-" else "_" for c in epoch)
+    digest = hashlib.sha256(epoch.encode()).hexdigest()[:8]
+    return f"cal_{safe[:48]}_{digest}.pkl"
+
+
+class CalibrationStore:
+    """Crash-safe persistence of live-calibration promotions (the ROADMAP
+    follow-up: a restart must not forget a promoted calibration).
+
+    Layout under ``root``: one versioned oracle artifact per promoted
+    candidate (written via :func:`save`, so schema/fingerprint validation
+    applies on recovery) plus an ``index.json`` journal of entries
+    ``{epoch, file, status, ts}`` in promotion order. Both writes are
+    atomic (tmp + rename) and ordered artifact-then-index, so a crash at
+    any point leaves a readable store: at worst an orphaned artifact the
+    index never references.
+
+    ``record_promotion`` journals a promoted candidate under its served
+    epoch (``{fp}+cal{hash}`` + any swap uniquification);
+    ``record_rollback`` demotes it so recovery skips it; ``recover``
+    returns the newest promoted-and-loadable oracle with its epoch —
+    entries that fail validation (e.g. a different config after a deploy)
+    are skipped, not fatal."""
+
+    INDEX = "index.json"
+    PROMOTED = "promoted"
+    ROLLED_BACK = "rolled_back"
+
+    def __init__(self, root: Union[str, pathlib.Path]):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _index_path(self) -> pathlib.Path:
+        return self.root / self.INDEX
+
+    def entries(self) -> List[Dict]:
+        """The journal, oldest first; [] when absent or unreadable (a
+        half-written store must not take recovery down)."""
+        try:
+            with open(self._index_path(), "r") as f:
+                idx = json.load(f)
+            entries = idx.get("entries", [])
+            return entries if isinstance(entries, list) else []
+        except (OSError, ValueError):
+            return []
+
+    def _write_entries(self, entries: List[Dict]) -> None:
+        tmp = self._index_path().with_suffix(".json.tmp")
+        with open(tmp, "w") as f:
+            json.dump({"magic": f"{MAGIC}-calibration-index",
+                       "entries": entries}, f, indent=1)
+        os.replace(tmp, self._index_path())
+
+    def record_promotion(self, oracle: LatencyOracle,
+                         epoch: str) -> pathlib.Path:
+        """Persist a just-promoted candidate under its serving epoch."""
+        fname = _epoch_filename(epoch)
+        path = self.root / fname
+        save(oracle, path)                     # atomic; then the journal
+        with self._lock:
+            entries = self.entries()
+            entries.append({"epoch": epoch, "file": fname,
+                            "status": self.PROMOTED,
+                            "fingerprint": config_fingerprint(oracle.config),
+                            "ts": time.time()})
+            self._write_entries(entries)
+        return path
+
+    def record_rollback(self, epoch: str) -> bool:
+        """Demote every journal entry for ``epoch`` (its canary regressed
+        post-promotion); recovery will skip it. Returns True when an
+        entry was demoted."""
+        with self._lock:
+            entries = self.entries()
+            hit = False
+            for e in entries:
+                if e.get("epoch") == epoch \
+                        and e.get("status") == self.PROMOTED:
+                    e["status"] = self.ROLLED_BACK
+                    hit = True
+            if hit:
+                self._write_entries(entries)
+            return hit
+
+    def latest(self) -> Optional[Dict]:
+        """The newest still-promoted journal entry, or None."""
+        for e in reversed(self.entries()):
+            if e.get("status") == self.PROMOTED:
+                return e
+        return None
+
+    def recover(self, expect_config: Optional[ProfetConfig] = None
+                ) -> Optional[Tuple[LatencyOracle, str]]:
+        """Load the newest promoted candidate that still validates;
+        ``(oracle, epoch)``, or None when nothing usable is stored."""
+        for e in reversed(self.entries()):
+            if e.get("status") != self.PROMOTED:
+                continue
+            try:
+                oracle = load(self.root / str(e.get("file")),
+                              expect_config=expect_config)
+            except ArtifactError:
+                continue
+            return oracle, str(e.get("epoch"))
+        return None
 
 
 def fit_or_load(path: Union[str, pathlib.Path], config: ProfetConfig,

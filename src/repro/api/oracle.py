@@ -99,6 +99,7 @@ class LatencyOracle:
         self.dataset = dataset
         self._bank = None
         self._bank_built = False
+        self._bank_error = None
 
     # ------------------------------------------------------------------
     # construction
@@ -180,15 +181,28 @@ class LatencyOracle:
         :meth:`warmup`) and owned by the oracle, so a serving layer's
         ``oracle_refreshed`` swap replaces model and bank atomically.
         ``None`` when the fitted members cannot be stacked (e.g. frozen
-        reference models) — execution then falls back per group."""
+        reference models) — execution then falls back per group. A bank
+        *build* that dies unexpectedly also resolves to ``None`` (the
+        slower per-group path keeps answering) with the failure recorded
+        in :attr:`bank_error` so a serving layer can flag itself
+        degraded instead of going down."""
         if not self._bank_built:
             from repro.api.bank import BankUnsupportedError, ModelBank
             try:
                 self._bank = ModelBank.build(self.profet)
             except BankUnsupportedError:
                 self._bank = None
+            except Exception as e:
+                self._bank = None
+                self._bank_error = f"{type(e).__name__}: {e}"
             self._bank_built = True
         return self._bank
+
+    @property
+    def bank_error(self) -> Optional[str]:
+        """Why the last bank build *failed* (not merely "unbankable"), or
+        ``None`` when the bank is healthy or legitimately absent."""
+        return self._bank_error
 
     def warmup(self, max_rows: int = 64) -> float:
         """Epoch-aware warm-up: build the bank and pre-compile the MLP
@@ -214,17 +228,20 @@ class LatencyOracle:
                                         set(self.profet.cross))
 
     def execute(self, plans: Sequence[PredictPlan],
-                epoch: Optional[str] = None) -> BatchPredictResult:
+                epoch: Optional[str] = None,
+                banked: bool = True) -> BatchPredictResult:
         """Stages 2+3: answer already-planned requests in ONE stacked
         dispatch through the oracle's :attr:`bank` (grouped forest launch +
         stacked MLP apply for the whole batch, ``fused_calls == 1``);
         unbankable models fall back to one fused ensemble call per
         (anchor, target) pair. Results are stamped with ``epoch`` (a
         serving layer's cache epoch); when omitted the oracle's own config
-        fingerprint is used."""
+        fingerprint is used. ``banked=False`` forces the per-group path —
+        a serving layer's degraded mode after a warm-up/bank failure."""
         return execute_plans(self.profet, plans,
                              epoch=self.fingerprint if epoch is None
-                             else epoch, bank=self.bank)
+                             else epoch,
+                             bank=self.bank if banked else None)
 
     def predict_many(self,
                      reqs: Sequence[PredictRequest]) -> BatchPredictResult:

@@ -65,6 +65,18 @@ class MalformedRequestError(ApiError, ValueError):
     error response instead of dropping the connection."""
 
 
+class DeadlineExceededError(ApiError):
+    """The request's ``deadline_ms`` budget elapsed before it was planned:
+    the wave it would have joined shed it instead of spending model time on
+    an answer the caller has already abandoned (HTTP 504)."""
+
+
+class CircuitOpenError(ApiError):
+    """The request's (anchor, target) pair is quarantined by the circuit
+    breaker after repeated wave failures — fast-fail now, retry after the
+    cooldown (a half-open probe re-tests the pair; HTTP 503)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """One CNN training configuration — the paper's (M, B, P) cell."""
@@ -105,6 +117,12 @@ class PredictRequest:
     ``anchor``; when omitted the oracle falls back to its offline dataset.
     ``mode`` routes between phase-1 cross prediction and the two-phase
     min/max interpolation (``knob`` chooses the interpolation axis).
+
+    ``deadline_ms`` is the caller's latency budget measured from
+    submission: once elapsed, the serving layer sheds the request with a
+    typed :class:`DeadlineExceededError` instead of planning/executing it.
+    It is delivery metadata, not part of the prediction identity — cache
+    keys ignore it.
     """
     anchor: str
     target: str
@@ -112,6 +130,7 @@ class PredictRequest:
     profile: Optional[Mapping[str, float]] = None
     mode: str = MODE_AUTO
     knob: str = KNOB_BATCH
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,7 +240,16 @@ class ServiceStats:
     ``ANCHOR_ANY`` requests the planner sent to a concrete anchor.
     ``warmup_ms`` is wall time spent in epoch-aware warm-up (ModelBank
     build + MLP bucket pre-compiles) before traffic was admitted — at
-    service construction and again on every ``oracle_refreshed`` swap."""
+    service construction and again on every ``oracle_refreshed`` swap.
+
+    Resilience counters: ``deadline_expired`` counts requests shed with a
+    ``DeadlineExceededError`` before planning; ``circuit_rejections``
+    counts requests fast-failed because their (anchor, target) pair was
+    quarantined; ``circuit_trips`` is cumulative open transitions;
+    ``pump_crashes``/``pump_restarts`` account the transport pump
+    supervisor; ``degraded`` (+ ``degraded_reason``) is set while the
+    service runs a fallback path (e.g. per-group execute after a
+    warm-up/bank failure) and clears when a healthy oracle is swapped in."""
     requests: int = 0
     waves: int = 0
     fused_calls: int = 0
@@ -235,6 +263,13 @@ class ServiceStats:
     overloads: int = 0
     rerouted: int = 0
     warmup_ms: float = 0.0
+    deadline_expired: int = 0
+    circuit_rejections: int = 0
+    circuit_trips: int = 0
+    pump_crashes: int = 0
+    pump_restarts: int = 0
+    degraded: bool = False
+    degraded_reason: Optional[str] = None
     latencies_ms: "deque" = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
@@ -264,6 +299,13 @@ class ServiceStats:
                 "invalidated": self.invalidated,
                 "overloads": self.overloads, "rerouted": self.rerouted,
                 "warmup_ms": self.warmup_ms,
+                "deadline_expired": self.deadline_expired,
+                "circuit_rejections": self.circuit_rejections,
+                "circuit_trips": self.circuit_trips,
+                "pump_crashes": self.pump_crashes,
+                "pump_restarts": self.pump_restarts,
+                "degraded": self.degraded,
+                "degraded_reason": self.degraded_reason,
                 "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
                 "requests_per_s": self.requests_per_s}
 

@@ -33,6 +33,7 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.api.types import ApiError, PredictRequest, Workload
+from repro.serve import faults as faults_mod
 from repro.calibrate import canary as canary_mod
 from repro.calibrate import refit as refit_mod
 from repro.calibrate.buffer import MeasurementBuffer
@@ -50,13 +51,30 @@ class Calibrator:
     ``refit_fn(oracle, buffer, pairs, min_refit_obs=...)`` is the candidate
     factory (default :func:`repro.calibrate.refit.build_candidate`); tests
     inject poisoned candidates through it.
+
+    ``store`` (or ``config.persist_dir``) enables crash-safe persistence:
+    every promoted candidate is written through the versioned artifact
+    store under its serving epoch and demoted again on rollback, so a
+    restarted ``serve_calibrated`` recovers the newest promoted
+    calibration instead of forgetting it. Store failures never block a
+    promotion — they are counted (``stats.persist_failures``) and served
+    on.
+
+    ``faults`` threads a :class:`repro.serve.faults.FaultInjector`
+    through the refit/canary sites for deterministic chaos tests; either
+    crashing must leave the incumbent serving.
     """
 
     def __init__(self, service, config: Optional[CalibrationConfig] = None,
-                 refit_fn=None):
+                 refit_fn=None, faults=None, store=None):
         self.service = service
         self.config = config or CalibrationConfig()
         self.stats = CalibrationStats()
+        self._faults = faults
+        if store is None and self.config.persist_dir:
+            from repro.api.artifacts import CalibrationStore
+            store = CalibrationStore(self.config.persist_dir)
+        self.store = store
         cfg = self.config
         self.buffer = MeasurementBuffer(
             per_pair=cfg.per_pair_capacity, max_pairs=cfg.max_pairs,
@@ -226,10 +244,22 @@ class Calibrator:
             self._launch_refit(drifted)
 
     def _launch_refit(self, drifted: List[Pair]) -> None:
-        candidate, report = self._refit_fn(
-            self.service.oracle, self.buffer, drifted,
-            min_refit_obs=self.config.min_refit_obs,
-            window=self.config.drift_confirm_obs)
+        try:
+            faults_mod.fire(self._faults, faults_mod.SITE_REFIT)
+            candidate, report = self._refit_fn(
+                self.service.oracle, self.buffer, drifted,
+                min_refit_obs=self.config.min_refit_obs,
+                window=self.config.drift_confirm_obs)
+        except Exception as e:
+            # a crashed refit (bad live data, injected fault) must not
+            # take the control loop down — the incumbent keeps serving,
+            # and the cooldown prevents a hot crash loop
+            self.stats.refit_errors += 1
+            self._cooldown_until = (self.stats.scored
+                                    + self.config.cooldown_scored)
+            self.stats.event(f"refit crashed ({e!r}); incumbent keeps "
+                             "serving, retry after cooldown")
+            return
         if candidate is None:
             self._cooldown_until = (self.stats.scored
                                     + self.config.cooldown_scored)
@@ -271,14 +301,25 @@ class Calibrator:
         if (self._shadow["waves"] < self.config.canary_waves
                 and self._shadow_steps < self.config.canary_patience_steps):
             return
-        rep = canary_mod.verdict(
-            self.service.oracle, self._candidate, self.buffer,
-            self._refit_pairs, min_obs=self.config.canary_min_obs,
-            regress_margin=self.config.regress_margin,
-            window=self.config.drift_confirm_obs,
-            shadow_waves=self._shadow["waves"],
-            shadow_requests=self._shadow["requests"],
-            shadow_errors=self._shadow["errors"])
+        try:
+            faults_mod.fire(self._faults, faults_mod.SITE_CANARY)
+            rep = canary_mod.verdict(
+                self.service.oracle, self._candidate, self.buffer,
+                self._refit_pairs, min_obs=self.config.canary_min_obs,
+                regress_margin=self.config.regress_margin,
+                window=self.config.drift_confirm_obs,
+                shadow_waves=self._shadow["waves"],
+                shadow_requests=self._shadow["requests"],
+                shadow_errors=self._shadow["errors"])
+        except Exception as e:
+            # a crashed canary can't vouch for the candidate: treat it as
+            # a failed verdict — discard, cooldown, incumbent untouched
+            self.stats.canary_errors += 1
+            self.stats.canary_fail += 1
+            self.stats.event(f"canary crashed ({e!r}); candidate "
+                             "discarded — incumbent keeps serving")
+            self._reset_candidate()
+            return
         self.stats.last_verdict = rep.summary()
         if rep.passed:
             self._promote(rep)
@@ -304,6 +345,18 @@ class Calibrator:
             return
         self.stats.canary_pass += 1
         self.stats.promotions += 1
+        if self.store is not None:
+            # persist AFTER the swap, under the epoch actually serving
+            # (the service may have uniquified the label). A store failure
+            # costs only durability, never the promotion itself.
+            try:
+                self.store.record_promotion(self._candidate, epoch)
+                self.stats.persisted += 1
+                self.stats.event(f"promotion persisted as epoch {epoch}")
+            except Exception as e:
+                self.stats.persist_failures += 1
+                self.stats.event(f"promotion persist failed ({e!r}); "
+                                 "serving unpersisted")
         self._prev = prev
         self.detector.reset(self._refit_pairs)
         for p in self._refit_pairs:
@@ -347,8 +400,17 @@ class Calibrator:
 
     def _rollback(self, bad: List[Pair]) -> None:
         prev_oracle, prev_epoch = self._prev
+        failed_epoch = self.service.epoch
         epoch = self.service.oracle_refreshed(prev_oracle, prev_epoch)
         self.stats.rollbacks += 1
+        if self.store is not None:
+            # demote the regressed promotion so recovery never resurrects
+            # it (failures here are non-fatal, like persist failures)
+            try:
+                self.store.record_rollback(failed_epoch)
+            except Exception as e:
+                self.stats.persist_failures += 1
+                self.stats.event(f"rollback demote failed ({e!r})")
         self.detector.reset(self._refit_pairs)
         for p in self._refit_pairs:
             self._drift_seen.pop(p, None)

@@ -84,6 +84,11 @@ class CalibrationConfig:
     regress_margin: float = 1.0      # pts a non-refit pair may regress
     # post-promote confirmation
     confirm_obs: int = 16            # scored obs before confirm/rollback
+    # crash-safe persistence: when set, every promoted candidate is
+    # written through the versioned artifact store (repro.api.artifacts.
+    # CalibrationStore) under this directory and demoted on rollback, so
+    # a restarted server recovers the latest promoted calibration
+    persist_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -111,6 +116,11 @@ class CalibrationStats:
     shadow_waves: int = 0            # mirrored live waves replayed on a
     shadow_requests: int = 0         # candidate (off the serving path)
     shadow_errors: int = 0
+    refit_errors: int = 0            # refit factory crashes survived
+    canary_errors: int = 0           # canary verdict crashes survived
+    persisted: int = 0               # promotions written to the store
+    persist_failures: int = 0        # store writes that failed (promotion
+                                     # stands; only persistence is lost)
     state: str = STATE_IDLE
     last_verdict: Optional[Dict[str, object]] = None
     events: List[str] = dataclasses.field(default_factory=list)
@@ -135,5 +145,9 @@ class CalibrationStats:
                 "shadow_waves": self.shadow_waves,
                 "shadow_requests": self.shadow_requests,
                 "shadow_errors": self.shadow_errors,
+                "refit_errors": self.refit_errors,
+                "canary_errors": self.canary_errors,
+                "persisted": self.persisted,
+                "persist_failures": self.persist_failures,
                 "last_verdict": self.last_verdict,
                 "last_event": self.events[-1] if self.events else None}

@@ -57,8 +57,13 @@ def main(argv=None):
                     help="oracle artifact path (--full only)")
     ap.add_argument("--epochs", type=int, default=150)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--persist-dir", default="results/calibration",
+                    help="crash-safe calibration store: promoted "
+                         "candidates are persisted here and the newest "
+                         "one is recovered on restart ('' disables)")
     args = ap.parse_args(argv)
 
+    from repro.api.artifacts import CalibrationStore
     from repro.calibrate import CalibrationConfig, Calibrator
     from repro.launch.serve_http import _fit_oracle
     from repro.serve import (BackgroundServer, Client, LatencyService,
@@ -66,10 +71,22 @@ def main(argv=None):
 
     oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
                          args.epochs, args.seed)
-    service = LatencyService(oracle, max_wave=args.wave)
+    store = CalibrationStore(args.persist_dir) if args.persist_dir else None
+    # crash recovery: a previous run's promoted calibration outlives the
+    # process — serve it (under its persisted epoch) instead of the
+    # freshly fitted base oracle
+    serving, epoch = oracle, None
+    if store is not None:
+        recovered = store.recover(expect_config=oracle.config)
+        if recovered is not None:
+            serving, epoch = recovered
+            print(f"recovered promoted calibration epoch {epoch} from "
+                  f"{args.persist_dir}")
+    service = LatencyService(serving, max_wave=args.wave, epoch=epoch)
     calibrator = Calibrator(service, CalibrationConfig(
         trigger_mape=args.trigger_mape, min_obs=8, min_refit_obs=6,
-        canary_min_obs=4, confirm_obs=16, cooldown_scored=16))
+        canary_min_obs=4, confirm_obs=16, cooldown_scored=16),
+        store=store)
     calibrator.start(interval=args.interval)
     bg = BackgroundServer(service, host=args.host, port=args.port,
                           calibrator=calibrator).start()

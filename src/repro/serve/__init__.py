@@ -7,19 +7,30 @@
   - ``transport``: the asyncio HTTP front end over the service
     (``TransportServer`` / ``BackgroundServer``), its blocking ``Client``,
     and the ``replay`` load generator;
+  - ``faults``: the deterministic fault-injection harness
+    (``FaultPlan`` / ``FaultRule`` / ``FaultInjector``) chaos tests
+    thread through the service, transport, and calibrate layers;
+  - ``resilience``: client ``RetryPolicy`` (exponential backoff +
+    jitter, idempotency-aware) and the per-(anchor, target)
+    ``CircuitBreaker`` the wave service quarantines failing pairs with;
   - ``Engine``: the token-serving engine for the model zoo
     (``repro.serve.engine``; imported lazily — it pulls in jax + the model
     stack).
 """
 from repro.api.types import ServiceStats
+from repro.serve.faults import (FaultInjector, FaultPlan, FaultRule,
+                                InjectedFault)
 from repro.serve.latency_service import (LatencyService, ServiceRequest,
                                          synthetic_requests)
+from repro.serve.resilience import CircuitBreaker, RetryPolicy
 from repro.serve.transport import (BackgroundServer, Client, TransportError,
                                    TransportServer, replay)
 
-__all__ = ["BackgroundServer", "Client", "Engine", "LatencyService",
-           "ServiceRequest", "ServiceStats", "TransportError",
-           "TransportServer", "replay", "synthetic_requests"]
+__all__ = ["BackgroundServer", "CircuitBreaker", "Client", "Engine",
+           "FaultInjector", "FaultPlan", "FaultRule", "InjectedFault",
+           "LatencyService", "RetryPolicy", "ServiceRequest",
+           "ServiceStats", "TransportError", "TransportServer", "replay",
+           "synthetic_requests"]
 
 
 def __getattr__(name):

@@ -50,11 +50,19 @@ import numpy as np
 
 from repro.api.oracle import LatencyOracle
 from repro.api.planner import minmax_cases, request_fingerprint
-from repro.api.types import (ANCHOR_ANY, ApiError, ExecutionError,
+from repro.api.types import (ANCHOR_ANY, ApiError, CircuitOpenError,
+                             DeadlineExceededError, ExecutionError,
                              KNOB_BATCH, KNOB_PIXEL, PredictRequest,
                              PredictResult, ServiceStats, Workload)
+from repro.serve import faults as faults_mod
+from repro.serve.resilience import CircuitBreaker
 
 _MISS = object()
+
+# How many past epochs the A/B/A uniquification remembers. Bounded so the
+# calibrate promote/rollback loop can't grow the set forever; 1024 is far
+# beyond any plausible number of in-flight-wave generations.
+_EPOCH_MEMORY = 1024
 
 
 @dataclasses.dataclass
@@ -81,7 +89,8 @@ class LatencyService:
 
     def __init__(self, oracle: LatencyOracle, *, max_wave: int = 64,
                  cache_size: int = 4096, epoch: Optional[str] = None,
-                 warmup: bool = True, warmup_rows: Optional[int] = None):
+                 warmup: bool = True, warmup_rows: Optional[int] = None,
+                 faults=None, breaker: Optional[CircuitBreaker] = None):
         self.oracle = oracle
         self.max_wave = int(max_wave)
         self.cache_size = int(cache_size)
@@ -92,8 +101,18 @@ class LatencyService:
         self._uid = 0
         self._lock = threading.Lock()
         self._epoch = epoch if epoch is not None else oracle.fingerprint
-        self._used_epochs = {self._epoch}
+        # insertion-ordered bounded memory of every epoch label served
+        # (values unused) — see _remember_epoch
+        self._used_epochs: "OrderedDict[str, None]" = OrderedDict()
+        self._used_epochs[self._epoch] = None
         self.stats.epoch = self._epoch
+        # deterministic fault injection (chaos tests); None in production
+        self._faults = faults
+        # per-(anchor, target) quarantine after repeated wave failures
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # False after a warm-up/bank failure: execute takes the per-group
+        # fallback path until a healthy oracle is swapped in
+        self._banked = True
         # epoch-aware warm-up: build the oracle's ModelBank and pre-compile
         # the MLP bucket shapes up to one full wave BEFORE any traffic is
         # admitted, so the first wave pays zero compiles. Re-run on every
@@ -110,11 +129,35 @@ class LatencyService:
         # exceptions are swallowed — observers must not break serving.
         self._observer = None
         if self._warmup_enabled:
-            self._warm(oracle)
+            # a warm-up that dies at construction must not take the
+            # service down with it: serve degraded on the per-group
+            # (unbanked) path instead. oracle_refreshed swaps keep the
+            # strict behavior (raise, incumbent intact) — a failed
+            # *upgrade* is rejected, a failed *boot* limps along.
+            try:
+                self._warm(oracle)
+            except Exception as e:
+                self._mark_degraded(
+                    f"warm-up failed at construction "
+                    f"({type(e).__name__}: {e}); serving per-group")
 
     def _warm(self, oracle: LatencyOracle) -> None:
+        faults_mod.fire(self._faults, faults_mod.SITE_WARMUP)
         self.stats.warmup_ms += 1e3 * oracle.warmup(
             max_rows=self._warmup_rows)
+
+    def _mark_degraded(self, reason: str) -> None:
+        with self._lock:
+            self._banked = False
+            self.stats.degraded = True
+            self.stats.degraded_reason = reason
+
+    def _remember_epoch(self, epoch: str) -> None:
+        """Record ``epoch`` in the bounded uniquification memory (caller
+        holds the lock)."""
+        self._used_epochs[epoch] = None
+        while len(self._used_epochs) > _EPOCH_MEMORY:
+            self._used_epochs.popitem(last=False)
 
     @property
     def epoch(self) -> str:
@@ -193,7 +236,7 @@ class LatencyService:
             while epoch in self._used_epochs:
                 n += 1
                 epoch = f"{epoch}+{n}"
-            self._used_epochs.add(epoch)
+            self._remember_epoch(epoch)
             self._epoch = epoch
             stale = [k for k in self._cache if k[0] != epoch]
             for k in stale:
@@ -202,7 +245,16 @@ class LatencyService:
             self.stats.epoch_swaps += 1
             self.stats.epoch_cache_hits = 0
             self.stats.epoch = epoch
-            return epoch
+            if oracle is not None:
+                # a freshly warmed oracle clears degraded mode and resets
+                # the circuit breaker: the new model's reputation starts
+                # clean, and the warm-up above proved the banked path
+                self._banked = True
+                self.stats.degraded = False
+                self.stats.degraded_reason = None
+        if oracle is not None:
+            self.breaker.reset()
+        return epoch
 
     # ------------------------------------------------------------------
     def _complete(self, sr: ServiceRequest) -> None:
@@ -210,12 +262,40 @@ class LatencyService:
         sr.t_finish = time.perf_counter()
         with self._lock:
             self.finished.append(sr)
-        self.stats.latencies_ms.append(sr.latency_ms)
+            self.stats.latencies_ms.append(sr.latency_ms)
+
+    def _fail(self, sr: ServiceRequest, err: ApiError) -> None:
+        with self._lock:
+            self.stats.errors += 1
+        sr.error = err
+        self._complete(sr)
+
+    @staticmethod
+    def _deadline_error(sr: ServiceRequest,
+                        now: float) -> Optional[DeadlineExceededError]:
+        budget = sr.request.deadline_ms
+        if budget is None:
+            return None
+        spent_ms = 1e3 * (now - sr.t_submit)
+        if spent_ms <= budget:
+            return None
+        return DeadlineExceededError(
+            f"deadline of {budget:.1f} ms exceeded before planning "
+            f"({spent_ms:.1f} ms since submission)")
 
     def _run_wave(self, wave: Sequence[ServiceRequest],
                   oracle: LatencyOracle, epoch: str) -> None:
         plans, pending = [], []
+        now = time.perf_counter()
         for sr in wave:
+            # shed already-expired requests before spending cache, planner,
+            # or model time on them: the caller has moved on
+            expired = self._deadline_error(sr, now)
+            if expired is not None:
+                with self._lock:
+                    self.stats.deadline_expired += 1
+                self._fail(sr, expired)
+                continue
             key = (epoch,) + request_fingerprint(sr.request)
             with self._lock:
                 hit = self._cache.get(key, _MISS)
@@ -228,16 +308,34 @@ class LatencyService:
                 self._complete(sr)
                 continue
             try:
-                plans.append(oracle.plan(sr.request))
+                faults_mod.fire(self._faults, faults_mod.SITE_PLAN)
+                plan = oracle.plan(sr.request)
             except ApiError as e:
-                self.stats.errors += 1
-                sr.error = e
-                self._complete(sr)
+                self._fail(sr, e)
                 continue
+            except Exception as e:
+                # a planner bug (or injected fault) marks only this
+                # request failed — never the pump thread
+                self._fail(sr, ExecutionError(f"planning failed: {e!r}"))
+                continue
+            # the plan carries the concrete anchor (ANCHOR_ANY resolved),
+            # so the breaker quarantines real pairs, not the sentinel
+            if not self.breaker.allow((plan.anchor, plan.target)):
+                with self._lock:
+                    self.stats.circuit_rejections += 1
+                self._fail(sr, CircuitOpenError(
+                    f"pair ({plan.anchor!r} -> {plan.target!r}) is "
+                    f"quarantined after repeated wave failures; retry "
+                    f"after cooldown"))
+                continue
+            plans.append(plan)
             pending.append((sr, key))
         if plans:
+            pairs = {(p.anchor, p.target) for p in plans}
             try:
-                batch = oracle.execute(plans, epoch=epoch)
+                faults_mod.fire(self._faults, faults_mod.SITE_EXECUTE)
+                batch = oracle.execute(plans, epoch=epoch,
+                                       banked=self._banked)
             except Exception as e:
                 # an executor-level failure (bug, resource exhaustion) must
                 # not escape run(): it would kill a transport's pump task
@@ -245,20 +343,31 @@ class LatencyService:
                 # individually instead; the service stays up.
                 err = e if isinstance(e, ApiError) else ExecutionError(
                     f"wave execution failed: {e!r}")
+                for pair in pairs:
+                    self.breaker.record_failure(pair)
                 for sr, _ in pending:
-                    self.stats.errors += 1
-                    sr.error = err
-                    self._complete(sr)
-                self.stats.requests += len(wave)
-                self.stats.waves += 1
+                    self._fail(sr, err)
+                with self._lock:
+                    self.stats.circuit_trips = self.breaker.trips()
+                    self.stats.requests += len(wave)
+                    self.stats.waves += 1
                 self._notify_observer(wave)
                 return
-            self.stats.fused_calls += batch.fused_calls
+            for pair in pairs:
+                self.breaker.record_success(pair)
+            if self._banked and oracle.bank_error is not None:
+                # the bank build died under us mid-flight; execute already
+                # fell back per group — flag it so /statsz tells the truth
+                self._mark_degraded(
+                    f"bank build failed ({oracle.bank_error}); "
+                    f"serving per-group")
+            with self._lock:
+                self.stats.fused_calls += batch.fused_calls
             for (sr, key), res in zip(pending, batch.results):
                 sr.result = res
-                if sr.request.anchor == ANCHOR_ANY:
-                    self.stats.rerouted += 1
                 with self._lock:
+                    if sr.request.anchor == ANCHOR_ANY:
+                        self.stats.rerouted += 1
                     # a swap may have landed mid-execute: entries keyed to
                     # a stale epoch can never be hit again, so don't store
                     if key[0] == self._epoch:
@@ -266,8 +375,9 @@ class LatencyService:
                         while len(self._cache) > self.cache_size:
                             self._cache.popitem(last=False)
                 self._complete(sr)
-        self.stats.requests += len(wave)
-        self.stats.waves += 1
+        with self._lock:
+            self.stats.requests += len(wave)
+            self.stats.waves += 1
         self._notify_observer(wave)
 
     def _next_wave(self) -> Tuple[List[ServiceRequest], LatencyOracle, str]:
@@ -287,7 +397,8 @@ class LatencyService:
         if not wave:
             return 0
         self._run_wave(wave, oracle, epoch)
-        self.stats.wall_s += time.perf_counter() - t0
+        with self._lock:
+            self.stats.wall_s += time.perf_counter() - t0
         return len(wave)
 
     def run(self) -> List[ServiceRequest]:

@@ -61,18 +61,22 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.api import oracle as oracle_mod
-from repro.api.types import (ApiError, GridRequest, KNOB_BATCH, KNOB_PIXEL,
-                             MODE_AUTO, MalformedRequestError,
-                             OverloadedError, PredictRequest, PredictResult,
+from repro.api.types import (ApiError, ExecutionError, GridRequest,
+                             KNOB_BATCH, KNOB_PIXEL, MODE_AUTO,
+                             MalformedRequestError, OverloadedError,
+                             PredictRequest, PredictResult,
                              UnsupportedRequestError, Workload)
+from repro.serve import faults as faults_mod
 from repro.serve.latency_service import LatencyService
+from repro.serve.resilience import LEGACY_RETRY, RetryPolicy
 
 PROTOCOL = "profet/1"
 
 # HTTP status per error class; unlisted ApiErrors fall back to 400.
 _STATUS = {"OverloadedError": 503, "MalformedRequestError": 400,
            "UnknownDeviceError": 404, "UnsupportedRequestError": 422,
-           "InvalidWorkloadError": 400, "ExecutionError": 500}
+           "InvalidWorkloadError": 400, "ExecutionError": 500,
+           "DeadlineExceededError": 504, "CircuitOpenError": 503}
 
 
 # ----------------------------------------------------------------------
@@ -96,11 +100,15 @@ def predict_request_from_dict(d: Any) -> PredictRequest:
         profile = d.get("profile")
         if profile is not None:
             profile = {str(k): float(v) for k, v in profile.items()}
+        deadline = d.get("deadline_ms")
+        if deadline is not None:
+            deadline = float(deadline)
         return PredictRequest(anchor=str(d["anchor"]),
                               target=str(d["target"]), workload=workload,
                               profile=profile,
                               mode=str(d.get("mode", MODE_AUTO)),
-                              knob=str(d.get("knob", KNOB_BATCH)))
+                              knob=str(d.get("knob", KNOB_BATCH)),
+                              deadline_ms=deadline)
     except ApiError:
         raise                      # typed already (e.g. InvalidWorkloadError)
     except (KeyError, TypeError, ValueError, AttributeError) as e:
@@ -141,7 +149,8 @@ class TransportServer:
 
     def __init__(self, service: LatencyService, *, host: str = "127.0.0.1",
                  port: int = 0, max_queue: int = 1024,
-                 batch_window_s: float = 0.005, calibrator=None):
+                 batch_window_s: float = 0.005, calibrator=None,
+                 faults=None):
         self.service = service
         # optional repro.calibrate.Calibrator: receives /measure batches
         # and advise-path ground truth; exports its stats under /statsz
@@ -156,6 +165,11 @@ class TransportServer:
         self._pump_task: Optional[asyncio.Task] = None
         self._wake: Optional[asyncio.Event] = None
         self._paused = False
+        # deterministic fault injection (chaos tests); None in production
+        self._faults = faults
+        # sticky until the restarted pump completes a clean drain hop —
+        # /healthz answers "degraded" meanwhile instead of lying "ok"
+        self._pump_degraded = False
 
     # ------------------------------------------------------------------
     async def start(self) -> "TransportServer":
@@ -164,7 +178,7 @@ class TransportServer:
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
-        self._pump_task = asyncio.create_task(self._pump())
+        self._pump_task = asyncio.create_task(self._pump_supervisor())
         return self
 
     async def stop(self) -> None:
@@ -210,11 +224,50 @@ class TransportServer:
         self._wake.set()
         return futs
 
+    async def _pump_supervisor(self) -> None:
+        """Keep the wave pump alive: a crashed pump task (a bug below
+        run_once's own isolation, or an injected ``transport.pump`` fault)
+        is accounted (``stats.pump_crashes``/``pump_restarts``), its
+        finished requests are resolved, requests the crash *lost* (neither
+        finished nor still queued) are failed as typed 500s, and the pump
+        restarts with exponential backoff. ``/healthz`` answers
+        ``degraded`` from the crash until a restarted pump completes a
+        clean drain hop."""
+        backoff = 0.01
+        while True:
+            try:
+                await self._pump()
+                return                      # pump exited cleanly (never)
+            except asyncio.CancelledError:
+                raise
+            except Exception as e:
+                stats = self.service.stats
+                stats.pump_crashes += 1
+                self._pump_degraded = True
+                self._resolve_finished()
+                queued = self.service.queued_uids()
+                for uid in [u for u in self._futs if u not in queued]:
+                    fut = self._futs.pop(uid)
+                    if not fut.done():
+                        fut.set_exception(ExecutionError(
+                            f"wave pump crashed mid-flight: {e!r}"))
+                await asyncio.sleep(backoff)
+                backoff = min(backoff * 2.0, 1.0)
+                stats.pump_restarts += 1
+                self._wake.set()            # reprocess whatever is queued
+
+    def _resolve_finished(self) -> None:
+        for sr in self.service.take_finished():
+            fut = self._futs.pop(sr.uid, None)
+            if fut is not None and not fut.done():
+                fut.set_result(sr)
+
     async def _pump(self) -> None:
         while True:
             await self._wake.wait()
             self._wake.clear()
             while self.service.pending() and not self._paused:
+                faults_mod.fire(self._faults, faults_mod.SITE_PUMP)
                 # admission window (the standard microbatching trade): give
                 # concurrently-arriving requests a moment to join the wave,
                 # then run the blocking fused drain on a worker thread —
@@ -236,20 +289,17 @@ class TransportServer:
                 except asyncio.CancelledError:
                     raise
                 except Exception as e:
-                    for sr in self.service.take_finished():
-                        fut = self._futs.pop(sr.uid, None)
-                        if fut is not None and not fut.done():
-                            fut.set_result(sr)
+                    self._resolve_finished()
                     queued = self.service.queued_uids()
                     for uid in [u for u in self._futs if u not in queued]:
                         fut = self._futs.pop(uid)
                         if not fut.done():
                             fut.set_exception(e)
                     continue
-                for sr in self.service.take_finished():
-                    fut = self._futs.pop(sr.uid, None)
-                    if fut is not None and not fut.done():
-                        fut.set_result(sr)
+                self._resolve_finished()
+                # a clean drain hop after a crash: the pump has proven
+                # itself again, stop reporting degraded
+                self._pump_degraded = False
 
     # ------------------------------------------------------------------
     # HTTP plumbing
@@ -271,17 +321,25 @@ class TransportServer:
                 else:
                     keep = headers.get("connection", "").lower() != "close"
                     status, payload = await self._dispatch(method, path,
-                                                           body)
+                                                           headers, body)
                 data = json.dumps(payload).encode()
-                writer.write(
-                    b"HTTP/1.1 %d %s\r\n"
-                    b"Content-Type: application/json\r\n"
-                    b"Content-Length: %d\r\n"
-                    b"X-Profet-Protocol: %s\r\n"
-                    b"Connection: %s\r\n\r\n"
-                    % (status, _reason(status).encode(), len(data),
-                       PROTOCOL.encode(),
-                       b"keep-alive" if keep else b"close"))
+                head = (b"HTTP/1.1 %d %s\r\n"
+                        b"Content-Type: application/json\r\n"
+                        b"Content-Length: %d\r\n"
+                        b"X-Profet-Protocol: %s\r\n"
+                        b"Connection: %s\r\n\r\n"
+                        % (status, _reason(status).encode(), len(data),
+                           PROTOCOL.encode(),
+                           b"keep-alive" if keep else b"close"))
+                if faults_mod.should_drop(self._faults,
+                                          faults_mod.SITE_RESPONSE):
+                    # injected socket reset mid-response: the request WAS
+                    # executed, but the client sees a truncated response
+                    # and a dead connection — the retry-safety scenario
+                    writer.write(head + data[:max(1, len(data) // 2)])
+                    await writer.drain()
+                    break
+                writer.write(head)
                 writer.write(data)
                 await writer.drain()
                 if not keep:
@@ -327,18 +385,40 @@ class TransportServer:
             return "?", "?", headers, b"", False
         return method, path, headers, body, True
 
+    def _health_status(self) -> Tuple[str, List[str]]:
+        """Honest liveness: "degraded" (with reasons) while the pump is
+        recovering from a crash, the service runs a fallback path, or any
+        (anchor, target) pair is quarantined — else "ok"."""
+        reasons = []
+        if self._pump_degraded:
+            reasons.append("pump restarted after crash; awaiting a clean "
+                           "drain hop")
+        stats = self.service.stats
+        if stats.degraded:
+            reasons.append(stats.degraded_reason or "service degraded")
+        open_pairs = self.service.breaker.open_keys()
+        if open_pairs:
+            reasons.append("circuit open: " + ", ".join(
+                f"{a}->{t}" for a, t in sorted(open_pairs)))
+        return ("degraded" if reasons else "ok"), reasons
+
     async def _dispatch(self, method: str, path: str,
+                        headers: Dict[str, str],
                         body: bytes) -> Tuple[int, Dict[str, Any]]:
         try:
             if path == "/healthz":
                 if method != "GET":
                     return 405, _method_not_allowed(method)
-                return 200, {"ok": True, "status": "ok",
+                status, reasons = self._health_status()
+                return 200, {"ok": True, "status": status,
+                             "reasons": reasons,
                              "protocol": PROTOCOL,
                              "epoch": self.service.epoch,
                              "pairs": len(self.service.oracle.pairs()),
                              "pending": len(self._futs),
-                             "paused": self._paused}
+                             "paused": self._paused,
+                             "pump_crashes":
+                                 self.service.stats.pump_crashes}
             if path == "/statsz":
                 if method != "GET":
                     return 405, _method_not_allowed(method)
@@ -349,18 +429,19 @@ class TransportServer:
                 if self.calibrator is not None:
                     out["calibration"] = self.calibrator.summary()
                 return 200, out
+            deadline = _deadline_from_headers(headers)
             if path == "/predict":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
-                return await self._predict(_decode_json(body))
+                return await self._predict(_decode_json(body), deadline)
             if path == "/grid":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
-                return await self._grid(_decode_json(body))
+                return await self._grid(_decode_json(body), deadline)
             if path == "/advise":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
-                return await self._advise(_decode_json(body))
+                return await self._advise(_decode_json(body), deadline)
             if path == "/measure":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
@@ -374,8 +455,11 @@ class TransportServer:
     # ------------------------------------------------------------------
     # endpoints
     # ------------------------------------------------------------------
-    async def _predict(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
-        req = predict_request_from_dict(payload)
+    async def _predict(self, payload: Any,
+                       deadline_ms: Optional[float] = None
+                       ) -> Tuple[int, Dict[str, Any]]:
+        req = _with_deadline(predict_request_from_dict(payload),
+                             deadline_ms)
         [fut] = self._admit([req])
         sr = await fut
         if sr.error is not None:
@@ -394,11 +478,14 @@ class TransportServer:
                 f"admission queue holds ({self.max_queue}); split the "
                 "sweep")
 
-    async def _grid(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+    async def _grid(self, payload: Any,
+                    deadline_ms: Optional[float] = None
+                    ) -> Tuple[int, Dict[str, Any]]:
         greq = grid_request_from_dict(payload)
         oracle = self.service.oracle
         reqs, scatter = oracle.stage_grid(greq)   # validates anchor/pairs
         self._check_sweep_size("grid", len(reqs))
+        reqs = [_with_deadline(r, deadline_ms) for r in reqs]
         srs = [await f for f in self._admit(reqs)]
         for sr in srs:
             if sr.error is not None:
@@ -408,7 +495,9 @@ class TransportServer:
         return 200, {"ok": True, "grid": grid.to_dict(),
                      "epochs": sorted({sr.result.epoch for sr in srs})}
 
-    async def _advise(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+    async def _advise(self, payload: Any,
+                      deadline_ms: Optional[float] = None
+                      ) -> Tuple[int, Dict[str, Any]]:
         if not isinstance(payload, dict):
             raise MalformedRequestError(
                 f"advise payload must be a JSON object, "
@@ -441,6 +530,7 @@ class TransportServer:
         reqs, scatter = oracle.stage_advise(anchor, workload, profile,
                                             measured, targets)
         self._check_sweep_size("advise", len(reqs))
+        reqs = [_with_deadline(r, deadline_ms) for r in reqs]
         srs = [await f for f in self._admit(reqs)]
         for sr in srs:
             if sr.error is not None:
@@ -522,6 +612,32 @@ def measure_columnar_from_rows(rows: Sequence[Dict[str, Any]]
     return body
 
 
+def _deadline_from_headers(headers: Dict[str, str]) -> Optional[float]:
+    """Parse the ``X-Deadline-Ms`` header (budget from receipt, in ms)."""
+    raw = headers.get("x-deadline-ms")
+    if raw is None:
+        return None
+    try:
+        v = float(raw)
+    except ValueError:
+        raise MalformedRequestError(
+            f"X-Deadline-Ms must be a number of milliseconds, "
+            f"got {raw!r}") from None
+    if v <= 0:
+        raise MalformedRequestError(
+            f"X-Deadline-Ms must be positive, got {v}")
+    return v
+
+
+def _with_deadline(req: PredictRequest,
+                   deadline_ms: Optional[float]) -> PredictRequest:
+    """Apply a transport-level deadline; a deadline already in the body
+    wins (it is more specific than the header)."""
+    if deadline_ms is None or req.deadline_ms is not None:
+        return req
+    return dataclasses.replace(req, deadline_ms=deadline_ms)
+
+
 def _decode_json(body: bytes) -> Any:
     try:
         return json.loads(body.decode("utf-8"))
@@ -538,7 +654,8 @@ def _reason(status: int) -> str:
     return {200: "OK", 400: "Bad Request", 404: "Not Found",
             405: "Method Not Allowed", 422: "Unprocessable Entity",
             500: "Internal Server Error",
-            503: "Service Unavailable"}.get(status, "Unknown")
+            503: "Service Unavailable",
+            504: "Gateway Timeout"}.get(status, "Unknown")
 
 
 # ----------------------------------------------------------------------
@@ -607,12 +724,26 @@ class TransportError(RuntimeError):
 
 class Client:
     """Minimal blocking keep-alive HTTP client for the transport (stdlib
-    ``socket`` only). One instance == one connection; use one per thread."""
+    ``socket`` only). One instance == one connection; use one per thread.
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
+    ``retry`` governs recovery from connection failures and (opt-in)
+    retryable statuses like 503, with exponential backoff + seeded
+    jitter. Retry safety: a request is blind-retried after a connection
+    failure only when (a) the request never made it fully onto the wire
+    (the server cannot have executed it), or (b) the caller marked it
+    idempotent (every GET, and POSTs whose re-execution is harmless —
+    /predict, /grid, /advise). A non-idempotent body (``/measure``: each
+    delivery ingests rows into the calibration buffers) whose *response*
+    was lost after a complete send is NEVER re-sent — the failure
+    surfaces to the caller instead of silently double-ingesting."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0,
+                 retry: Optional[RetryPolicy] = None):
         self.host = host
         self.port = port
         self.timeout = timeout
+        self.retry = retry if retry is not None else LEGACY_RETRY
+        self._rng = self.retry.rng()
         self._sock: Optional[socket.socket] = None
 
     def _connect(self) -> socket.socket:
@@ -635,24 +766,45 @@ class Client:
         self.close()
 
     # -- low level ------------------------------------------------------
-    def request(self, method: str, path: str,
-                payload: Any = None) -> Tuple[int, Dict[str, Any]]:
+    def request(self, method: str, path: str, payload: Any = None,
+                idempotent: bool = True,
+                headers: Optional[Dict[str, str]] = None
+                ) -> Tuple[int, Dict[str, Any]]:
         body = b"" if payload is None else json.dumps(payload).encode()
+        extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
         head = (f"{method} {path} HTTP/1.1\r\n"
                 f"Host: {self.host}:{self.port}\r\n"
                 f"Content-Type: application/json\r\n"
                 f"Content-Length: {len(body)}\r\n"
+                f"{extra}"
                 f"Connection: keep-alive\r\n\r\n").encode()
-        for attempt in (0, 1):
-            sock = self._connect()
+        policy = self.retry
+        attempt = 1
+        while True:
+            sent = False
             try:
+                sock = self._connect()
                 sock.sendall(head + body)
-                return self._read_response(sock)
+                sent = True
+                status, out = self._read_response(sock)
             except (ConnectionError, socket.timeout, OSError):
                 self.close()
-                if attempt:
+                # once the full request is on the wire, the server may
+                # have executed it even though its response was lost —
+                # re-sending a non-idempotent body would double-execute
+                # (e.g. /measure double-ingesting observations)
+                if (sent and not idempotent) \
+                        or attempt >= policy.max_attempts:
                     raise
-        raise ConnectionError("unreachable")   # pragma: no cover
+                time.sleep(policy.backoff_s(attempt, self._rng))
+                attempt += 1
+                continue
+            if status in policy.retry_statuses \
+                    and attempt < policy.max_attempts:
+                time.sleep(policy.backoff_s(attempt, self._rng))
+                attempt += 1
+                continue
+            return status, out
 
     def _read_response(self, sock: socket.socket) -> Tuple[int, Dict]:
         buf = b""
@@ -679,18 +831,28 @@ class Client:
         return status, json.loads(rest[:n].decode("utf-8"))
 
     # -- typed endpoints ------------------------------------------------
-    def _checked(self, method: str, path: str, payload: Any = None) -> Dict:
-        status, out = self.request(method, path, payload)
+    def _checked(self, method: str, path: str, payload: Any = None,
+                 idempotent: bool = True,
+                 headers: Optional[Dict[str, str]] = None) -> Dict:
+        status, out = self.request(method, path, payload,
+                                   idempotent=idempotent, headers=headers)
         if status != 200 or not out.get("ok", False):
             raise TransportError(status, out.get("error", {}))
         return out
 
-    def predict(self, req) -> Dict[str, Any]:
+    def predict(self, req, deadline_ms: Optional[float] = None
+                ) -> Dict[str, Any]:
         """``req``: a ``PredictRequest`` or an equivalent dict. Returns the
-        result dict (latency_ms, mode, price_hr, epoch, ...)."""
+        result dict (latency_ms, mode, price_hr, epoch, ...).
+        ``deadline_ms`` rides the ``X-Deadline-Ms`` header — the server
+        sheds the request with a 504 if the budget elapses before it is
+        planned."""
         if isinstance(req, PredictRequest):
             req = request_to_dict(req)
-        return self._checked("POST", "/predict", req)["result"]
+        headers = (None if deadline_ms is None
+                   else {"X-Deadline-Ms": f"{float(deadline_ms):g}"})
+        return self._checked("POST", "/predict", req,
+                             headers=headers)["result"]
 
     def grid(self, req) -> Dict[str, Any]:
         if isinstance(req, GridRequest):
@@ -704,9 +866,14 @@ class Client:
         """Report a batch of client-measured latencies for live
         calibration. ``rows``: dicts with anchor/target/model/batch/pix/
         latency_ms (+ optional predicted_ms); sent as ONE columnar body.
-        Returns ``{"accepted": n, "dropped": d}``."""
+        Returns ``{"accepted": n, "dropped": d}``.
+
+        Non-idempotent: every delivery ingests the rows again, so a lost
+        *response* (send completed, read failed) raises instead of
+        re-sending — see :meth:`request`."""
         out = self._checked("POST", "/measure",
-                            measure_columnar_from_rows(rows))
+                            measure_columnar_from_rows(rows),
+                            idempotent=False)
         return {"accepted": out["accepted"], "dropped": out["dropped"]}
 
     def healthz(self) -> Dict[str, Any]:
@@ -720,7 +887,8 @@ def request_to_dict(req: PredictRequest) -> Dict[str, Any]:
     return {"anchor": req.anchor, "target": req.target,
             "workload": dataclasses.asdict(req.workload),
             "profile": None if req.profile is None else dict(req.profile),
-            "mode": req.mode, "knob": req.knob}
+            "mode": req.mode, "knob": req.knob,
+            "deadline_ms": req.deadline_ms}
 
 
 def replay(host: str, port: int, requests: Sequence[PredictRequest],

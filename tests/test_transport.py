@@ -444,11 +444,11 @@ def test_executor_failure_fails_wave_not_service(oracle, stream,
         real_execute = type(oracle).execute
         calls = {"n": 0}
 
-        def flaky(self, plans, epoch=None):
+        def flaky(self, plans, epoch=None, **kw):
             calls["n"] += 1
             if calls["n"] == 1:
                 raise RuntimeError("simulated executor crash")
-            return real_execute(self, plans, epoch=epoch)
+            return real_execute(self, plans, epoch=epoch, **kw)
 
         monkeypatch.setattr(type(oracle), "execute", flaky)
         with _client(bg) as c:
