@@ -28,6 +28,8 @@ BENCHES = [
      "live calibration drift->refit->canary->promote recovery"),
     ("faults", "benchmarks.bench_faults",
      "fault-injected replay resilience floors (zero lost requests)"),
+    ("shard", "benchmarks.bench_shard",
+     "multi-worker sharded wave execution vs single-worker bank"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

@@ -5,7 +5,7 @@
 #   lint         byte-compile every tree we ship (cheap syntax/import-shape
 #                sanity; no third-party linter is vendored)
 #   test         the full pytest suite
-#   bench-smoke  the seven floor-gated smoke benchmarks — predict_grid (5x
+#   bench-smoke  the eight floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
 #                predict_many (5x floor + element-wise equality), the
@@ -17,7 +17,11 @@
 #                refit, canary and promote: 3x MAPE recovery floor, one
 #                promotion, zero rollbacks, zero added hot-path p99), and
 #                fault-injected replay (10% wave-fault chaos: zero lost
-#                requests, 0.7x throughput floor, bounded p99) —
+#                requests, 0.7x throughput floor, bounded p99), and
+#                sharded wave execution (4-worker spawn ShardPlane:
+#                2.5x critical-path scaling floor, bit-identity vs the
+#                single-worker bank, zero-loss mixed replay with
+#                bounded p99) —
 #                each writing its results/bench/BENCH_*.json trajectory
 #                record (scripts/bench_report.py renders them, with deltas
 #                vs a previous artifact when one is present; ci.yml runs
@@ -45,6 +49,7 @@ stage_bench_smoke() {
     python -m benchmarks.bench_bank --smoke
     python -m benchmarks.bench_calibrate --smoke
     python -m benchmarks.bench_faults --smoke
+    python -m benchmarks.bench_shard --smoke
     # trajectory table: printed by a dedicated always() step in ci.yml;
     # run `python scripts/bench_report.py` locally for the same view
 }

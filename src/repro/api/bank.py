@@ -54,6 +54,18 @@ class BankUnsupportedError(RuntimeError):
     heterogeneous shapes); callers fall back to per-group execution."""
 
 
+def _tree_index(tree, idx):
+    """``leaf[idx]`` over a params pytree of dicts/lists/tuples — a light
+    structural map so ``ModelBank.split`` (and the shard plane's spec
+    builder) can slice stacked DNN heads without importing jax. Works on
+    numpy and jax leaves alike (both support integer-array indexing)."""
+    if isinstance(tree, dict):
+        return {k: _tree_index(v, idx) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_tree_index(v, idx) for v in tree)
+    return tree[idx]
+
+
 class ModelBank:
     """Stacked ensembles over the trained pair set of one ``Profet``.
 
@@ -186,6 +198,46 @@ class ModelBank:
         return cls(pairs=pairs, members=members, n_features=n_features,
                    forest=forest, lin_coef=lin_coef, dnn=dnn,
                    devices=devices, scalers=scalers, backend=backend)
+
+    # ------------------------------------------------------------------
+    # group-axis sharding
+    # ------------------------------------------------------------------
+    def split(self, groups: Sequence[Sequence[Tuple[str, str]]]
+              ) -> Tuple[Optional["ModelBank"], ...]:
+        """Slice the bank's group axis into sub-banks, one per entry of
+        ``groups`` (a partition of ``self.pairs``, e.g. from
+        ``planner.partition_pairs``). Each sub-bank carries only its
+        pairs' stacked tensors but the FULL device set and phase-2
+        scalers — phase-2 is per-device, not per-pair, so every shard
+        can interpolate any row it predicted. Slicing is pure gathering
+        (``arr[idx]``), so a sub-bank's answers are bit-identical to the
+        full bank's for the same rows. Empty groups map to ``None``;
+        pairs the bank never trained raise ``BankUnsupportedError``."""
+        banks = []
+        for part in groups:
+            part = tuple(part)
+            if not part:
+                banks.append(None)
+                continue
+            missing = [p for p in part if p not in self.gid]
+            if missing:
+                raise BankUnsupportedError(
+                    f"cannot split: pairs not in bank: {missing}")
+            idx = np.array([self.gid[p] for p in part], np.int64)
+            forest = None
+            if self.forest is not None:
+                forest = {k: v[idx] for k, v in self.forest.items()}
+            lin_coef = None if self.lin_coef is None else self.lin_coef[idx]
+            dnn = None
+            if self.dnn is not None:
+                params, mu, sd, ys = self.dnn
+                dnn = (_tree_index(params, idx), mu[idx], sd[idx], ys[idx])
+            banks.append(ModelBank(
+                pairs=part, members=self.members,
+                n_features=self.n_features, forest=forest,
+                lin_coef=lin_coef, dnn=dnn, devices=self.devices,
+                scalers=self.scalers, backend=self.backend))
+        return tuple(banks)
 
     # ------------------------------------------------------------------
     # stacked execution

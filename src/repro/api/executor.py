@@ -31,7 +31,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.api.types import (BatchPredictResult, MODE_CROSS, MODE_MEASURED,
-                             MODE_TWO_PHASE, PredictPlan, PredictResult,
+                             MODE_TWO_PHASE, PartialExecutionError,
+                             PredictPlan, PredictResult, ShardExecutionError,
                              UnsupportedRequestError)
 
 
@@ -132,6 +133,8 @@ def execute_plans(profet, plans: Sequence[PredictPlan],
     banked = (bank is not None and bool(reg.groups)
               and bank.supports(reg.groups))
     phase1: Dict[Tuple[str, str, tuple], float] = {}
+    failed_keys: set = set()
+    shard_error: Optional[str] = None
     fused = 0
     if banked:
         # stacked single-dispatch path: one grouped forest launch + one
@@ -143,10 +146,20 @@ def execute_plans(profet, plans: Sequence[PredictPlan],
             gids.append(np.full(len(keys), bank.gid[(anchor, target)],
                                 np.int64))
             flat_keys.extend((anchor, target, k) for k in keys)
-        pred = bank.execute(np.concatenate(rows), np.concatenate(gids))
+        try:
+            pred = bank.execute(np.concatenate(rows), np.concatenate(gids))
+        except PartialExecutionError as e:
+            # a sharded bank lost a slice mid-wave: keep every answered
+            # row, mark the failed rows' keys so only the plans riding
+            # them error out (typed, per-request) instead of the wave
+            pred = e.preds
+            shard_error = str(e)
+            failed_keys = {fk for fk, bad in zip(flat_keys, e.failed_rows)
+                           if bad}
         fused = 1
         for fk, v in zip(flat_keys, pred):
-            phase1[fk] = float(v)
+            if fk not in failed_keys:
+                phase1[fk] = float(v)
     else:
         # per-group fallback: one fused ensemble call per (anchor, target)
         for (anchor, target), keys in reg.groups.items():
@@ -156,13 +169,32 @@ def execute_plans(profet, plans: Sequence[PredictPlan],
             for k, v in zip(keys, pred):
                 phase1[(anchor, target, k)] = float(v)
 
-    # scatter cross answers; collect two-phase rows
+    # scatter cross answers; collect two-phase rows. A plan errors (typed,
+    # per-request) iff any phase-1 row it rides was on a failed shard
+    # slice — for two-phase that means either endpoint.
+    errors: List[Optional[ShardExecutionError]] = [None] * n
+
+    def _slice_error(plan: PredictPlan) -> ShardExecutionError:
+        return ShardExecutionError(
+            f"shard slice for pair ({plan.anchor!r} -> {plan.target!r}) "
+            f"failed mid-wave: {shard_error}")
+
     tp_rows: List[Tuple[int, PredictPlan]] = []
     for i, plan in enumerate(plans):
         if plan.mode == MODE_CROSS:
-            lat[i] = phase1[(plan.anchor, plan.target, cross_key[i])]
+            fk = (plan.anchor, plan.target, cross_key[i])
+            if fk in failed_keys:
+                errors[i] = _slice_error(plan)
+            else:
+                lat[i] = phase1[fk]
         elif plan.mode == MODE_TWO_PHASE:
-            tp_rows.append((i, plan))
+            k_min, k_max = tp_keys[i]
+            if failed_keys and (
+                    (plan.anchor, plan.target, k_min) in failed_keys
+                    or (plan.anchor, plan.target, k_max) in failed_keys):
+                errors[i] = _slice_error(plan)
+            else:
+                tp_rows.append((i, plan))
     if tp_rows:
         if banked:
             # one Horner pass over every two-phase row, any (target, knob)
@@ -192,7 +224,10 @@ def execute_plans(profet, plans: Sequence[PredictPlan],
                 lat[ii] = profet.predict_knob(target, knob, vals,
                                               t_min, t_max)
 
-    results = tuple(_result(p, lat[i], epoch) for i, p in enumerate(plans))
+    results = tuple(None if errors[i] is not None
+                    else _result(p, lat[i], epoch)
+                    for i, p in enumerate(plans))
     return BatchPredictResult(results=results, fused_calls=fused,
                               rows=reg.n_rows, mode_counts=mode_counts,
-                              epoch=epoch, banked=banked)
+                              epoch=epoch, banked=banked,
+                              errors=tuple(errors) if failed_keys else None)

@@ -229,7 +229,7 @@ class LatencyOracle:
 
     def execute(self, plans: Sequence[PredictPlan],
                 epoch: Optional[str] = None,
-                banked: bool = True) -> BatchPredictResult:
+                banked: bool = True, bank=None) -> BatchPredictResult:
         """Stages 2+3: answer already-planned requests in ONE stacked
         dispatch through the oracle's :attr:`bank` (grouped forest launch +
         stacked MLP apply for the whole batch, ``fused_calls == 1``);
@@ -237,11 +237,17 @@ class LatencyOracle:
         (anchor, target) pair. Results are stamped with ``epoch`` (a
         serving layer's cache epoch); when omitted the oracle's own config
         fingerprint is used. ``banked=False`` forces the per-group path —
-        a serving layer's degraded mode after a warm-up/bank failure."""
+        a serving layer's degraded mode after a warm-up/bank failure.
+        ``bank`` overrides the oracle's own bank with an externally
+        managed facade (e.g. a ``repro.serve.shard.ShardedBank``); answers
+        stay bit-identical because a sharded bank is pure group-axis
+        slicing of the same tensors."""
+        if bank is None:
+            bank = self.bank if banked else None
         return execute_plans(self.profet, plans,
                              epoch=self.fingerprint if epoch is None
                              else epoch,
-                             bank=self.bank if banked else None)
+                             bank=bank)
 
     def predict_many(self,
                      reqs: Sequence[PredictRequest]) -> BatchPredictResult:

@@ -66,6 +66,33 @@ def minmax_cases(workload: Workload, knob: str,
     return None
 
 
+def partition_pairs(pairs: Sequence[Tuple[str, str]],
+                    n_shards: int) -> Tuple[Tuple[Tuple[str, str], ...], ...]:
+    """Deterministic, balanced routing of (anchor, target) pairs to
+    ``n_shards`` shards: round-robin over the *sorted* pair list, so the
+    same pair set always yields the same partition — in every process (no
+    salted ``hash()``), on every host. ``ModelBank.split`` and the shard
+    plane (``repro.serve.shard``) both consume this, which is what keeps
+    the planner's routing and the workers' loaded sub-banks in agreement.
+    Shard counts beyond the pair count leave trailing shards empty."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    ordered = sorted(pairs)
+    return tuple(tuple(ordered[s::n_shards]) for s in range(n_shards))
+
+
+def shard_of_pair(pair: Tuple[str, str], pairs: Sequence[Tuple[str, str]],
+                  n_shards: int) -> int:
+    """The shard :func:`partition_pairs` routes ``pair`` to within the
+    full ``pairs`` set."""
+    ordered = sorted(pairs)
+    try:
+        return ordered.index(tuple(pair)) % n_shards
+    except ValueError:
+        raise UnknownDeviceError(
+            f"pair {pair!r} is not in the routed pair set") from None
+
+
 def request_fingerprint(req: PredictRequest) -> tuple:
     """Hashable identity of a request's *content* — the serving cache key.
     Two requests with equal fields (including an equal-by-value client

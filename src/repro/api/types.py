@@ -77,6 +77,28 @@ class CircuitOpenError(ApiError):
     cooldown (a half-open probe re-tests the pair; HTTP 503)."""
 
 
+class ShardExecutionError(ExecutionError):
+    """A shard worker died (or its slice failed) mid-wave. Only the
+    requests whose rows rode the failed slice carry this error — the rest
+    of the wave's answers stand, and the wave pump survives (HTTP 500).
+    Subsequent waves route the dead shard's rows through the degraded
+    single-worker fallback instead."""
+
+
+class PartialExecutionError(ExecutionError):
+    """Internal carrier between a sharded bank and the executor: the wave
+    executed, but some rows' slices failed. ``preds`` holds every row's
+    prediction (garbage at failed rows), ``failed_rows`` is the boolean
+    row mask. The executor converts it into per-request
+    :class:`ShardExecutionError` entries — it never crosses the ``repro.api``
+    boundary."""
+
+    def __init__(self, message: str, preds, failed_rows):
+        super().__init__(message)
+        self.preds = preds
+        self.failed_rows = failed_rows
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """One CNN training configuration — the paper's (M, B, P) cell."""
@@ -198,7 +220,7 @@ class PredictPlan:
 class BatchPredictResult:
     """Results of one fused ``predict_many`` execution, in request order,
     plus the batching telemetry the serving layer reports."""
-    results: Tuple[PredictResult, ...]
+    results: Tuple[Optional[PredictResult], ...]
     fused_calls: int          # fused model dispatches: 1 per wave on the
                               # stacked ModelBank path, else one
                               # MedianEnsemble.predict per (anchor, target)
@@ -206,6 +228,11 @@ class BatchPredictResult:
     mode_counts: Mapping[str, int]
     epoch: Optional[str] = None   # oracle generation that executed the batch
     banked: bool = False          # answered via the stacked ModelBank path
+    # per-request typed errors (aligned with ``results``): None everywhere
+    # on a clean batch; a failed shard slice marks ONLY its requests (their
+    # ``results`` slot is None) while the rest of the batch answers — the
+    # serving layer fails those requests individually and keeps pumping
+    errors: Optional[Tuple[Optional[ApiError], ...]] = None
 
     def __len__(self) -> int:
         return len(self.results)
@@ -268,6 +295,11 @@ class ServiceStats:
     circuit_trips: int = 0
     pump_crashes: int = 0
     pump_restarts: int = 0
+    # sharded execution (repro.serve.shard): requests failed because their
+    # shard slice died mid-wave, and rows served by the degraded
+    # single-worker (parent-side) fallback after a worker death/quarantine
+    shard_slice_errors: int = 0
+    shard_fallback_rows: int = 0
     degraded: bool = False
     degraded_reason: Optional[str] = None
     latencies_ms: "deque" = dataclasses.field(
@@ -304,6 +336,8 @@ class ServiceStats:
                 "circuit_trips": self.circuit_trips,
                 "pump_crashes": self.pump_crashes,
                 "pump_restarts": self.pump_restarts,
+                "shard_slice_errors": self.shard_slice_errors,
+                "shard_fallback_rows": self.shard_fallback_rows,
                 "degraded": self.degraded,
                 "degraded_reason": self.degraded_reason,
                 "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,

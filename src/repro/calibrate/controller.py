@@ -29,6 +29,7 @@ plan, execute, or compile on the hot path):
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -66,8 +67,10 @@ class Calibrator:
     """
 
     def __init__(self, service, config: Optional[CalibrationConfig] = None,
-                 refit_fn=None, faults=None, store=None):
+                 refit_fn=None, faults=None, store=None,
+                 clock=time.monotonic):
         self.service = service
+        self._clock = clock
         self.config = config or CalibrationConfig()
         self.stats = CalibrationStats()
         self._faults = faults
@@ -100,6 +103,7 @@ class Calibrator:
         self._prev: Optional[Tuple[object, str]] = None
         self._confirm_start = 0
         self._cooldown_until = 0
+        self._last_refit_t = clock()   # scheduled-refit cadence anchor
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         service.set_observer(self._observe)
@@ -242,8 +246,25 @@ class Calibrator:
                    >= self.config.drift_confirm_obs]
         if drifted:
             self._launch_refit(drifted)
+            return
+        # wall-clock cadence: with no drift in sight, periodically fold
+        # the accumulated ground truth back into the oracle anyway — the
+        # candidate still has to earn promotion through the same shadow
+        # canary, so a scheduled refit can never regress the incumbent.
+        interval = self.config.refit_interval_s
+        if interval is None or self._clock() - self._last_refit_t < interval:
+            return
+        due = [p for p in sorted(trained)
+               if self.buffer.count(p) >= self.config.min_refit_obs]
+        if due:
+            self._launch_refit(due, scheduled=True)
+        else:
+            self._last_refit_t = self._clock()   # nothing to train on yet
 
-    def _launch_refit(self, drifted: List[Pair]) -> None:
+    def _launch_refit(self, drifted: List[Pair],
+                      scheduled: bool = False) -> None:
+        self._last_refit_t = self._clock()
+        kind = "scheduled refit" if scheduled else "refit"
         try:
             faults_mod.fire(self._faults, faults_mod.SITE_REFIT)
             candidate, report = self._refit_fn(
@@ -257,17 +278,19 @@ class Calibrator:
             self.stats.refit_errors += 1
             self._cooldown_until = (self.stats.scored
                                     + self.config.cooldown_scored)
-            self.stats.event(f"refit crashed ({e!r}); incumbent keeps "
+            self.stats.event(f"{kind} crashed ({e!r}); incumbent keeps "
                              "serving, retry after cooldown")
             return
         if candidate is None:
             self._cooldown_until = (self.stats.scored
                                     + self.config.cooldown_scored)
             self.stats.event(
-                "refit skipped: no drifted pair has enough usable "
+                f"{kind} skipped: no candidate pair has enough usable "
                 f"observations ({', '.join(map(pair_label, drifted))})")
             return
         self.stats.refits += 1
+        if scheduled:
+            self.stats.scheduled_refits += 1
         self._candidate, self._refit_report = candidate, report
         self._refit_pairs = tuple(report.pairs)
         self._shadow = {"waves": 0, "requests": 0, "errors": 0}
@@ -276,7 +299,8 @@ class Calibrator:
             self._mirror.clear()
         self.stats.state = STATE_SHADOW
         self.stats.event(
-            f"refit candidate over {', '.join(map(pair_label, report.pairs))}"
+            f"{kind} candidate over "
+            f"{', '.join(map(pair_label, report.pairs))}"
             f" ({report.total_obs} obs folded in); shadow canary started")
 
     # -- shadow canary -------------------------------------------------

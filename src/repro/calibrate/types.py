@@ -76,6 +76,15 @@ class CalibrationConfig:
                                      # refit at the trigger moment would
                                      # blend pre- and post-drift truth)
     cooldown_scored: int = 32        # scored obs between refit attempts
+    refit_interval_s: Optional[float] = None
+                                     # wall-clock cadence of *scheduled*
+                                     # refits: when idle (no drift) and
+                                     # this many seconds have passed since
+                                     # the last refit launched, the
+                                     # controller refits every pair with
+                                     # >= min_refit_obs buffered truth
+                                     # through the same shadow-canary /
+                                     # promote path. None disables.
     # shadow canary
     mirror_capacity: int = 32        # mirrored live waves buffered at once
     canary_waves: int = 1            # mirrored waves before a verdict …
@@ -108,6 +117,8 @@ class CalibrationStats:
     unscorable: int = 0              # no prediction obtainable (plan error)
     drift_events: int = 0
     refits: int = 0
+    scheduled_refits: int = 0        # refits launched on the wall-clock
+                                     # cadence rather than by drift
     canary_pass: int = 0
     canary_fail: int = 0
     promotions: int = 0
@@ -138,6 +149,7 @@ class CalibrationStats:
                 "evicted": self.evicted, "scored": self.scored,
                 "unscorable": self.unscorable,
                 "drift_events": self.drift_events, "refits": self.refits,
+                "scheduled_refits": self.scheduled_refits,
                 "canary_pass": self.canary_pass,
                 "canary_fail": self.canary_fail,
                 "promotions": self.promotions, "rollbacks": self.rollbacks,

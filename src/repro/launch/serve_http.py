@@ -54,6 +54,14 @@ def main(argv=None):
     ap.add_argument("--cache-size", type=int, default=4096)
     ap.add_argument("--max-queue", type=int, default=1024,
                     help="bounded admission queue (503 past it)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="shard the bank across this many workers "
+                         "(0 = single-process wave execution)")
+    ap.add_argument("--shard-mode", default="spawn",
+                    choices=("spawn", "thread"),
+                    help="worker isolation for --workers: 'spawn' = "
+                         "processes with shared-memory bank shards, "
+                         "'thread' = in-process (tests/debug)")
     ap.add_argument("--refresh-mid-replay", action="store_true",
                     help="refit (new seed) and oracle_refreshed() halfway "
                          "through the replay — demonstrates epoch swap "
@@ -68,16 +76,22 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.serve import (BackgroundServer, Client, LatencyService,
-                             replay, synthetic_requests)
+                             ShardPlane, replay, synthetic_requests)
 
     oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
                          args.epochs, args.seed)
+    plane = None
+    if args.workers > 0:
+        plane = ShardPlane(workers=args.workers, mode=args.shard_mode)
     service = LatencyService(oracle, max_wave=args.wave,
-                             cache_size=args.cache_size)
+                             cache_size=args.cache_size,
+                             shard_plane=plane)
     bg = BackgroundServer(service, host=args.host, port=args.port,
                           max_queue=args.max_queue).start()
+    shard_note = (f"  shards: {args.workers} ({args.shard_mode})"
+                  if plane is not None else "")
     print(f"serving http://{bg.host}:{bg.port}  "
-          f"epoch {service.epoch}  "
+          f"epoch {service.epoch}{shard_note}  "
           f"pairs: {', '.join(f'{a}->{t}' for a, t in oracle.pairs())}")
 
     try:
@@ -121,6 +135,11 @@ def main(argv=None):
               f"epoch {s.epoch} (swaps {s.epoch_swaps}, "
               f"invalidated {s.invalidated})  "
               f"warm-up {s.warmup_ms:.0f} ms")
+        if plane is not None:
+            ps = plane.summary()
+            print(f"shards: {ps['alive']}/{ps['workers']} alive  "
+                  f"{ps['slices']} slices  "
+                  f"{ps['fallback_rows']} fallback rows")
         with Client(bg.host, bg.port) as c:
             h = c.healthz()
             print(f"healthz: {h['status']}  epoch {h['epoch']}  "
@@ -130,6 +149,8 @@ def main(argv=None):
         return 0
     finally:
         bg.stop()
+        if plane is not None:
+            plane.close()
 
 
 if __name__ == "__main__":

@@ -13,6 +13,11 @@
   - ``resilience``: client ``RetryPolicy`` (exponential backoff +
     jitter, idempotency-aware) and the per-(anchor, target)
     ``CircuitBreaker`` the wave service quarantines failing pairs with;
+  - ``shard``: multi-worker sharded wave execution — ``ShardPlane``
+    owns N workers each holding a group-axis ``ModelBank`` shard
+    (stacked tensors shared read-only via ``multiprocessing.
+    shared_memory``), and ``ShardedBank`` scatters a wave's rows by
+    (anchor, target) group and gathers them back bit-identically;
   - ``Engine``: the token-serving engine for the model zoo
     (``repro.serve.engine``; imported lazily — it pulls in jax + the model
     stack).
@@ -23,13 +28,15 @@ from repro.serve.faults import (FaultInjector, FaultPlan, FaultRule,
 from repro.serve.latency_service import (LatencyService, ServiceRequest,
                                          synthetic_requests)
 from repro.serve.resilience import CircuitBreaker, RetryPolicy
+from repro.serve.shard import ShardedBank, ShardPlane, WorkerDeadError
 from repro.serve.transport import (BackgroundServer, Client, TransportError,
                                    TransportServer, replay)
 
 __all__ = ["BackgroundServer", "CircuitBreaker", "Client", "Engine",
            "FaultInjector", "FaultPlan", "FaultRule", "InjectedFault",
            "LatencyService", "RetryPolicy", "ServiceRequest",
-           "ServiceStats", "TransportError", "TransportServer", "replay",
+           "ServiceStats", "ShardPlane", "ShardedBank", "TransportError",
+           "TransportServer", "WorkerDeadError", "replay",
            "synthetic_requests"]
 
 

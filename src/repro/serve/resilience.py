@@ -132,6 +132,20 @@ class CircuitBreaker:
                 st.opened += 1
                 st.open_until = self._clock() + self.cooldown_s
 
+    def force_open(self, key) -> None:
+        """Quarantine ``key`` permanently (no half-open probes): the
+        shard plane uses this for a worker that *died* — unlike a
+        transient exec failure, a dead process never recovers, so probing
+        it would cost one failed slice per cooldown. Only :meth:`reset`
+        (an oracle swap) clears it."""
+        with self._lock:
+            st = self._pairs.setdefault(key, _PairState())
+            if st.state != OPEN or st.open_until != float("inf"):
+                st.opened += 1
+            st.state = OPEN
+            st.probing = False
+            st.open_until = float("inf")
+
     def state(self, key) -> str:
         with self._lock:
             st = self._pairs.get(key)

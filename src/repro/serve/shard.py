@@ -1,0 +1,664 @@
+"""``repro.serve.shard`` — multi-worker sharded wave execution.
+
+The ``ModelBank`` stacked tensors (PR 5) are read-only after warm-up —
+exactly the shape that shards with zero answer drift. This module turns
+one bank into a **shard plane**: N workers, each holding one group-axis
+slice of the bank (``ModelBank.split`` over ``planner.partition_pairs``),
+so a wave's rows scatter by (anchor, target) group to their shard, every
+shard answers its slice with ONE grouped launch, and the parent gathers
+the predictions back into wave row order.
+
+Two worker modes share one protocol:
+
+  - ``mode="spawn"`` — real processes (``multiprocessing`` spawn context,
+    safe next to a multithreaded jax parent). The big stacked arrays
+    (forest node tensors + linear coefficients) are published once per
+    generation through ``multiprocessing.shared_memory`` and mapped
+    read-only by every worker — a load ships names and shapes, not
+    gigabytes. Workers never import jax unless the bank carries a DNN
+    member (the spec resolves the forest backend parent-side).
+  - ``mode="thread"`` — in-process workers sharing sub-banks by
+    reference. Deterministic and cheap: the test suite drives shuffled
+    completion orders, mid-wave deaths, and swap races through its
+    ``delay_s`` / ``fail_loads`` / ``kill`` hooks.
+
+Each worker's pipe is owned by a single dispatcher thread (submissions
+return ``concurrent.futures.Future``), so the wave pump and a concurrent
+``oracle_refreshed`` swap can both talk to the plane without interleaving
+messages on one pipe — and slices submitted to different workers overlap.
+
+**Generations.** Every loaded bank gets a generation id. ``load`` is
+all-or-nothing: if any live worker fails to load, everything already
+loaded is dropped, the shared segments are unlinked, and the caller's
+swap aborts with the incumbent intact. A wave acquires its generation at
+admission and releases it after gather; ``retire`` defers the actual
+drop until in-flight waves drain, and a retired generation that somehow
+still executes answers parent-side through the full bank — so no wave
+can ever mix epochs across shards.
+
+**Degradation.** A worker that dies mid-wave fails only its slice: the
+wave raises :class:`repro.api.types.PartialExecutionError` carrying the
+surviving predictions plus the failed-row mask, the executor turns that
+into per-request :class:`ShardExecutionError` (HTTP 500) for exactly the
+riding requests, and the breaker force-opens the shard so subsequent
+waves route its rows parent-side through the full bank (the degraded
+single-worker fallback — bit-identical, just not parallel). Transient
+slice failures go through the normal closed/open/half-open breaker.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.bank import ModelBank, _tree_index  # noqa: F401 (re-export)
+from repro.api.planner import partition_pairs
+from repro.api.types import PartialExecutionError
+from repro.serve.resilience import CircuitBreaker
+
+_SHM_ARRAYS = ("feat", "thr", "left", "right", "value")
+
+
+class WorkerDeadError(RuntimeError):
+    """The shard worker's process (or thread persona) is gone — pipe
+    broke, process killed, or an injected test death. Never probed again:
+    the plane force-opens the shard's breaker key."""
+
+
+# ----------------------------------------------------------------------
+# bank <-> worker spec (spawn mode)
+# ----------------------------------------------------------------------
+def _np_tree(tree):
+    """Convert a (possibly jax) params pytree to numpy leaves so it can
+    ride a pipe into a worker that never imports jax."""
+    if isinstance(tree, dict):
+        return {k: _np_tree(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_np_tree(v) for v in tree)
+    return np.asarray(tree)
+
+
+def _bank_to_spec(bank: ModelBank) -> Tuple[dict, list]:
+    """Publish ``bank``'s big stacked arrays as shared-memory segments
+    and return ``(spec, segments)``: a small picklable spec (names +
+    shapes + the genuinely small tensors) and the parent-held segments
+    (the parent owns their lifetime — unlinked at generation retire)."""
+    from multiprocessing import shared_memory
+    segments: list = []
+    arrays: Dict[str, Tuple[str, tuple, str]] = {}
+
+    def share(name: str, arr: np.ndarray) -> None:
+        arr = np.ascontiguousarray(arr)
+        seg = shared_memory.SharedMemory(create=True,
+                                         size=max(arr.nbytes, 1))
+        np.ndarray(arr.shape, arr.dtype, buffer=seg.buf)[...] = arr
+        segments.append(seg)
+        arrays[name] = (seg.name, arr.shape, arr.dtype.str)
+
+    try:
+        if bank.forest is not None:
+            for k in _SHM_ARRAYS:
+                share("forest." + k, bank.forest[k])
+        if bank.lin_coef is not None:
+            share("lin_coef", bank.lin_coef)
+    except Exception:
+        _release_segments(segments, unlink=True)
+        raise
+    backend = bank.backend
+    if backend == "auto" and "forest" in bank.members:
+        # resolve here, where jax is already warm: CPU workers then serve
+        # the numpy traversal without ever importing jax
+        from repro.kernels import forest_eval
+        backend = forest_eval._auto_backend()
+    spec = {
+        "pairs": bank.pairs,
+        "members": bank.members,
+        "n_features": bank.n_features,
+        "devices": bank.devices,
+        "scalers": bank.scalers,
+        "backend": backend,
+        "depth": (None if bank.forest is None
+                  else np.asarray(bank.forest["depth"])),
+        "dnn": (None if bank.dnn is None
+                else (_np_tree(bank.dnn[0]), np.asarray(bank.dnn[1]),
+                      np.asarray(bank.dnn[2]), np.asarray(bank.dnn[3]))),
+        "arrays": arrays,
+    }
+    return spec, segments
+
+
+def _bank_from_spec(spec: dict) -> Tuple[ModelBank, list]:
+    """Worker side: attach the shared segments and rebuild a ``ModelBank``
+    around zero-copy views. Returns the bank plus the attached segments
+    (closed when the generation is dropped)."""
+    from multiprocessing import shared_memory
+    segments: list = []
+
+    def attach(name: str, shape: tuple, dtype: str) -> np.ndarray:
+        # NOTE: Python 3.10 registers attached segments with the resource
+        # tracker too, but spawn workers share the parent's tracker (its
+        # fd rides the preparation data) and registration is a set — the
+        # parent's unlink at generation retire removes the single entry,
+        # so no manual unregister gymnastics are needed here.
+        seg = shared_memory.SharedMemory(name=name)
+        segments.append(seg)
+        return np.ndarray(shape, np.dtype(dtype), buffer=seg.buf)
+
+    arrays = {k: attach(*v) for k, v in spec["arrays"].items()}
+    forest = None
+    if spec["depth"] is not None:
+        forest = {k: arrays["forest." + k] for k in _SHM_ARRAYS}
+        forest["depth"] = spec["depth"]
+    bank = ModelBank(pairs=spec["pairs"], members=spec["members"],
+                     n_features=spec["n_features"], forest=forest,
+                     lin_coef=arrays.get("lin_coef"), dnn=spec["dnn"],
+                     devices=spec["devices"], scalers=spec["scalers"],
+                     backend=spec["backend"])
+    return bank, segments
+
+
+def _release_segments(segments, unlink: bool) -> None:
+    for seg in segments:
+        try:
+            seg.close()
+            if unlink:
+                seg.unlink()
+        except Exception:
+            pass
+
+
+def _spawn_worker_main(conn) -> None:
+    """Spawn-worker child loop (module level: spawn pickles the target).
+    One request, one reply, strictly in order — the parent's dispatcher
+    thread is the only writer on the other end."""
+    banks: Dict[int, Tuple[ModelBank, list]] = {}
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        op = msg[0]
+        try:
+            if op == "load":
+                _, gen_id, spec = msg
+                banks[gen_id] = _bank_from_spec(spec)
+                conn.send(("ok",))
+            elif op == "exec":
+                _, gen_id, X, gids = msg
+                bank = banks[gen_id][0]
+                # busy is CPU time, not wall: on an oversubscribed host a
+                # descheduled worker's wall clock absorbs its neighbours'
+                # runtime, which would poison any critical-path estimate
+                # built from these numbers (the process is single-threaded,
+                # so process_time IS this exec's own compute)
+                t0 = time.process_time()
+                preds = bank.execute(X, gids)
+                conn.send(("exec_ok", preds, time.process_time() - t0))
+            elif op == "drop":
+                entry = banks.pop(msg[1], None)
+                if entry is not None:
+                    _release_segments(entry[1], unlink=False)
+                conn.send(("ok",))
+            elif op == "ping":
+                conn.send(("ok",))
+            elif op == "exit":
+                conn.send(("ok",))
+                break
+            else:
+                conn.send(("err", f"unknown op {op!r}"))
+        except Exception as e:  # report, never die on a bad request
+            try:
+                conn.send(("err", f"{type(e).__name__}: {e}"))
+            except Exception:
+                break
+    try:
+        conn.close()
+    except Exception:
+        pass
+
+
+# ----------------------------------------------------------------------
+# workers
+# ----------------------------------------------------------------------
+class _BaseWorker:
+    """One shard worker behind a dispatcher thread that owns its channel.
+    ``submit`` enqueues an op and returns a Future; ops on one worker are
+    serialized (pipe protocol) while different workers overlap."""
+
+    def __init__(self, index: int):
+        self.index = index
+        self.alive = True
+        self.death_reason: Optional[str] = None
+        self.execs = 0
+        self.busy_s = 0.0
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._drain, daemon=True, name=f"shard-worker-{index}")
+        self._thread.start()
+
+    def submit(self, op: tuple) -> Future:
+        fut: Future = Future()
+        if not self.alive:
+            fut.set_exception(WorkerDeadError(
+                self.death_reason or f"worker {self.index} is dead"))
+            return fut
+        self._q.put((op, fut))
+        return fut
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            op, fut = item
+            if not self.alive:
+                fut.set_exception(WorkerDeadError(
+                    self.death_reason or f"worker {self.index} is dead"))
+                continue
+            try:
+                fut.set_result(self._call(op))
+            except WorkerDeadError as e:
+                self.alive = False
+                self.death_reason = str(e)
+                fut.set_exception(e)
+            except Exception as e:
+                fut.set_exception(e)
+
+    def _call(self, op: tuple):
+        raise NotImplementedError
+
+    def kill(self) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        if self.alive:
+            self.submit(("exit",))
+        self._q.put(None)
+        self._thread.join(timeout=5.0)
+
+
+class _ProcessWorker(_BaseWorker):
+    """Spawn-context process worker; a broken pipe IS the death signal."""
+
+    def __init__(self, index: int):
+        import multiprocessing as mp
+        ctx = mp.get_context("spawn")
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(target=_spawn_worker_main, args=(child,),
+                                 daemon=True,
+                                 name=f"profet-shard-{index}")
+        self._proc.start()
+        child.close()
+        super().__init__(index)
+
+    def _call(self, op: tuple):
+        try:
+            self._conn.send(op)
+            reply = self._conn.recv()
+        except (EOFError, OSError) as e:
+            raise WorkerDeadError(
+                f"worker {self.index} channel broke "
+                f"({type(e).__name__})") from e
+        tag = reply[0]
+        if tag == "exec_ok":
+            _, preds, busy = reply
+            self.execs += 1
+            self.busy_s += busy
+            return preds, busy
+        if tag == "ok":
+            return None
+        raise RuntimeError(f"worker {self.index}: {reply[1]}")
+
+    def kill(self) -> None:
+        """Hard-kill the process; the dispatcher's in-flight or next pipe
+        op surfaces the death as :class:`WorkerDeadError`."""
+        try:
+            self._proc.kill()
+        except Exception:
+            pass
+
+    def close(self) -> None:
+        super().close()
+        try:
+            self._proc.join(timeout=5.0)
+            if self._proc.is_alive():
+                self._proc.kill()
+                self._proc.join(timeout=5.0)
+        except Exception:
+            pass
+        try:
+            self._conn.close()
+        except Exception:
+            pass
+
+
+class _ThreadWorker(_BaseWorker):
+    """In-process worker persona for deterministic tests: sub-banks are
+    held by reference, ``delay_s`` stretches each exec (to force
+    completion orders and swap races), ``fail_loads`` injects load
+    failures, ``kill`` makes queued and in-flight ops die like a broken
+    pipe would."""
+
+    def __init__(self, index: int):
+        self._banks: Dict[int, ModelBank] = {}
+        self.delay_s = 0.0
+        self.fail_loads = 0
+        super().__init__(index)
+
+    def _call(self, op: tuple):
+        kind = op[0]
+        if kind == "load":
+            if self.fail_loads > 0:
+                self.fail_loads -= 1
+                raise RuntimeError(
+                    f"injected load failure on worker {self.index}")
+            self._banks[op[1]] = op[2]
+            return None
+        if kind == "exec":
+            _, gen_id, X, gids = op
+            if self.delay_s:
+                time.sleep(self.delay_s)
+            if not self.alive:
+                raise WorkerDeadError(
+                    self.death_reason or f"worker {self.index} was killed")
+            # CPU time for the same reason as the spawn worker: busy must
+            # not absorb time this thread spent descheduled
+            t0 = time.thread_time()
+            preds = self._banks[gen_id].execute(X, gids)
+            busy = time.thread_time() - t0
+            self.execs += 1
+            self.busy_s += busy
+            return preds, busy
+        if kind == "drop":
+            self._banks.pop(op[1], None)
+            return None
+        if kind in ("ping", "exit"):
+            return None
+        raise RuntimeError(f"unknown op {kind!r}")
+
+    def kill(self) -> None:
+        self.death_reason = f"worker {self.index} was killed"
+        self.alive = False
+
+
+# ----------------------------------------------------------------------
+# generations + the sharded-bank facade
+# ----------------------------------------------------------------------
+class _GenState:
+    """Refcounted lifetime of one loaded bank generation."""
+
+    def __init__(self, gen_id: int, segments: list):
+        self.gen_id = gen_id
+        self.segments = segments     # parent-held shm (spawn mode)
+        self.active = 0              # waves currently executing on it
+        self.retired = False
+        self.dropped = False
+
+
+class ShardedBank:
+    """Drop-in ``ModelBank`` facade over one loaded generation of a
+    :class:`ShardPlane`: same ``execute`` / ``interpolate`` / ``supports``
+    surface (``repro.api.executor`` can't tell the difference), but
+    ``execute`` scatters rows to their (anchor, target) shard, runs every
+    shard's grouped launch concurrently, and gathers back into row order.
+    Answers are bit-identical to the full bank — sharding is pure
+    group-axis slicing of the same float64 tensors."""
+
+    def __init__(self, plane: "ShardPlane", gen: _GenState,
+                 full: ModelBank,
+                 partition: Tuple[Tuple[Tuple[str, str], ...], ...]):
+        self._plane = plane
+        self._gen = gen
+        self._full = full
+        self.partition = partition
+        self.pairs = full.pairs
+        self.gid = full.gid
+        self.dev_id = full.dev_id
+        self.members = full.members
+        self.n_features = full.n_features
+        self.devices = full.devices
+        # global gid -> (shard, local gid inside that shard's sub-bank)
+        n = len(full.pairs)
+        self._shard_of = np.empty(n, np.int64)
+        self._local_gid = np.empty(n, np.int64)
+        for s, part in enumerate(partition):
+            for j, pair in enumerate(part):
+                g = full.gid[pair]
+                self._shard_of[g] = s
+                self._local_gid[g] = j
+        # last-wave accounting for bench_shard's critical-path metric
+        self.last_wave: Optional[dict] = None
+
+    @property
+    def gen_id(self) -> int:
+        return self._gen.gen_id
+
+    def supports(self, pairs) -> bool:
+        return self._full.supports(pairs)
+
+    def interpolate(self, *args, **kwargs):
+        # phase-2 is per-device and pure numpy: parent-side, bit-identical
+        return self._full.interpolate(*args, **kwargs)
+
+    def execute(self, X: np.ndarray, gids: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        gids = np.asarray(gids, np.int64)
+        plane = self._plane
+        if self._gen.retired:
+            # a wave raced a retire without holding a ref — serve it
+            # parent-side rather than touch workers that may have dropped
+            return self._full.execute(X, gids)
+        shard = self._shard_of[gids]
+        t0 = time.perf_counter()
+        pending: List[Tuple[int, np.ndarray, Future]] = []
+        fallback_rows: List[np.ndarray] = []
+        for s in np.unique(shard):
+            rows = np.nonzero(shard == s)[0]
+            w = plane.workers[s]
+            if not w.alive or not plane.breaker.allow(("shard", int(s))):
+                fallback_rows.append(rows)
+                continue
+            pending.append((int(s), rows, w.submit(
+                ("exec", self._gen.gen_id, X[rows],
+                 self._local_gid[gids[rows]]))))
+        preds = np.full(len(gids), np.nan)
+        failed = np.zeros(len(gids), bool)
+        busy: Dict[int, float] = {}
+        reasons: List[str] = []
+        for rows in fallback_rows:
+            # degraded fallback: the parent answers a dead/quarantined
+            # shard's slice through the full bank — bit-identical, and it
+            # overlaps the live shards' in-flight futures
+            preds[rows] = self._full.execute(X[rows], gids[rows])
+            plane.fallback_rows += len(rows)
+        for s, rows, fut in pending:
+            key = ("shard", s)
+            try:
+                p, b = fut.result()
+            except WorkerDeadError as e:
+                plane.breaker.force_open(key)
+                plane.slice_errors += 1
+                failed[rows] = True
+                reasons.append(f"shard {s}: {e}")
+                continue
+            except Exception as e:
+                plane.breaker.record_failure(key)
+                plane.slice_errors += 1
+                failed[rows] = True
+                reasons.append(f"shard {s}: {type(e).__name__}: {e}")
+                continue
+            plane.breaker.record_success(key)
+            plane.slices += 1
+            preds[rows] = p
+            busy[s] = b
+        self.last_wave = {"wall_s": time.perf_counter() - t0,
+                          "busy_s": busy, "rows": len(gids),
+                          "fallback": sum(len(r) for r in fallback_rows)}
+        if failed.any():
+            raise PartialExecutionError("; ".join(reasons), preds, failed)
+        return preds
+
+
+# ----------------------------------------------------------------------
+# the plane
+# ----------------------------------------------------------------------
+class ShardPlane:
+    """N shard workers plus generation lifecycle. One plane outlives many
+    bank generations (each ``oracle_refreshed`` swap loads a new one);
+    workers outlive generations, and the per-shard breaker state carries
+    across swaps until ``breaker.reset()``."""
+
+    def __init__(self, workers: int = 2, mode: str = "spawn",
+                 breaker: Optional[CircuitBreaker] = None):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        if mode not in ("spawn", "thread"):
+            raise ValueError(f"unknown shard mode {mode!r}")
+        self.mode = mode
+        self.n_workers = workers
+        self.breaker = breaker or CircuitBreaker(threshold=3,
+                                                 cooldown_s=5.0)
+        cls = _ProcessWorker if mode == "spawn" else _ThreadWorker
+        self.workers: List[_BaseWorker] = [cls(i) for i in range(workers)]
+        self._lock = threading.Lock()
+        self._gen_seq = 0
+        self._gens: Dict[int, _GenState] = {}
+        self.loads = 0
+        self.retired = 0
+        self.slices = 0
+        self.slice_errors = 0
+        self.fallback_rows = 0
+        self._closed = False
+
+    # -- generation lifecycle ------------------------------------------
+    def load(self, bank: ModelBank) -> ShardedBank:
+        """Split ``bank`` across the workers and load every live one,
+        all-or-nothing: any load failure drops what loaded, unlinks the
+        shared segments, and re-raises — the caller's swap aborts with
+        the incumbent generation untouched. Dead workers are skipped
+        (their pairs serve through the parent-side fallback)."""
+        partition = partition_pairs(bank.pairs, self.n_workers)
+        sub_banks = bank.split(partition)
+        with self._lock:
+            self._gen_seq += 1
+            gen_id = self._gen_seq
+        segments: list = []
+        loads: List[Tuple[_BaseWorker, Future]] = []
+        try:
+            for w, sub in zip(self.workers, sub_banks):
+                if sub is None or not w.alive:
+                    continue
+                if self.mode == "spawn":
+                    spec, segs = _bank_to_spec(sub)
+                    segments.extend(segs)
+                    loads.append((w, w.submit(("load", gen_id, spec))))
+                else:
+                    loads.append((w, w.submit(("load", gen_id, sub))))
+            for _, fut in loads:
+                fut.result()
+        except Exception:
+            for _, fut in loads:       # settle the rest before dropping
+                try:
+                    fut.result()
+                except Exception:
+                    pass
+            for w, _ in loads:
+                if w.alive:
+                    w.submit(("drop", gen_id))
+            _release_segments(segments, unlink=True)
+            raise
+        gen = _GenState(gen_id, segments)
+        with self._lock:
+            self._gens[gen_id] = gen
+            self.loads += 1
+        return ShardedBank(self, gen, bank, partition)
+
+    def acquire(self, sharded: ShardedBank) -> None:
+        with self._lock:
+            sharded._gen.active += 1
+
+    def release(self, sharded: ShardedBank) -> None:
+        drop = None
+        with self._lock:
+            gen = sharded._gen
+            gen.active -= 1
+            if gen.retired and gen.active <= 0 and not gen.dropped:
+                gen.dropped = True
+                drop = gen
+        if drop is not None:
+            self._drop(drop)
+
+    def retire(self, sharded: Optional[ShardedBank]) -> None:
+        """Mark a generation dead; the drop (worker-side free + segment
+        unlink) waits for in-flight waves holding a ref to drain."""
+        if sharded is None:
+            return
+        drop = None
+        with self._lock:
+            gen = sharded._gen
+            gen.retired = True
+            self.retired += 1
+            if gen.active <= 0 and not gen.dropped:
+                gen.dropped = True
+                drop = gen
+        if drop is not None:
+            self._drop(drop)
+
+    def _drop(self, gen: _GenState) -> None:
+        for w in self.workers:
+            if w.alive:
+                w.submit(("drop", gen.gen_id))
+        _release_segments(gen.segments, unlink=True)
+        with self._lock:
+            self._gens.pop(gen.gen_id, None)
+
+    # -- control -------------------------------------------------------
+    def kill_worker(self, index: int) -> None:
+        """Test/chaos hook: hard-kill one worker."""
+        self.workers[index].kill()
+
+    def alive_workers(self) -> int:
+        return sum(1 for w in self.workers if w.alive)
+
+    def summary(self) -> dict:
+        with self._lock:
+            gens = sorted(self._gens)
+        return {
+            "mode": self.mode,
+            "workers": self.n_workers,
+            "alive": self.alive_workers(),
+            "generations": gens,
+            "loads": self.loads,
+            "retired": self.retired,
+            "slices": self.slices,
+            "slice_errors": self.slice_errors,
+            "fallback_rows": self.fallback_rows,
+            "breaker_open": [list(k) for k in self.breaker.open_keys()],
+        }
+
+    def close(self) -> None:
+        """Tear the plane down: exit workers, join threads/processes,
+        unlink every surviving generation's segments."""
+        if self._closed:
+            return
+        self._closed = True
+        for w in self.workers:
+            try:
+                w.close()
+            except Exception:
+                pass
+        with self._lock:
+            gens = list(self._gens.values())
+            self._gens.clear()
+        for gen in gens:
+            _release_segments(gen.segments, unlink=True)
+
+    def __enter__(self) -> "ShardPlane":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -73,10 +73,18 @@ from repro.serve.resilience import LEGACY_RETRY, RetryPolicy
 PROTOCOL = "profet/1"
 
 # HTTP status per error class; unlisted ApiErrors fall back to 400.
+# ShardExecutionError maps to 500 like any execution failure — but it is
+# scoped to the requests whose rows rode the failed shard slice, never
+# the whole wave.
 _STATUS = {"OverloadedError": 503, "MalformedRequestError": 400,
            "UnknownDeviceError": 404, "UnsupportedRequestError": 422,
            "InvalidWorkloadError": 400, "ExecutionError": 500,
+           "ShardExecutionError": 500,
            "DeadlineExceededError": 504, "CircuitOpenError": 503}
+
+#: Content-Type of the binary columnar /measure body (see
+#: ``measure_binary_from_rows`` for the layout).
+COLUMNAR_CONTENT_TYPE = "application/x-profet-columnar"
 
 
 # ----------------------------------------------------------------------
@@ -306,6 +314,15 @@ class TransportServer:
     # ------------------------------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        """Pipelined connection handler: the read loop turns every request
+        into a dispatch task the moment its bytes arrive (no waiting for
+        the previous response), and :meth:`_write_loop` writes responses
+        strictly in request order. A client that fires K ``/measure``
+        batches back-to-back pays ~one round-trip for all K instead of K
+        — the ROADMAP firehose gap — while slow endpoints ahead in the
+        pipeline never reorder responses behind them."""
+        q: "asyncio.Queue" = asyncio.Queue()
+        wtask = asyncio.create_task(self._write_loop(q, writer))
         try:
             while True:
                 parsed = await self._read_request(reader)
@@ -313,46 +330,84 @@ class TransportServer:
                     break
                 method, path, headers, body, framing_ok = parsed
                 if not framing_ok:
-                    status, payload = 400, {
+                    await q.put((None, (400, {
                         "ok": False,
                         "error": {"type": "MalformedRequestError",
-                                  "message": "unparseable HTTP framing"}}
-                    keep = False
-                else:
-                    keep = headers.get("connection", "").lower() != "close"
-                    status, payload = await self._dispatch(method, path,
-                                                           headers, body)
-                data = json.dumps(payload).encode()
-                head = (b"HTTP/1.1 %d %s\r\n"
-                        b"Content-Type: application/json\r\n"
-                        b"Content-Length: %d\r\n"
-                        b"X-Profet-Protocol: %s\r\n"
-                        b"Connection: %s\r\n\r\n"
-                        % (status, _reason(status).encode(), len(data),
-                           PROTOCOL.encode(),
-                           b"keep-alive" if keep else b"close"))
-                if faults_mod.should_drop(self._faults,
-                                          faults_mod.SITE_RESPONSE):
-                    # injected socket reset mid-response: the request WAS
-                    # executed, but the client sees a truncated response
-                    # and a dead connection — the retry-safety scenario
-                    writer.write(head + data[:max(1, len(data) // 2)])
-                    await writer.drain()
+                                  "message": "unparseable HTTP framing"}}),
+                        False))
                     break
-                writer.write(head)
-                writer.write(data)
-                await writer.drain()
+                keep = headers.get("connection", "").lower() != "close"
+                task = asyncio.create_task(
+                    self._dispatch(method, path, headers, body))
+                await q.put((task, None, keep))
                 if not keep:
                     break
         except (ConnectionError, asyncio.IncompleteReadError,
                 asyncio.LimitOverrunError):
             pass
         finally:
+            await q.put(None)
+            try:
+                await wtask
+            except Exception:
+                pass
             try:
                 writer.close()
                 await writer.wait_closed()
             except (ConnectionError, OSError):
                 pass
+
+    async def _write_loop(self, q: "asyncio.Queue",
+                          writer: asyncio.StreamWriter) -> None:
+        """Drain the response queue FIFO. After the connection is torn
+        down (Connection: close, an injected drop, or a socket error) the
+        loop keeps *settling* remaining dispatch tasks — their requests
+        were admitted and will execute — without writing."""
+        closing = False
+        while True:
+            item = await q.get()
+            if item is None:
+                return
+            task, ready, keep = item
+            if task is not None:
+                try:
+                    status, payload = await task
+                except Exception as e:
+                    status, payload = _error_payload(e)
+            else:
+                status, payload = ready
+            if closing:
+                continue
+            data = json.dumps(payload).encode()
+            head = (b"HTTP/1.1 %d %s\r\n"
+                    b"Content-Type: application/json\r\n"
+                    b"Content-Length: %d\r\n"
+                    b"X-Profet-Protocol: %s\r\n"
+                    b"Connection: %s\r\n\r\n"
+                    % (status, _reason(status).encode(), len(data),
+                       PROTOCOL.encode(),
+                       b"keep-alive" if keep else b"close"))
+            try:
+                if faults_mod.should_drop(self._faults,
+                                          faults_mod.SITE_RESPONSE):
+                    # injected socket reset mid-response: the request WAS
+                    # executed, but the client sees a truncated response
+                    # and a dead connection — the retry-safety scenario.
+                    # Closing here also EOFs the read loop.
+                    writer.write(head + data[:max(1, len(data) // 2)])
+                    await writer.drain()
+                    writer.close()
+                    closing = True
+                    continue
+                writer.write(head)
+                writer.write(data)
+                await writer.drain()
+            except (ConnectionError, OSError):
+                closing = True
+                continue
+            if not keep:
+                writer.close()
+                closing = True
 
     async def _read_request(self, reader: asyncio.StreamReader):
         """One HTTP request off the stream. Returns None on clean EOF,
@@ -400,6 +455,13 @@ class TransportServer:
         if open_pairs:
             reasons.append("circuit open: " + ", ".join(
                 f"{a}->{t}" for a, t in sorted(open_pairs)))
+        plane = getattr(self.service, "shard_plane", None)
+        if plane is not None:
+            dead = plane.n_workers - plane.alive_workers()
+            if dead:
+                reasons.append(
+                    f"{dead}/{plane.n_workers} shard workers dead; their "
+                    "slices serve through the single-worker fallback")
         return ("degraded" if reasons else "ok"), reasons
 
     async def _dispatch(self, method: str, path: str,
@@ -428,6 +490,9 @@ class TransportServer:
                        "max_queue": self.max_queue}
                 if self.calibrator is not None:
                     out["calibration"] = self.calibrator.summary()
+                plane = getattr(self.service, "shard_plane", None)
+                if plane is not None:
+                    out["shard"] = plane.summary()
                 return 200, out
             deadline = _deadline_from_headers(headers)
             if path == "/predict":
@@ -445,7 +510,7 @@ class TransportServer:
             if path == "/measure":
                 if method != "POST":
                     return 405, _method_not_allowed(method)
-                return self._measure(_decode_json(body))
+                return self._measure(headers, body)
             return 404, {"ok": False,
                          "error": {"type": "NotFound",
                                    "message": f"no route {path!r}"}}
@@ -541,13 +606,21 @@ class TransportServer:
         return 200, {"ok": True,
                      "rows": [result_to_dict(r) for r in rows]}
 
-    def _measure(self, payload: Any) -> Tuple[int, Dict[str, Any]]:
+    def _measure(self, headers: Dict[str, str],
+                 body: bytes) -> Tuple[int, Dict[str, Any]]:
         if self.calibrator is None:
             raise UnsupportedRequestError(
                 "this server runs without a calibrator; /measure is "
                 "unavailable")
-        accepted, dropped = self.calibrator.ingest_rows(
-            measure_rows_from_columnar(payload))
+        ctype = headers.get("content-type", "").split(";")[0].strip().lower()
+        if ctype == COLUMNAR_CONTENT_TYPE:
+            # hot ingest path: length-prefixed binary arrays, decoded with
+            # np.frombuffer — no JSON parse, no per-row Python objects
+            # until the calibrator's row dicts
+            rows = measure_rows_from_binary(body)
+        else:
+            rows = measure_rows_from_columnar(_decode_json(body))
+        accepted, dropped = self.calibrator.ingest_rows(rows)
         return 200, {"ok": True, "accepted": accepted, "dropped": dropped}
 
 
@@ -610,6 +683,148 @@ def measure_columnar_from_rows(rows: Sequence[Dict[str, Any]]
     body["predicted_ms"] = [r.get("predicted_ms") for r in rows]
     body["epoch"] = [r.get("epoch") for r in rows]
     return body
+
+
+# binary columnar /measure wire format (Content-Type:
+# application/x-profet-columnar) — the zero-JSON hot ingest path:
+#
+#   magic  b"PFC1"
+#   u32    n                      (row count, little-endian)
+#   u8     flags                  (bit0: predicted_ms, bit1: epoch)
+#   str    anchor, target, model  (each: u32 lens[n] + concat utf-8;
+#                                  len 0xFFFFFFFF encodes null)
+#   i64    batch[n], pix[n]
+#   f64    latency_ms[n]
+#   f64    predicted_ms[n]        (if flags bit0; NaN encodes null)
+#   str    epoch                  (if flags bit1; nullable)
+#
+# Every array decodes with one np.frombuffer slice; the only per-row
+# Python work is assembling the calibrator's row dicts.
+
+_PFC_MAGIC = b"PFC1"
+_PFC_NULL_LEN = 0xFFFFFFFF
+
+
+def _pfc_pack_str(col: Sequence[Optional[str]]) -> bytes:
+    lens = np.empty(len(col), np.uint32)
+    chunks = []
+    for i, s in enumerate(col):
+        if s is None:
+            lens[i] = _PFC_NULL_LEN
+        else:
+            b = str(s).encode("utf-8")
+            lens[i] = len(b)
+            chunks.append(b)
+    return lens.tobytes() + b"".join(chunks)
+
+
+class _PfcReader:
+    """Cursor over a binary columnar body; every read is bounds-checked
+    so a truncated or lying body raises a typed 400, never an IndexError
+    deep inside numpy."""
+
+    def __init__(self, body: bytes):
+        self.body = body
+        self.off = 0
+
+    def take(self, nbytes: int) -> memoryview:
+        end = self.off + nbytes
+        if end > len(self.body):
+            raise MalformedRequestError(
+                f"truncated columnar body: needed {end} bytes, "
+                f"have {len(self.body)}")
+        view = memoryview(self.body)[self.off:end]
+        self.off = end
+        return view
+
+    def array(self, dtype: str, n: int) -> np.ndarray:
+        dt = np.dtype(dtype)
+        return np.frombuffer(self.take(dt.itemsize * n), dt)
+
+    def strings(self, n: int) -> List[Optional[str]]:
+        lens = self.array("<u4", n)
+        total = int(lens[lens != _PFC_NULL_LEN].sum()) if n else 0
+        blob = self.take(total)
+        out: List[Optional[str]] = []
+        pos = 0
+        try:
+            for ln in lens:
+                if ln == _PFC_NULL_LEN:
+                    out.append(None)
+                    continue
+                out.append(bytes(blob[pos:pos + ln]).decode("utf-8"))
+                pos += ln
+        except UnicodeDecodeError as e:
+            raise MalformedRequestError(
+                f"bad utf-8 in columnar string column: {e}") from e
+        return out
+
+
+def measure_binary_from_rows(rows: Sequence[Dict[str, Any]]) -> bytes:
+    """Encode per-observation rows as the binary columnar body."""
+    n = len(rows)
+    has_pred = any(r.get("predicted_ms") is not None for r in rows)
+    has_epoch = any(r.get("epoch") is not None for r in rows)
+    flags = (1 if has_pred else 0) | (2 if has_epoch else 0)
+    parts = [_PFC_MAGIC,
+             np.uint32(n).tobytes(), np.uint8(flags).tobytes()]
+    try:
+        for f in ("anchor", "target", "model"):
+            parts.append(_pfc_pack_str([r[f] for r in rows]))
+        for f in ("batch", "pix"):
+            parts.append(np.array([int(r[f]) for r in rows],
+                                  "<i8").tobytes())
+        parts.append(np.array([float(r["latency_ms"]) for r in rows],
+                              "<f8").tobytes())
+    except (KeyError, TypeError, ValueError) as e:
+        raise MalformedRequestError(f"bad measure row: {e!r}") from e
+    if has_pred:
+        parts.append(np.array(
+            [np.nan if r.get("predicted_ms") is None
+             else float(r["predicted_ms"]) for r in rows], "<f8").tobytes())
+    if has_epoch:
+        parts.append(_pfc_pack_str([r.get("epoch") for r in rows]))
+    return b"".join(parts)
+
+
+def measure_rows_from_binary(body: bytes) -> List[Dict[str, Any]]:
+    """Decode a binary columnar body into the same per-observation rows
+    :func:`measure_rows_from_columnar` yields — the calibrator cannot
+    tell which codec a batch arrived through."""
+    if body[:4] != _PFC_MAGIC:
+        raise MalformedRequestError(
+            f"bad columnar magic {body[:4]!r} (expected {_PFC_MAGIC!r})")
+    r = _PfcReader(body)
+    r.off = 4
+    n = int(r.array("<u4", 1)[0])
+    flags = int(r.array("<u1", 1)[0])
+    cols: Dict[str, Any] = {}
+    for f in ("anchor", "target", "model"):
+        col = r.strings(n)
+        if any(s is None for s in col):
+            raise MalformedRequestError(
+                f"measure field {f!r} cannot carry nulls")
+        cols[f] = col
+    cols["batch"] = r.array("<i8", n)
+    cols["pix"] = r.array("<i8", n)
+    cols["latency_ms"] = r.array("<f8", n)
+    pred = r.array("<f8", n) if flags & 1 else None
+    epoch = r.strings(n) if flags & 2 else None
+    if r.off != len(body):
+        raise MalformedRequestError(
+            f"trailing bytes in columnar body ({len(body) - r.off})")
+    rows = []
+    for i in range(n):
+        row = {"anchor": cols["anchor"][i], "target": cols["target"][i],
+               "model": cols["model"][i], "batch": int(cols["batch"][i]),
+               "pix": int(cols["pix"][i]),
+               "latency_ms": float(cols["latency_ms"][i])}
+        if pred is not None and not np.isnan(pred[i]):
+            row["predicted_ms"] = float(pred[i])
+        if epoch is not None and epoch[i] is not None:
+            row["epoch"] = epoch[i]
+        rows.append(row)
+    return rows
 
 
 def _deadline_from_headers(headers: Dict[str, str]) -> Optional[float]:
@@ -745,6 +960,15 @@ class Client:
         self.retry = retry if retry is not None else LEGACY_RETRY
         self._rng = self.retry.rng()
         self._sock: Optional[socket.socket] = None
+        self._rbuf = b""      # bytes past the last parsed response
+        # connection-level pipelining state: tags of requests whose
+        # responses have not been read yet, and the (tag, status, payload)
+        # triples collected when a later call drains them
+        self._pending: List[Any] = []
+        self._collected: List[Tuple[Any, int, Dict[str, Any]]] = []
+        # /measure codec negotiation: None = not yet negotiated, True =
+        # server accepted the binary columnar body, False = JSON only
+        self._measure_binary: Optional[bool] = None
 
     def _connect(self) -> socket.socket:
         if self._sock is None:
@@ -758,6 +982,8 @@ class Client:
                 self._sock.close()
             finally:
                 self._sock = None
+        self._rbuf = b""
+        self._pending.clear()
 
     def __enter__(self) -> "Client":
         return self
@@ -766,25 +992,84 @@ class Client:
         self.close()
 
     # -- low level ------------------------------------------------------
-    def request(self, method: str, path: str, payload: Any = None,
-                idempotent: bool = True,
-                headers: Optional[Dict[str, str]] = None
-                ) -> Tuple[int, Dict[str, Any]]:
-        body = b"" if payload is None else json.dumps(payload).encode()
+    def _encode_request(self, method: str, path: str, payload: Any,
+                        headers: Optional[Dict[str, str]],
+                        raw_body: Optional[bytes],
+                        content_type: str) -> bytes:
+        if raw_body is not None:
+            body = raw_body
+        else:
+            body = b"" if payload is None else json.dumps(payload).encode()
         extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
-        head = (f"{method} {path} HTTP/1.1\r\n"
+        return (f"{method} {path} HTTP/1.1\r\n"
                 f"Host: {self.host}:{self.port}\r\n"
-                f"Content-Type: application/json\r\n"
+                f"Content-Type: {content_type}\r\n"
                 f"Content-Length: {len(body)}\r\n"
                 f"{extra}"
-                f"Connection: keep-alive\r\n\r\n").encode()
+                f"Connection: keep-alive\r\n\r\n").encode() + body
+
+    def send_pipelined(self, method: str, path: str, payload: Any = None,
+                       *, headers: Optional[Dict[str, str]] = None,
+                       raw_body: Optional[bytes] = None,
+                       content_type: str = "application/json",
+                       tag: Any = None) -> None:
+        """Fire a request WITHOUT reading its response — connection-level
+        pipelining. The response is read later, in send order, by
+        :meth:`drain` (or implicitly by the next synchronous
+        :meth:`request`) and parked in :meth:`take_collected` under
+        ``tag``. Pipelined sends never blind-retry: by the time a failure
+        is observed the bytes are long on the wire."""
+        data = self._encode_request(method, path, payload, headers,
+                                    raw_body, content_type)
+        sock = self._connect()
+        try:
+            sock.sendall(data)
+        except (ConnectionError, socket.timeout, OSError):
+            self.close()
+            raise
+        self._pending.append(tag)
+
+    def drain(self) -> List[Tuple[Any, int, Dict[str, Any]]]:
+        """Read every pipelined response still in flight (send order),
+        append them to the collected list, and return the newly drained
+        ``(tag, status, payload)`` triples."""
+        out: List[Tuple[Any, int, Dict[str, Any]]] = []
+        while self._pending:
+            tag = self._pending[0]
+            try:
+                status, payload = self._read_response(self._connect())
+            except (ConnectionError, socket.timeout, OSError):
+                self.close()
+                raise
+            self._pending.pop(0)
+            out.append((tag, status, payload))
+        self._collected.extend(out)
+        return out
+
+    def take_collected(self) -> List[Tuple[Any, int, Dict[str, Any]]]:
+        """Return and clear every pipelined response drained so far."""
+        out, self._collected = self._collected, []
+        return out
+
+    def request(self, method: str, path: str, payload: Any = None,
+                idempotent: bool = True,
+                headers: Optional[Dict[str, str]] = None,
+                raw_body: Optional[bytes] = None,
+                content_type: str = "application/json"
+                ) -> Tuple[int, Dict[str, Any]]:
+        if self._pending:
+            # responses arrive in send order: anything pipelined ahead of
+            # this synchronous call must be read (and parked) first
+            self.drain()
+        data = self._encode_request(method, path, payload, headers,
+                                    raw_body, content_type)
         policy = self.retry
         attempt = 1
         while True:
             sent = False
             try:
                 sock = self._connect()
-                sock.sendall(head + body)
+                sock.sendall(data)
                 sent = True
                 status, out = self._read_response(sock)
             except (ConnectionError, socket.timeout, OSError):
@@ -807,7 +1092,11 @@ class Client:
             return status, out
 
     def _read_response(self, sock: socket.socket) -> Tuple[int, Dict]:
-        buf = b""
+        # pipelined responses coalesce into shared TCP segments, so one
+        # recv routinely delivers the tail of this response plus the head
+        # of the next — the leftover must survive in self._rbuf for the
+        # next read instead of dying with a local buffer
+        buf = self._rbuf
         while b"\r\n\r\n" not in buf:
             chunk = sock.recv(65536)
             if not chunk:
@@ -826,6 +1115,7 @@ class Client:
             if not chunk:
                 raise ConnectionError("server closed mid-body")
             rest += chunk
+        self._rbuf = rest[n:]
         if headers.get("connection", "").lower() == "close":
             self.close()
         return status, json.loads(rest[:n].decode("utf-8"))
@@ -833,9 +1123,13 @@ class Client:
     # -- typed endpoints ------------------------------------------------
     def _checked(self, method: str, path: str, payload: Any = None,
                  idempotent: bool = True,
-                 headers: Optional[Dict[str, str]] = None) -> Dict:
+                 headers: Optional[Dict[str, str]] = None,
+                 raw_body: Optional[bytes] = None,
+                 content_type: str = "application/json") -> Dict:
         status, out = self.request(method, path, payload,
-                                   idempotent=idempotent, headers=headers)
+                                   idempotent=idempotent, headers=headers,
+                                   raw_body=raw_body,
+                                   content_type=content_type)
         if status != 200 or not out.get("ok", False):
             raise TransportError(status, out.get("error", {}))
         return out
@@ -868,13 +1162,52 @@ class Client:
         latency_ms (+ optional predicted_ms); sent as ONE columnar body.
         Returns ``{"accepted": n, "dropped": d}``.
 
+        Codec negotiation: the first batch goes out binary columnar
+        (``application/x-profet-columnar``); a 400/415 means the server
+        rejected the body *before ingesting anything*, so falling back to
+        the JSON codec (and remembering it) is double-ingest safe. The
+        settled codec then also drives :meth:`measure_pipelined`.
+
         Non-idempotent: every delivery ingests the rows again, so a lost
         *response* (send completed, read failed) raises instead of
         re-sending — see :meth:`request`."""
+        if self._measure_binary is not False:
+            try:
+                out = self._checked(
+                    "POST", "/measure", idempotent=False,
+                    raw_body=measure_binary_from_rows(rows),
+                    content_type=COLUMNAR_CONTENT_TYPE)
+                self._measure_binary = True
+                return {"accepted": out["accepted"],
+                        "dropped": out["dropped"]}
+            except TransportError as e:
+                if self._measure_binary or e.status not in (400, 415):
+                    raise
+                self._measure_binary = False
         out = self._checked("POST", "/measure",
                             measure_columnar_from_rows(rows),
                             idempotent=False)
         return {"accepted": out["accepted"], "dropped": out["dropped"]}
+
+    def measure_pipelined(self, rows: Sequence[Dict[str, Any]]
+                          ) -> Optional[Dict[str, Any]]:
+        """Fire a /measure batch without waiting for its response (see
+        :meth:`send_pipelined`; the ack lands in :meth:`take_collected`
+        under the tag ``"measure"``). The first batch on a fresh client
+        negotiates the codec synchronously and returns its ack;
+        subsequent calls return None."""
+        if self._measure_binary is None:
+            return self.measure(rows)
+        if self._measure_binary:
+            self.send_pipelined("POST", "/measure",
+                                raw_body=measure_binary_from_rows(rows),
+                                content_type=COLUMNAR_CONTENT_TYPE,
+                                tag="measure")
+        else:
+            self.send_pipelined("POST", "/measure",
+                                payload=measure_columnar_from_rows(rows),
+                                tag="measure")
+        return None
 
     def healthz(self) -> Dict[str, Any]:
         return self._checked("GET", "/healthz")
@@ -908,20 +1241,41 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
     errors: List[Tuple[int, str]] = []
     lat_ms: List[float] = []
     lock = threading.Lock()
-    measured = {"reported": 0, "dropped": 0}
+    measured = {"reported": 0, "dropped": 0, "pipelined": 0}
+
+    def account(out: Optional[Dict[str, Any]]) -> None:
+        if out is None:
+            return
+        with lock:
+            measured["reported"] += out["accepted"]
+            measured["dropped"] += out["dropped"]
 
     def flush(c: Client, rows: List[Dict[str, Any]]) -> None:
+        """Fire the batch pipelined (no round-trip on the hot loop): the
+        first batch negotiates the codec synchronously; later acks are
+        read opportunistically whenever the connection next turns around
+        and accounted from take_collected at the end."""
         if not rows:
             return
         try:
-            out = c.measure(rows)
+            out = c.measure_pipelined(rows)
         except (TransportError, ConnectionError, OSError):
             return
         finally:
             rows.clear()
-        with lock:
-            measured["reported"] += out["accepted"]
-            measured["dropped"] += out["dropped"]
+        if out is None:
+            with lock:
+                measured["pipelined"] += 1
+        account(out)
+
+    def settle(c: Client) -> None:
+        try:
+            c.drain()
+        except (ConnectionError, OSError):
+            pass
+        for tag, status, payload in c.take_collected():
+            if tag == "measure" and status == 200 and payload.get("ok"):
+                account(payload)
 
     def worker(offset: int) -> None:
         rows: List[Dict[str, Any]] = []
@@ -953,6 +1307,7 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
                 if len(rows) >= max(1, int(measure_every)):
                     flush(c, rows)
             flush(c, rows)
+            settle(c)
 
     threads = [threading.Thread(target=worker, args=(k,))
                for k in range(max(1, int(clients)))]
@@ -968,6 +1323,7 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
             "errors": errors, "results": results,
             "measured": measured["reported"],
             "measure_dropped": measured["dropped"],
+            "measure_pipelined": measured["pipelined"],
             "client_p50_ms": float(np.nanpercentile(arr, 50)),
             "client_p99_ms": float(np.nanpercentile(arr, 99)),
             "latencies_ms": lat_ms,

@@ -420,3 +420,67 @@ def test_summary_exports_control_plane(oracle):
     ])
     assert (accepted, dropped) == (1, 2)
     assert cal.stats.dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# scheduled refits (wall-clock cadence, no drift required)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_refit_launches_on_interval(oracle):
+    """With ``refit_interval_s`` set, an idle controller (no drift) folds
+    the buffered ground truth back into a candidate on the wall-clock
+    cadence — through the same shadow-canary path as a drift refit."""
+    svc = LatencyService(oracle, warmup=False)
+    now = [0.0]
+    cfg = CalibrationConfig(refit_interval_s=60.0, min_refit_obs=4,
+                            min_obs=6, trigger_mape=50.0)
+    cal = Calibrator(svc, cfg, clock=lambda: now[0])
+    for k in range(8):
+        cal.ingest("T4", "V100", ("LeNet5", 16, 32), 10.0 + 0.01 * k,
+                   predicted_ms=10.0, epoch=svc.epoch)
+    # interval not elapsed: stays idle, nothing launched
+    assert cal.step() == STATE_IDLE
+    assert cal.stats.refits == 0 and cal.stats.scheduled_refits == 0
+    now[0] = 61.0
+    assert cal.step() == STATE_SHADOW
+    assert cal.stats.refits == 1 and cal.stats.scheduled_refits == 1
+    assert cal.stats.drift_events == 0
+    assert "scheduled refit candidate" in cal.stats.events[-1]
+
+
+def test_scheduled_refit_waits_for_observations(oracle):
+    """The cadence never launches an empty refit: with no pair holding
+    ``min_refit_obs`` observations the timer re-arms and the controller
+    stays idle (no refit attempt, no cooldown burned)."""
+    svc = LatencyService(oracle, warmup=False)
+    now = [0.0]
+    cfg = CalibrationConfig(refit_interval_s=60.0, min_refit_obs=4)
+    cal = Calibrator(svc, cfg, clock=lambda: now[0])
+    cal.ingest("T4", "V100", ("LeNet5", 16, 32), 10.0, predicted_ms=10.0,
+               epoch=svc.epoch)
+    now[0] = 61.0
+    assert cal.step() == STATE_IDLE
+    assert cal.stats.refits == 0 and cal.stats.scheduled_refits == 0
+    # the timer re-armed: the next interval can fire once data arrives
+    for k in range(4):
+        cal.ingest("T4", "V100", ("AlexNet", 16, 32), 10.0 + 0.01 * k,
+                   predicted_ms=10.0, epoch=svc.epoch)
+    now[0] = 100.0
+    assert cal.step() == STATE_IDLE        # 61 + 60 not reached yet
+    now[0] = 122.0
+    assert cal.step() == STATE_SHADOW
+    assert cal.stats.scheduled_refits == 1
+
+
+def test_scheduled_refit_disabled_by_default(oracle):
+    svc = LatencyService(oracle, warmup=False)
+    now = [0.0]
+    cal = Calibrator(svc, CAL, clock=lambda: now[0])
+    for k in range(12):
+        cal.ingest("T4", "V100", ("LeNet5", 16, 32), 10.0 + 0.01 * k,
+                   predicted_ms=10.0, epoch=svc.epoch)
+    now[0] = 1e9
+    assert cal.step() == STATE_IDLE
+    assert cal.stats.refits == 0 and cal.stats.scheduled_refits == 0
+    assert "scheduled_refits" in cal.summary()

@@ -1,0 +1,354 @@
+"""Multi-worker sharded wave execution (``repro.serve.shard``): group-axis
+bank splits, scatter/gather bit-identity, row-order reassembly under
+shuffled completion, mid-wave worker death (typed per-slice errors, pump
+survives, degraded fallback), epoch-consistent generation swaps, and the
+all-or-nothing load contract."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import planner
+from repro.api.types import PartialExecutionError, ShardExecutionError
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.serve import (BackgroundServer, Client, LatencyService,
+                         ShardPlane, TransportError, synthetic_requests)
+
+# float64-only members: sharded answers must be bit-identical
+CFG = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    ds = workloads.generate(devices=("T4", "V100", "K80"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    return api.LatencyOracle.fit(ds, CFG)
+
+
+@pytest.fixture(scope="module")
+def fresh_oracle(oracle):
+    cfg = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=7)
+    return api.LatencyOracle.fit(oracle.dataset, cfg)
+
+
+@pytest.fixture(scope="module")
+def stream(oracle):
+    return synthetic_requests(oracle, n=120, seed=3)
+
+
+def _wave_inputs(oracle, n_rows=40, seed=0):
+    """A (X, gids) wave touching every group of the bank."""
+    bank = oracle.bank
+    rng = np.random.default_rng(seed)
+    cases = oracle.dataset.cases
+    gids = np.concatenate([np.arange(len(bank.pairs)),
+                           rng.integers(0, len(bank.pairs),
+                                        n_rows - len(bank.pairs))])
+    X = np.stack([oracle.feature_matrix(
+        bank.pairs[g][0], [cases[rng.integers(len(cases))]])[0]
+        for g in gids])
+    return X, gids.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# partitioning + split
+# ---------------------------------------------------------------------------
+
+
+def test_partition_pairs_deterministic_and_balanced(oracle):
+    pairs = oracle.bank.pairs
+    for n in (1, 2, 3, 4, len(pairs), len(pairs) + 3):
+        parts = planner.partition_pairs(pairs, n)
+        assert parts == planner.partition_pairs(list(pairs), n)
+        flat = [p for part in parts for p in part]
+        assert sorted(flat) == sorted(pairs)          # exact cover
+        sizes = [len(part) for part in parts]
+        assert max(sizes) - min(sizes) <= 1           # balanced
+        for s, part in enumerate(parts):              # routing agrees
+            for p in part:
+                assert planner.shard_of_pair(p, pairs, n) == s
+    with pytest.raises(ValueError):
+        planner.partition_pairs(pairs, 0)
+    with pytest.raises(api.UnknownDeviceError):
+        planner.shard_of_pair(("T4", "TPUv9"), pairs, 2)
+
+
+def test_bank_split_bit_identity(oracle):
+    bank = oracle.bank
+    parts = planner.partition_pairs(bank.pairs, 3)
+    subs = bank.split(parts)
+    X, gids = _wave_inputs(oracle)
+    want = bank.execute(X, gids)
+    for part, sub in zip(parts, subs):
+        assert sub is not None
+        for j, pair in enumerate(part):
+            rows = np.nonzero(gids == bank.gid[pair])[0]
+            if not len(rows):
+                continue
+            got = sub.execute(X[rows], np.full(len(rows), j, np.int64))
+            np.testing.assert_array_equal(got, want[rows])
+
+
+def test_bank_split_empty_and_unknown(oracle):
+    bank = oracle.bank
+    n = len(bank.pairs)
+    subs = bank.split(planner.partition_pairs(bank.pairs, n + 2))
+    assert sum(s is None for s in subs) == 2          # empty shards
+    from repro.api.bank import BankUnsupportedError
+    with pytest.raises(BankUnsupportedError):
+        bank.split(((("T4", "TPUv9"),),))
+
+
+# ---------------------------------------------------------------------------
+# scatter/gather
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_execute_bit_identical_thread(oracle):
+    X, gids = _wave_inputs(oracle, n_rows=64, seed=1)
+    want = oracle.bank.execute(X, gids)
+    with ShardPlane(workers=3, mode="thread") as plane:
+        sharded = plane.load(oracle.bank)
+        np.testing.assert_array_equal(sharded.execute(X, gids), want)
+        assert plane.slices == 3
+        lw = sharded.last_wave
+        assert lw["rows"] == 64 and set(lw["busy_s"]) == {0, 1, 2}
+
+
+def test_row_order_reassembly_under_shuffled_completion(oracle):
+    """Shards finishing out of submission order must still land every
+    prediction on its own row: the earliest-submitted shard is forced to
+    finish last (and vice versa) via the thread-worker delay hook."""
+    X, gids = _wave_inputs(oracle, n_rows=60, seed=2)
+    want = oracle.bank.execute(X, gids)
+    with ShardPlane(workers=3, mode="thread") as plane:
+        for w, d in zip(plane.workers, (0.15, 0.05, 0.0)):
+            w.delay_s = d                      # completion order reversed
+        sharded = plane.load(oracle.bank)
+        np.testing.assert_array_equal(sharded.execute(X, gids), want)
+
+
+def test_spawn_plane_bit_identical(oracle):
+    """Real processes + shared-memory segments (the production mode)."""
+    X, gids = _wave_inputs(oracle, n_rows=48, seed=4)
+    want = oracle.bank.execute(X, gids)
+    with ShardPlane(workers=2, mode="spawn") as plane:
+        sharded = plane.load(oracle.bank)
+        np.testing.assert_array_equal(sharded.execute(X, gids), want)
+        np.testing.assert_array_equal(sharded.execute(X, gids), want)
+        assert plane.slices == 4
+        plane.retire(sharded)
+        assert plane.summary()["generations"] == []
+
+
+# ---------------------------------------------------------------------------
+# worker death: partial waves, typed errors, degraded fallback
+# ---------------------------------------------------------------------------
+
+
+def test_worker_death_mid_wave_fails_only_its_slice(oracle):
+    X, gids = _wave_inputs(oracle, n_rows=50, seed=5)
+    want = oracle.bank.execute(X, gids)
+    with ShardPlane(workers=2, mode="thread") as plane:
+        victim = plane.workers[1]
+        victim.delay_s = 0.3                  # alive-check runs post-delay
+        sharded = plane.load(oracle.bank)
+        killer = threading.Timer(0.05, victim.kill)
+        killer.start()
+        with pytest.raises(PartialExecutionError) as ei:
+            sharded.execute(X, gids)
+        killer.join()
+        dead_rows = np.isin(gids, [oracle.bank.gid[p]
+                                   for p in sharded.partition[1]])
+        # exactly the dead shard's rows failed; the rest already answered
+        np.testing.assert_array_equal(ei.value.failed_rows, dead_rows)
+        np.testing.assert_array_equal(ei.value.preds[~dead_rows],
+                                      want[~dead_rows])
+        assert plane.breaker.state(("shard", 1)) == "open"
+        # next wave: dead shard serves parent-side, bit-identical
+        np.testing.assert_array_equal(sharded.execute(X, gids), want)
+        assert plane.fallback_rows == int(dead_rows.sum())
+        assert plane.alive_workers() == 1
+
+
+def test_service_slice_error_typed_and_pump_survives(oracle, stream):
+    plane = ShardPlane(workers=2, mode="thread")
+    svc = LatencyService(oracle, max_wave=64, shard_plane=plane)
+    try:
+        victim = plane.workers[0]
+        victim.delay_s = 0.3
+        srs = [svc.submit(r) for r in stream[:40]]
+        killer = threading.Timer(0.05, victim.kill)
+        killer.start()
+        svc.run()
+        killer.join()
+        dead_pairs = set(svc._shard_gen.partition[0])
+        died = [sr for sr in srs if sr.error is not None]
+        assert died and all(isinstance(sr.error, ShardExecutionError)
+                            for sr in died)
+        # every errored request rides the dead shard; survivors answered
+        for sr in srs:
+            if sr.error is None:
+                assert sr.result is not None
+        assert svc.stats.shard_slice_errors == len(died)
+        # the pump survives: the same stream resubmitted now succeeds
+        # through the degraded parent-side fallback, bit-identically
+        want = {i: r.latency_ms
+                for i, r in enumerate(oracle.predict_many(stream[:40]))}
+        redo = [svc.submit(r) for r in stream[:40]]
+        svc.run()
+        for i, sr in enumerate(redo):
+            assert sr.error is None
+            assert sr.result.latency_ms == want[i]
+        assert svc.stats.shard_fallback_rows > 0
+        assert dead_pairs  # sanity: shard 0 actually owned pairs
+    finally:
+        plane.close()
+
+
+def test_transport_slice_error_is_typed_500(oracle):
+    """Over HTTP: a mid-wave worker death turns into a 500
+    ShardExecutionError for the riding requests only — the connection,
+    the wave pump, and every other slice keep working."""
+    plane = ShardPlane(workers=2, mode="thread")
+    svc = LatencyService(oracle, max_wave=32, shard_plane=plane)
+    bg = BackgroundServer(svc, host="127.0.0.1", port=0).start()
+    try:
+        part = svc._shard_gen.partition
+        dead_pair, live_pair = part[1][0], part[0][0]
+        case = oracle.dataset.cases[0]
+        mk = lambda p: {"anchor": p[0], "target": p[1],
+                        "workload": {"model": case[0], "batch": case[1],
+                                     "pix": case[2]}}
+        victim = plane.workers[1]
+        victim.delay_s = 0.4
+        with Client(bg.host, bg.port) as c:
+            killer = threading.Timer(0.1, victim.kill)
+            c.send_pipelined("POST", "/predict", mk(dead_pair), tag="dead")
+            c.send_pipelined("POST", "/predict", mk(live_pair), tag="live")
+            killer.start()
+            got = {tag: (status, payload)
+                   for tag, status, payload in c.drain()}
+            killer.join()
+            assert got["live"][0] == 200, got["live"]
+            assert got["dead"][0] == 500, got["dead"]
+            assert got["dead"][1]["error"]["type"] == "ShardExecutionError"
+            # pump + connection survive: retry serves via fallback
+            out = c.predict(api.PredictRequest(
+                dead_pair[0], dead_pair[1], api.Workload.from_case(case)))
+            assert out["latency_ms"] == oracle.predict(api.PredictRequest(
+                dead_pair[0], dead_pair[1],
+                api.Workload.from_case(case))).latency_ms
+    finally:
+        bg.stop()
+        plane.close()
+
+
+# ---------------------------------------------------------------------------
+# generations: epoch-consistent swaps, all-or-nothing loads
+# ---------------------------------------------------------------------------
+
+
+def test_swap_defers_drop_until_inflight_waves_drain(oracle, fresh_oracle):
+    plane = ShardPlane(workers=2, mode="thread")
+    svc = LatencyService(oracle, max_wave=32, shard_plane=plane)
+    try:
+        gen1 = svc._shard_gen
+        plane.acquire(gen1)                    # an in-flight wave's ref
+        svc.oracle_refreshed(fresh_oracle, "e2")
+        gen2 = svc._shard_gen
+        assert gen2 is not gen1 and gen2.gen_id != gen1.gen_id
+        # old generation retired but NOT dropped while the wave holds it
+        assert sorted(plane.summary()["generations"]) == \
+            [gen1.gen_id, gen2.gen_id]
+        plane.release(gen1)                    # wave drains -> drop
+        assert plane.summary()["generations"] == [gen2.gen_id]
+        # a straggler wave that raced the retire still answers, parent-side
+        X, gids = _wave_inputs(oracle, n_rows=20, seed=6)
+        np.testing.assert_array_equal(gen1.execute(X, gids),
+                                      oracle.bank.execute(X, gids))
+    finally:
+        plane.close()
+
+
+def test_no_wave_mixes_epochs_across_swap(oracle, fresh_oracle, stream):
+    """Hammer submits/waves from one thread while the main thread swaps
+    oracles: every response's (epoch, value) must agree with exactly one
+    oracle — no wave may blend shards from two generations."""
+    plane = ShardPlane(workers=2, mode="thread")
+    svc = LatencyService(oracle, max_wave=16, cache_size=0,
+                         shard_plane=plane)
+    want = {}
+    for orc, tag in ((oracle, "e1"), (fresh_oracle, "e2")):
+        for i, res in enumerate(orc.predict_many(stream[:48])):
+            want[(tag, i)] = res.latency_ms
+    results = []
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            srs = [(i, svc.submit(r)) for i, r in enumerate(stream[:48])]
+            svc.run()
+            results.extend(srs)
+
+    # the service may uniquify reused labels: map actual epoch -> oracle tag
+    epoch_tag = {svc.oracle_refreshed(oracle, "e1"): "e1"}
+    t = threading.Thread(target=pump)
+    t.start()
+    try:
+        for k in range(4):
+            time.sleep(0.05)
+            orc, tag = ((fresh_oracle, "e2") if k % 2 == 0
+                        else (oracle, "e1"))
+            epoch_tag[svc.oracle_refreshed(orc, f"{tag}.{k}")] = tag
+    finally:
+        stop.set()
+        t.join()
+        plane.close()
+    assert len(results) >= 96
+    for i, sr in results:
+        assert sr.error is None
+        tag = epoch_tag[sr.result.epoch]
+        assert sr.result.latency_ms == want[(tag, i)], (i, tag)
+
+
+def test_load_failure_aborts_swap_all_or_nothing(oracle, fresh_oracle):
+    plane = ShardPlane(workers=2, mode="thread")
+    svc = LatencyService(oracle, max_wave=32, shard_plane=plane)
+    try:
+        gen1 = svc._shard_gen
+        epoch1 = svc.epoch
+        plane.workers[1].fail_loads = 1
+        with pytest.raises(RuntimeError, match="injected load failure"):
+            svc.oracle_refreshed(fresh_oracle, "e2")
+        # incumbent intact: same epoch, same generation, still sharded
+        assert svc.epoch == epoch1 and svc._shard_gen is gen1
+        assert plane.summary()["generations"] == [gen1.gen_id]
+        srs = [svc.submit(r) for r in synthetic_requests(oracle, n=8,
+                                                         seed=9)]
+        svc.run()
+        assert all(sr.error is None for sr in srs)
+        # next swap (no injected failure) succeeds
+        svc.oracle_refreshed(fresh_oracle, "e2")
+        assert svc._shard_gen is not gen1
+    finally:
+        plane.close()
+
+
+def test_plane_construction_failure_degrades_not_crashes(oracle):
+    plane = ShardPlane(workers=2, mode="thread")
+    for w in plane.workers:
+        w.fail_loads = 1
+    try:
+        svc = LatencyService(oracle, max_wave=32, shard_plane=plane)
+        assert svc._shard_gen is None
+        assert svc.stats.degraded is True
+        srs = [svc.submit(r) for r in synthetic_requests(oracle, n=8,
+                                                         seed=10)]
+        svc.run()                              # serves unsharded
+        assert all(sr.error is None for sr in srs)
+    finally:
+        plane.close()
