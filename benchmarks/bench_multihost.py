@@ -1,0 +1,172 @@
+"""Multi-host sharded serving: 4 TCP-loopback shard workers vs the
+single-worker banked path.
+
+The multi-host twin of ``bench_shard``: the same catalog, but the
+workers are real ``repro.launch.shard_worker`` subprocesses reached over
+sockets — frame encode, codec, kernel, and all — so the number gated
+here is the full remote-execution critical path, not a best case.
+
+Three floor-gated claims:
+
+  1. **Critical-path scaling** — one full-catalog wave through 4
+     TCP-loopback workers vs ``ModelBank.execute`` in-process, measured
+     exactly like ``bench_shard`` (CPU-time ``busy_s`` reported by each
+     worker, parent share = wall − Σbusy, critical path = parent +
+     max busy — honest on a single-core box where four processes can
+     never win on wall-clock). Floor: >= 2.0x at 4 workers (lower than
+     the shared-memory plane's 2.5x — the parent's share now includes
+     frame encode + socket writes of every wave).
+  2. **Bit-identity** — the gathered remote wave equals the
+     single-worker banked wave bit-for-bit: the shard tensors crossed
+     the wire as raw little-endian bytes, so nothing rounded.
+  3. **Mixed pipelined replay** — an HTTP replay against the
+     TCP-sharded service with pipelined clients: zero lost requests,
+     client p99 within 3x of the single-worker clean p99.
+
+    PYTHONPATH=src python -m benchmarks.bench_multihost           # full
+    PYTHONPATH=src python -m benchmarks.bench_multihost --smoke   # CI
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.bench_shard import _fit_oracle, _wave_inputs
+from repro import api
+from repro.serve import (BackgroundServer, LatencyService, ShardPlane,
+                         launch_tcp_workers, replay, synthetic_requests)
+
+TARGET_SCALING = 2.0
+P99_RATIO_FLOOR = 3.0
+N_WORKERS = 4
+
+
+def _row_plane(oracle: api.LatencyOracle, pool, smoke: bool) -> dict:
+    n_rows = 6000 if smoke else 12000
+    X, gids = _wave_inputs(oracle, n_rows)
+    bank = oracle.bank
+    reps = 7 if smoke else 5
+
+    want = bank.execute(X, gids)           # warm the single-worker path
+    singles = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        bank.execute(X, gids)
+        singles.append(time.perf_counter() - t0)
+    t_single = min(singles)
+
+    with ShardPlane(workers=0, mode="thread",
+                    remote=pool.addresses) as plane:
+        sharded = plane.load(bank)
+        got = sharded.execute(X, gids)     # warm workers (first touch)
+        np.testing.assert_array_equal(got, want)   # gate 2: bit-identity
+        walls, parents, busies = [], [], []
+        for _ in range(reps):
+            got = sharded.execute(X, gids)
+            lw = sharded.last_wave
+            busy = list(lw["busy_s"].values())
+            walls.append(lw["wall_s"])
+            parents.append(max(lw["wall_s"] - sum(busy), 0.0))
+            busies.append(max(busy))
+        np.testing.assert_array_equal(got, want)
+        assert plane.slice_errors == 0 and plane.fallback_rows == 0
+    # deterministic cost + scheduler noise that only inflates: best rep
+    # of each component independently (same accounting as bench_shard)
+    best_parent, best_busy = min(parents), min(busies)
+    critical = best_parent + best_busy
+    return {"rows": n_rows, "pairs": len(bank.pairs),
+            "workers": N_WORKERS, "mode": "tcp-loopback",
+            "cores": os.cpu_count(),
+            "single_ms": 1e3 * t_single,
+            "sharded_wall_ms": 1e3 * min(walls),
+            "parent_ms": 1e3 * best_parent,
+            "max_busy_ms": 1e3 * best_busy,
+            "critical_path_ms": 1e3 * critical,
+            "scaling": t_single / critical, "bit_identical": True}
+
+
+def _replay_tier(oracle: api.LatencyOracle, pool, smoke: bool) -> dict:
+    n_requests = 12_000 if smoke else 100_000
+    base = synthetic_requests(oracle, n=500, seed=0)
+    reqs = (base * (n_requests // len(base) + 1))[:n_requests]
+
+    def drive(plane):
+        svc = LatencyService(oracle, max_wave=64, shard_plane=plane)
+        bg = BackgroundServer(svc, host="127.0.0.1", port=0).start()
+        try:
+            return replay(bg.host, bg.port, reqs, clients=8)
+        finally:
+            bg.stop()
+
+    clean = drive(None)                    # single-worker baseline
+    with ShardPlane(workers=0, mode="thread",
+                    remote=pool.addresses) as plane:
+        sharded = drive(plane)
+        summary = plane.summary()
+    lost = sharded["n"] - sharded["ok"]
+    ratio = sharded["client_p99_ms"] / clean["client_p99_ms"]
+    return {"n_requests": n_requests,
+            "clean_p99_ms": clean["client_p99_ms"],
+            "clean_rps": clean["requests_per_s"],
+            "sharded_p99_ms": sharded["client_p99_ms"],
+            "sharded_rps": sharded["requests_per_s"],
+            "p99_ratio": ratio, "lost": lost,
+            "slice_errors": summary["slice_errors"],
+            "fallback_rows": summary["fallback_rows"]}
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    oracle.warmup(max_rows=512)
+    with launch_tcp_workers(N_WORKERS) as pool:
+        rp = _row_plane(oracle, pool, smoke)
+        rt = _replay_tier(oracle, pool, smoke)
+    out = {"smoke": smoke, "row_plane": rp, "replay": rt,
+           "target_scaling": TARGET_SCALING,
+           "p99_ratio_floor": P99_RATIO_FLOOR}
+    from benchmarks import common
+    common.save("multihost", out)
+    return out
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
+    rp, rt = r["row_plane"], r["replay"]
+    print(f"multihost: {rp['rows']} rows over {rp['pairs']} groups x "
+          f"{rp['workers']} TCP-loopback workers ({rp['cores']} cores) "
+          f"-> single {rp['single_ms']:.1f} ms  "
+          f"critical path {rp['critical_path_ms']:.1f} ms "
+          f"(parent {rp['parent_ms']:.1f} + busy {rp['max_busy_ms']:.1f})  "
+          f"scaling {rp['scaling']:.2f}x (target >= {TARGET_SCALING}x)")
+    print(f"           replay {rt['n_requests']} requests: "
+          f"clean p99 {rt['clean_p99_ms']:.2f} ms  "
+          f"sharded p99 {rt['sharded_p99_ms']:.2f} ms "
+          f"(ratio {rt['p99_ratio']:.2f} <= {P99_RATIO_FLOOR})  "
+          f"lost {rt['lost']}")
+    ok = (rp["scaling"] >= TARGET_SCALING and rp["bit_identical"]
+          and rt["lost"] == 0 and rt["p99_ratio"] <= P99_RATIO_FLOOR)
+    from benchmarks import common
+    common.save_bench(
+        "multihost", speedup=rp["scaling"], floor=TARGET_SCALING,
+        wall_s=wall, passed=ok, smoke=smoke,
+        extra={"mode": rp["mode"], "workers": rp["workers"],
+               "cores": rp["cores"], "bit_identical": rp["bit_identical"],
+               "replay_requests": rt["n_requests"],
+               "replay_lost": rt["lost"],
+               "replay_p99_ratio": rt["p99_ratio"],
+               "p99_ratio_floor": P99_RATIO_FLOOR})
+    if not ok:
+        print("FAIL: multi-host sharded serving under its floors")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

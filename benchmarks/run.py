@@ -30,6 +30,8 @@ BENCHES = [
      "fault-injected replay resilience floors (zero lost requests)"),
     ("shard", "benchmarks.bench_shard",
      "multi-worker sharded wave execution vs single-worker bank"),
+    ("multihost", "benchmarks.bench_multihost",
+     "TCP-loopback multi-host shard plane vs single-worker bank"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

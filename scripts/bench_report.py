@@ -14,9 +14,19 @@ with ``--prev``), the table adds a per-bench speedup delta column against
 it — the at-a-glance answer to "did this commit move any gate".
 
     python scripts/bench_report.py [results/bench] [--prev DIR]
+    python scripts/bench_report.py --gate [--prev DIR] [--regress-frac F]
 
-Exit status is 0 even when a gate failed — the gate itself already failed
-the bench stage; this is reporting only.
+Without ``--gate``, exit status is 0 even when a gate failed — the gate
+itself already failed the bench stage; rendering is reporting only.
+
+With ``--gate`` the trajectory becomes a merge gate: exit nonzero when
+any bench record has ``passed: false`` or a speedup below its floor, or
+when a bench regressed more than ``--regress-frac`` (default 0.20, i.e.
+>20%) against the previous trajectory artifact. Benches the previous
+artifact ran that are now missing are warned about but do not fail the
+gate (a renamed or retired bench should not wedge CI); a previous
+artifact that is absent entirely (first run, expired artifact) skips the
+regression check and gates on floors alone.
 """
 import json
 import pathlib
@@ -91,13 +101,71 @@ def fmt_table(rows, headers):
     return "\n".join([line(headers), sep] + [line(r) for r in rows])
 
 
+def gate_violations(out_dir: pathlib.Path, prev_dir: pathlib.Path,
+                    regress_frac: float):
+    """The merge-gate rules over the trajectory records. Returns
+    ``(violations, warnings)`` — human-readable strings."""
+    recs, bad = _records(out_dir)
+    prev, _ = _records(prev_dir) if prev_dir.is_dir() else ({}, [])
+    violations = [f"{name}: {why}" for name, why in bad]
+    warnings = []
+    if not recs:
+        violations.append(
+            f"no BENCH_*.json records under {out_dir} — nothing to gate")
+    for name, rec in sorted(recs.items()):
+        try:
+            speedup = float(rec.get("speedup"))
+            floor = float(rec.get("floor"))
+        except (TypeError, ValueError):
+            violations.append(f"{name}: record has no numeric "
+                              "speedup/floor")
+            continue
+        if not rec.get("passed"):
+            violations.append(f"{name}: passed=false "
+                              f"(speedup {speedup:.2f}x)")
+        elif speedup < floor:
+            violations.append(f"{name}: speedup {speedup:.2f}x below "
+                              f"floor {floor:.1f}x")
+        p = prev.get(name)
+        if p is None:
+            continue
+        try:
+            prev_speedup = float(p.get("speedup"))
+        except (TypeError, ValueError):
+            continue
+        if prev_speedup > 0 and \
+                speedup < prev_speedup * (1.0 - regress_frac):
+            violations.append(
+                f"{name}: speedup {speedup:.2f}x regressed "
+                f">{regress_frac:.0%} vs previous trajectory "
+                f"{prev_speedup:.2f}x")
+    for name in sorted(set(prev) - set(recs)):
+        warnings.append(f"{name}: present in previous trajectory but "
+                        "not in this run (dropped?)")
+    return violations, warnings
+
+
 def main(argv=None):
     argv = list(argv if argv is not None else sys.argv[1:])
+    usage = ("usage: bench_report.py [results/bench] [--prev DIR] "
+             "[--gate] [--regress-frac F]")
     prev_dir = None
+    gate = False
+    regress_frac = 0.20
+    if "--gate" in argv:
+        gate = True
+        argv.remove("--gate")
+    if "--regress-frac" in argv:
+        i = argv.index("--regress-frac")
+        if i + 1 >= len(argv):
+            print(usage)
+            return 2
+        regress_frac = float(argv[i + 1])
+        del argv[i:i + 2]
     if "--prev" in argv:
         i = argv.index("--prev")
         if i + 1 >= len(argv):
-            print("usage: bench_report.py [results/bench] [--prev DIR]")
+            print(usage)
             return 2
         prev_dir = pathlib.Path(argv[i + 1])
         del argv[i:i + 2]
@@ -105,14 +173,28 @@ def main(argv=None):
     if prev_dir is None:
         prev_dir = out_dir / "prev"
     rows, have_prev = rows_from(out_dir, prev_dir)
-    if not rows:
+    if not rows and not gate:
         print(f"bench trajectory: no BENCH_*.json records under {out_dir} "
               "(run a bench_* --smoke gate first)")
         return 0
-    vs = f" (delta vs {prev_dir})" if have_prev else ""
-    print(f"bench trajectory ({out_dir}){vs}:")
-    print(fmt_table(rows, ["benchmark", "speedup", "delta", "floor",
-                           "gate", "wall", "git", "when"]))
+    if rows:
+        vs = f" (delta vs {prev_dir})" if have_prev else ""
+        print(f"bench trajectory ({out_dir}){vs}:")
+        print(fmt_table(rows, ["benchmark", "speedup", "delta", "floor",
+                               "gate", "wall", "git", "when"]))
+    if not gate:
+        return 0
+    violations, warnings = gate_violations(out_dir, prev_dir,
+                                           regress_frac)
+    for w in warnings:
+        print(f"gate warning: {w}")
+    if violations:
+        for v in violations:
+            print(f"GATE FAIL: {v}")
+        return 1
+    prev_note = (f"regressions checked vs {prev_dir}" if have_prev
+                 else "no previous trajectory — floors only")
+    print(f"bench gate: all records pass their floors ({prev_note})")
     return 0
 
 

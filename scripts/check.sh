@@ -5,7 +5,16 @@
 #   lint         byte-compile every tree we ship (cheap syntax/import-shape
 #                sanity; no third-party linter is vendored)
 #   test         the full pytest suite
-#   bench-smoke  the eight floor-gated smoke benchmarks — predict_grid (5x
+#   integration  the multi-worker serving suites under a hard timeout —
+#                the spawn-mode shard tests plus the TCP-loopback frame /
+#                remote-worker tests (tests/test_shard.py,
+#                tests/test_frames.py) with per-test --durations persisted
+#                to results/bench/INTEGRATION_durations.txt, then a strict
+#                TCP-loopback multi-worker HTTP replay (every request must
+#                answer), then scripts/durations_gate.py enforcing a
+#                slowest-test budget so worker-startup or handshake creep
+#                fails loudly instead of slowly rotting CI
+#   bench-smoke  the nine floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
 #                predict_many (5x floor + element-wise equality), the
@@ -21,17 +30,56 @@
 #                sharded wave execution (4-worker spawn ShardPlane:
 #                2.5x critical-path scaling floor, bit-identity vs the
 #                single-worker bank, zero-loss mixed replay with
-#                bounded p99) —
+#                bounded p99), and multi-host sharding (4 TCP-loopback
+#                shard_worker subprocesses: 2.0x critical-path floor,
+#                bit-identity across the wire, zero-loss replay) —
 #                each writing its results/bench/BENCH_*.json trajectory
-#                record (scripts/bench_report.py renders them, with deltas
-#                vs a previous artifact when one is present; ci.yml runs
-#                it and uploads the records as the bench-trajectory
-#                artifact)
+#                record, then scripts/bench_report.py --gate turns the
+#                trajectory into a merge gate: any floor failure, or a
+#                >20% speedup regression vs a previous trajectory dropped
+#                under results/bench/prev (ci.yml downloads the prior
+#                run's artifact there), exits nonzero
 #
-#   usage: scripts/check.sh [stage ...]      # default: all stages
+# Every stage's wall time and ok/fail status is persisted to
+# results/bench/CHECK_stages.json (atomic tmp+rename; one record per
+# stage, keyed by stage name, stamped with the git SHA) so CI can upload
+# stage timings alongside the bench trajectory.
+#
+#   usage: scripts/check.sh [stage ...]    # default: all stages
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Persist one (stage, wall, status, git SHA) record; update-in-place by
+# stage name so partial runs (scripts/check.sh test) refresh only their
+# own rows. Atomic tmp+rename: a killed run never leaves a torn file.
+record_stage() {
+    python - "$1" "$2" "$3" <<'PY' || true
+import json, os, pathlib, subprocess, sys, tempfile, time
+stage, wall, status = sys.argv[1], float(sys.argv[2]), sys.argv[3]
+path = pathlib.Path("results/bench/CHECK_stages.json")
+path.parent.mkdir(parents=True, exist_ok=True)
+try:
+    recs = json.loads(path.read_text())
+    assert isinstance(recs, list)
+except Exception:
+    recs = []
+try:
+    sha = subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                         capture_output=True, text=True).stdout.strip()
+except OSError:
+    sha = ""
+rec = {"stage": stage, "wall_s": wall, "status": status,
+       "git_sha": sha or "?",
+       "timestamp_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z")}
+recs = [r for r in recs if r.get("stage") != stage] + [rec]
+fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+with os.fdopen(fd, "w") as f:
+    json.dump(recs, f, indent=1)
+    f.write("\n")
+os.replace(tmp, path)
+PY
+}
 
 stage_lint() {
     python -m compileall -q src benchmarks examples scripts tests
@@ -39,6 +87,21 @@ stage_lint() {
 
 stage_test() {
     python -m pytest -x -q
+}
+
+stage_integration() {
+    mkdir -p results/bench
+    # spawn-mode + TCP-loopback multi-worker suites; hard timeout so a
+    # wedged worker handshake kills the stage instead of hanging CI, and
+    # --durations persisted so the slowest-test budget below has data
+    timeout 900 python -m pytest -q tests/test_shard.py tests/test_frames.py \
+        --durations=20 2>&1 | tee results/bench/INTEGRATION_durations.txt
+    # strict TCP-loopback replay through the real launcher: subprocess
+    # workers, HTTP front end, every request must answer (exit 1 if not)
+    timeout 300 python -m repro.launch.serve_http \
+        --workers 2 --shard-mode tcp --requests 200 --clients 4 --strict
+    python scripts/durations_gate.py results/bench/INTEGRATION_durations.txt \
+        --budget-s 20
 }
 
 stage_bench_smoke() {
@@ -50,24 +113,41 @@ stage_bench_smoke() {
     python -m benchmarks.bench_calibrate --smoke
     python -m benchmarks.bench_faults --smoke
     python -m benchmarks.bench_shard --smoke
-    # trajectory table: printed by a dedicated always() step in ci.yml;
-    # run `python scripts/bench_report.py` locally for the same view
+    python -m benchmarks.bench_multihost --smoke
+    # merge gate over the trajectory: floors + >20% regressions vs a
+    # previous artifact under results/bench/prev (when one is present);
+    # also prints the trajectory table
+    python scripts/bench_report.py --gate
 }
 
 run_stage() {
     local name="$1" fn="stage_${1//-/_}" t0=$SECONDS
     if ! declare -F "$fn" >/dev/null; then
-        echo "check.sh: unknown stage '$name' (lint|test|bench-smoke)" >&2
+        echo "check.sh: unknown stage '$name' (lint|test|integration|bench-smoke)" >&2
         return 2
     fi
     echo "==> stage ${name}"
+    CURRENT_STAGE="$name"
+    CURRENT_T0=$t0
     "$fn"
+    CURRENT_STAGE=""
+    record_stage "$name" "$((SECONDS - t0))" ok
     echo "<== stage ${name} ok ($((SECONDS - t0))s)"
 }
 
+# set -e aborts mid-stage on the first failing command; the EXIT trap
+# still records that stage as failed (with its wall time) so the
+# persisted CHECK_stages.json shows *which* stage broke, not just less
+# rows than expected
+CURRENT_STAGE=""
+trap 'if [ -n "${CURRENT_STAGE:-}" ]; then
+          record_stage "$CURRENT_STAGE" "$((SECONDS - CURRENT_T0))" fail
+          echo "<== stage ${CURRENT_STAGE} FAILED ($((SECONDS - CURRENT_T0))s)" >&2
+      fi' EXIT
+
 stages=("$@")
 if [ ${#stages[@]} -eq 0 ]; then
-    stages=(lint test bench-smoke)
+    stages=(lint test integration bench-smoke)
 fi
 total0=$SECONDS
 for s in "${stages[@]}"; do

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Slowest-test budget over a persisted ``pytest --durations`` report.
+
+The integration stage tees its pytest output (including the
+``--durations=N`` table) to ``results/bench/INTEGRATION_durations.txt``;
+this gate parses that table and exits nonzero when any single test phase
+(setup/call/teardown) exceeds the budget. The point is to catch creep —
+a worker handshake that quietly grows from 0.1s to 15s still passes the
+suite, but it rots CI wall time and usually signals a real regression
+(retry loops, timeout-masked races) long before anything deadlocks.
+
+    python scripts/durations_gate.py FILE [--budget-s 20]
+
+Exit status: 0 all phases within budget, 1 over budget, 2 when no
+durations table could be parsed at all (format drift or a run that died
+before pytest printed it — either way the budget was not enforced, so
+fail loudly rather than silently passing).
+"""
+import pathlib
+import re
+import sys
+
+# "0.98s call     tests/test_shard.py::test_tcp_plane_bit_identical"
+_LINE = re.compile(r"^\s*(\d+(?:\.\d+)?)s\s+(setup|call|teardown)\s+(\S+)")
+
+
+def parse_durations(text: str):
+    """All (seconds, phase, nodeid) rows from a pytest durations table."""
+    return [(float(m.group(1)), m.group(2), m.group(3))
+            for m in (_LINE.match(line) for line in text.splitlines()) if m]
+
+
+def main(argv=None) -> int:
+    argv = list(argv if argv is not None else sys.argv[1:])
+    usage = "usage: durations_gate.py FILE [--budget-s SECONDS]"
+    budget = 20.0
+    if "--budget-s" in argv:
+        i = argv.index("--budget-s")
+        if i + 1 >= len(argv):
+            print(usage)
+            return 2
+        budget = float(argv[i + 1])
+        del argv[i:i + 2]
+    if len(argv) != 1:
+        print(usage)
+        return 2
+    path = pathlib.Path(argv[0])
+    try:
+        rows = parse_durations(path.read_text())
+    except OSError as e:
+        print(f"durations gate: cannot read {path}: {e}")
+        return 2
+    if not rows:
+        print(f"durations gate: no pytest durations table found in {path} "
+              "— run pytest with --durations=N and tee its output here")
+        return 2
+    rows.sort(reverse=True)
+    over = [r for r in rows if r[0] > budget]
+    slowest = rows[0]
+    print(f"durations gate: {len(rows)} phases parsed, slowest "
+          f"{slowest[0]:.2f}s {slowest[1]} {slowest[2]} "
+          f"(budget {budget:.0f}s/phase)")
+    if over:
+        for secs, phase, nodeid in over:
+            print(f"BUDGET FAIL: {secs:.2f}s {phase} {nodeid} "
+                  f"> {budget:.0f}s")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

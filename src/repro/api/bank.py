@@ -54,6 +54,16 @@ class BankUnsupportedError(RuntimeError):
     heterogeneous shapes); callers fall back to per-group execution."""
 
 
+def _np_tree(tree):
+    """Convert a (possibly jax) params pytree to numpy leaves so it can
+    ride a pipe or a socket into a worker that never imports jax."""
+    if isinstance(tree, dict):
+        return {k: _np_tree(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_np_tree(v) for v in tree)
+    return np.asarray(tree)
+
+
 def _tree_index(tree, idx):
     """``leaf[idx]`` over a params pytree of dicts/lists/tuples — a light
     structural map so ``ModelBank.split`` (and the shard plane's spec
@@ -238,6 +248,55 @@ class ModelBank:
                 lin_coef=lin_coef, dnn=dnn, devices=self.devices,
                 scalers=self.scalers, backend=self.backend))
         return tuple(banks)
+
+    # ------------------------------------------------------------------
+    # wire form (remote shard distribution)
+    # ------------------------------------------------------------------
+    def to_payload(self) -> dict:
+        """The bank as one self-contained wire value: every stacked tensor
+        an inline contiguous numpy array (no shared-memory names, no jax
+        leaves), ready for the shard worker codecs
+        (``repro.serve.frames``). Backend ``"auto"`` is resolved *here*,
+        parent-side, so a remote CPU worker serves the numpy traversal
+        without ever importing jax."""
+        backend = self.backend
+        if backend == "auto" and "forest" in self.members:
+            from repro.kernels import forest_eval
+            backend = forest_eval._auto_backend()
+        return {
+            "pairs": self.pairs,
+            "members": self.members,
+            "n_features": self.n_features,
+            "devices": self.devices,
+            "scalers": {k: tuple(np.ascontiguousarray(a) for a in v)
+                        for k, v in self.scalers.items()},
+            "backend": backend,
+            "forest": (None if self.forest is None else
+                       {k: np.ascontiguousarray(v)
+                        for k, v in self.forest.items()}),
+            "lin_coef": (None if self.lin_coef is None
+                         else np.ascontiguousarray(self.lin_coef)),
+            "dnn": (None if self.dnn is None
+                    else (_np_tree(self.dnn[0]), np.asarray(self.dnn[1]),
+                          np.asarray(self.dnn[2]),
+                          np.asarray(self.dnn[3]))),
+        }
+
+    @classmethod
+    def from_payload(cls, d: dict) -> "ModelBank":
+        """Rebuild a bank around the decoded wire value. The codec hands
+        arrays back as zero-copy read-only views over the received frame
+        body (``np.frombuffer``) — the remote-host analogue of a
+        shared-memory attach; execution only ever reads them."""
+        pairs = tuple(tuple(p) for p in d["pairs"])
+        return cls(pairs=pairs, members=tuple(d["members"]),
+                   n_features=int(d["n_features"]), forest=d["forest"],
+                   lin_coef=d["lin_coef"],
+                   dnn=None if d["dnn"] is None else tuple(d["dnn"]),
+                   devices=tuple(d["devices"]),
+                   scalers={k: tuple(v)
+                            for k, v in d["scalers"].items()},
+                   backend=d["backend"])
 
     # ------------------------------------------------------------------
     # stacked execution

@@ -58,10 +58,24 @@ def main(argv=None):
                     help="shard the bank across this many workers "
                          "(0 = single-process wave execution)")
     ap.add_argument("--shard-mode", default="spawn",
-                    choices=("spawn", "thread"),
+                    choices=("spawn", "thread", "tcp"),
                     help="worker isolation for --workers: 'spawn' = "
                          "processes with shared-memory bank shards, "
-                         "'thread' = in-process (tests/debug)")
+                         "'thread' = in-process (tests/debug), 'tcp' = "
+                         "loopback shard-worker subprocesses over the "
+                         "framed socket protocol (the multi-host "
+                         "topology on one machine)")
+    ap.add_argument("--remote-worker", action="append", default=[],
+                    metavar="HOST:PORT",
+                    help="append a remote shard worker (a running "
+                         "repro.launch.shard_worker); repeatable")
+    ap.add_argument("--worker-listen", metavar="HOST:PORT",
+                    help="run as a shard WORKER on this address instead "
+                         "of serving HTTP (shorthand for "
+                         "repro.launch.shard_worker)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any replay request failed "
+                         "(CI integration gate)")
     ap.add_argument("--refresh-mid-replay", action="store_true",
                     help="refit (new seed) and oracle_refreshed() halfway "
                          "through the replay — demonstrates epoch swap "
@@ -75,20 +89,47 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.worker_listen:
+        # run as the remote half: one TCP shard worker, nothing else
+        from repro.launch.shard_worker import main as worker_main
+        host, _, port = args.worker_listen.rpartition(":")
+        return worker_main(["--host", host or "127.0.0.1",
+                            "--port", port])
+
     from repro.serve import (BackgroundServer, Client, LatencyService,
-                             ShardPlane, replay, synthetic_requests)
+                             ShardPlane, launch_tcp_workers, replay,
+                             synthetic_requests)
 
     oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
                          args.epochs, args.seed)
     plane = None
-    if args.workers > 0:
-        plane = ShardPlane(workers=args.workers, mode=args.shard_mode)
+    pool = None
+    remote = list(args.remote_worker)
+    local_workers = args.workers
+    if args.shard_mode == "tcp" and args.workers > 0:
+        # multi-host topology on one machine: loopback subprocess workers
+        pool = launch_tcp_workers(args.workers)
+        remote = pool.addresses + remote
+        local_workers = 0
+    if local_workers > 0 or remote:
+        try:
+            plane = ShardPlane(
+                workers=local_workers,
+                mode=args.shard_mode if args.shard_mode != "tcp" else "spawn",
+                remote=remote)
+        except Exception as e:
+            # an unreachable remote (or any boot failure) degrades to
+            # unsharded serving, mirroring the service-level contract
+            print(f"shard plane unavailable ({type(e).__name__}: {e}); "
+                  "serving unsharded", file=sys.stderr)
+            plane = None
     service = LatencyService(oracle, max_wave=args.wave,
                              cache_size=args.cache_size,
                              shard_plane=plane)
     bg = BackgroundServer(service, host=args.host, port=args.port,
                           max_queue=args.max_queue).start()
-    shard_note = (f"  shards: {args.workers} ({args.shard_mode})"
+    shard_note = (f"  shards: {plane.n_workers} ({args.shard_mode}"
+                  + (f", {len(remote)} remote" if remote else "") + ")"
                   if plane is not None else "")
     print(f"serving http://{bg.host}:{bg.port}  "
           f"epoch {service.epoch}{shard_note}  "
@@ -146,11 +187,17 @@ def main(argv=None):
                   f"pending {h['pending']}")
         epochs = {r["epoch"] for r in rep["results"] if r is not None}
         print(f"response epochs seen: {', '.join(sorted(epochs))}")
+        if args.strict and rep["ok"] != rep["n"]:
+            print(f"STRICT: {rep['n'] - rep['ok']} of {rep['n']} "
+                  "requests did not succeed", file=sys.stderr)
+            return 1
         return 0
     finally:
         bg.stop()
         if plane is not None:
             plane.close()
+        if pool is not None:
+            pool.close()
 
 
 if __name__ == "__main__":

@@ -16,8 +16,13 @@
   - ``shard``: multi-worker sharded wave execution — ``ShardPlane``
     owns N workers each holding a group-axis ``ModelBank`` shard
     (stacked tensors shared read-only via ``multiprocessing.
-    shared_memory``), and ``ShardedBank`` scatters a wave's rows by
-    (anchor, target) group and gathers them back bit-identically;
+    shared_memory`` locally, or streamed once per generation over the
+    framed TCP protocol to ``WorkerServer`` peers on other hosts —
+    ``launch_tcp_workers`` spins up a loopback pool), and
+    ``ShardedBank`` scatters a wave's rows by (anchor, target) group
+    and gathers them back bit-identically;
+  - ``frames``: the length-prefixed binary framing + codecs the TCP
+    worker wire and the columnar ``/measure`` body share;
   - ``Engine``: the token-serving engine for the model zoo
     (``repro.serve.engine``; imported lazily — it pulls in jax + the model
     stack).
@@ -28,15 +33,18 @@ from repro.serve.faults import (FaultInjector, FaultPlan, FaultRule,
 from repro.serve.latency_service import (LatencyService, ServiceRequest,
                                          synthetic_requests)
 from repro.serve.resilience import CircuitBreaker, RetryPolicy
-from repro.serve.shard import ShardedBank, ShardPlane, WorkerDeadError
+from repro.serve.shard import (ShardedBank, ShardPlane, TcpWorkerPool,
+                               WorkerDeadError, WorkerServer,
+                               launch_tcp_workers)
 from repro.serve.transport import (BackgroundServer, Client, TransportError,
                                    TransportServer, replay)
 
 __all__ = ["BackgroundServer", "CircuitBreaker", "Client", "Engine",
            "FaultInjector", "FaultPlan", "FaultRule", "InjectedFault",
            "LatencyService", "RetryPolicy", "ServiceRequest",
-           "ServiceStats", "ShardPlane", "ShardedBank", "TransportError",
-           "TransportServer", "WorkerDeadError", "replay",
+           "ServiceStats", "ShardPlane", "ShardedBank", "TcpWorkerPool",
+           "TransportError", "TransportServer", "WorkerDeadError",
+           "WorkerServer", "launch_tcp_workers", "replay",
            "synthetic_requests"]
 
 

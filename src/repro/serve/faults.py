@@ -54,9 +54,14 @@ SITE_PUMP = "transport.pump"        # async pump drain hop
 SITE_RESPONSE = "transport.response"  # socket write of a response (drop)
 SITE_REFIT = "calibrate.refit"      # background candidate refit
 SITE_CANARY = "calibrate.canary"    # shadow canary verdict
+# TCP shard-worker wire faults (see repro.serve.shard.WorkerServer):
+SITE_SHARD_SLOW = "shard.worker.slow"    # delay before replying (slow peer)
+SITE_SHARD_RESET = "shard.worker.reset"  # error -> RST-close the connection
+SITE_SHARD_FRAME = "shard.worker.frame"  # drop -> truncate the reply frame
 
 SITES = (SITE_PLAN, SITE_EXECUTE, SITE_WARMUP, SITE_PUMP, SITE_RESPONSE,
-         SITE_REFIT, SITE_CANARY)
+         SITE_REFIT, SITE_CANARY, SITE_SHARD_SLOW, SITE_SHARD_RESET,
+         SITE_SHARD_FRAME)
 
 
 class InjectedFault(RuntimeError):

@@ -8,7 +8,7 @@ so a wave's rows scatter by (anchor, target) group to their shard, every
 shard answers its slice with ONE grouped launch, and the parent gathers
 the predictions back into wave row order.
 
-Two worker modes share one protocol:
+Three worker kinds share one protocol:
 
   - ``mode="spawn"`` — real processes (``multiprocessing`` spawn context,
     safe next to a multithreaded jax parent). The big stacked arrays
@@ -21,6 +21,20 @@ Two worker modes share one protocol:
     reference. Deterministic and cheap: the test suite drives shuffled
     completion orders, mid-wave deaths, and swap races through its
     ``delay_s`` / ``fail_loads`` / ``kill`` hooks.
+  - ``remote=("host:port", ...)`` — workers on *other hosts*, appended
+    after the local ones. Each is a :class:`WorkerServer` (usually the
+    ``repro.launch.shard_worker`` CLI) speaking the same
+    ``load``/``exec``/``drop``/``ping`` tuples over length-prefixed
+    binary frames (``repro.serve.frames``): a generation load ships the
+    shard's ``ModelBank.to_payload()`` — stacked float64 tensors as raw
+    little-endian bytes — exactly once, and the worker attaches them as
+    read-only received-buffer views (the cross-host analogue of the
+    shared-memory attach; bit-identical, because the bytes are the
+    bytes). Socket faults (reset, truncated frame, slow peer — see the
+    ``shard.worker.*`` sites in ``repro.serve.faults``) surface as
+    :class:`WorkerDeadError` on the parent and degrade exactly like a
+    local worker death: riding rows fail typed, the breaker force-opens,
+    later waves route parent-side.
 
 Each worker's pipe is owned by a single dispatcher thread (submissions
 return ``concurrent.futures.Future``), so the wave pump and a concurrent
@@ -47,17 +61,25 @@ slice failures go through the normal closed/open/half-open breaker.
 """
 from __future__ import annotations
 
+import os
 import queue
+import socket
+import struct
+import subprocess
+import sys
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.api.bank import ModelBank, _tree_index  # noqa: F401 (re-export)
+from repro.api.bank import (ModelBank, _np_tree,  # noqa: F401 (re-export)
+                            _tree_index)
 from repro.api.planner import partition_pairs
 from repro.api.types import PartialExecutionError
+from repro.serve import faults as faults_mod
+from repro.serve import frames
 from repro.serve.resilience import CircuitBreaker
 
 _SHM_ARRAYS = ("feat", "thr", "left", "right", "value")
@@ -72,16 +94,6 @@ class WorkerDeadError(RuntimeError):
 # ----------------------------------------------------------------------
 # bank <-> worker spec (spawn mode)
 # ----------------------------------------------------------------------
-def _np_tree(tree):
-    """Convert a (possibly jax) params pytree to numpy leaves so it can
-    ride a pipe into a worker that never imports jax."""
-    if isinstance(tree, dict):
-        return {k: _np_tree(v) for k, v in tree.items()}
-    if isinstance(tree, (list, tuple)):
-        return type(tree)(_np_tree(v) for v in tree)
-    return np.asarray(tree)
-
-
 def _bank_to_spec(bank: ModelBank) -> Tuple[dict, list]:
     """Publish ``bank``'s big stacked arrays as shared-memory segments
     and return ``(spec, segments)``: a small picklable spec (names +
@@ -229,6 +241,8 @@ class _BaseWorker:
     ``submit`` enqueues an op and returns a Future; ops on one worker are
     serialized (pipe protocol) while different workers overlap."""
 
+    kind = "abstract"
+
     def __init__(self, index: int):
         self.index = index
         self.alive = True
@@ -271,6 +285,14 @@ class _BaseWorker:
     def _call(self, op: tuple):
         raise NotImplementedError
 
+    def prepare_load(self, gen_id: int, sub: ModelBank
+                     ) -> Tuple[tuple, list]:
+        """Build this worker kind's ``load`` op for one sub-bank. Returns
+        ``(op, parent_segments)`` — segments are the parent-held shared
+        memory (spawn mode only; empty elsewhere) whose lifetime the
+        generation owns."""
+        raise NotImplementedError
+
     def kill(self) -> None:
         raise NotImplementedError
 
@@ -283,6 +305,8 @@ class _BaseWorker:
 
 class _ProcessWorker(_BaseWorker):
     """Spawn-context process worker; a broken pipe IS the death signal."""
+
+    kind = "spawn"
 
     def __init__(self, index: int):
         import multiprocessing as mp
@@ -313,6 +337,11 @@ class _ProcessWorker(_BaseWorker):
             return None
         raise RuntimeError(f"worker {self.index}: {reply[1]}")
 
+    def prepare_load(self, gen_id: int, sub: ModelBank
+                     ) -> Tuple[tuple, list]:
+        spec, segments = _bank_to_spec(sub)
+        return ("load", gen_id, spec), segments
+
     def kill(self) -> None:
         """Hard-kill the process; the dispatcher's in-flight or next pipe
         op surfaces the death as :class:`WorkerDeadError`."""
@@ -342,6 +371,8 @@ class _ThreadWorker(_BaseWorker):
     completion orders and swap races), ``fail_loads`` injects load
     failures, ``kill`` makes queued and in-flight ops die like a broken
     pipe would."""
+
+    kind = "thread"
 
     def __init__(self, index: int):
         self._banks: Dict[int, ModelBank] = {}
@@ -380,9 +411,373 @@ class _ThreadWorker(_BaseWorker):
             return None
         raise RuntimeError(f"unknown op {kind!r}")
 
+    def prepare_load(self, gen_id: int, sub: ModelBank
+                     ) -> Tuple[tuple, list]:
+        return ("load", gen_id, sub), []
+
     def kill(self) -> None:
         self.death_reason = f"worker {self.index} was killed"
         self.alive = False
+
+
+class _RemoteWorker(_BaseWorker):
+    """TCP shard worker: the same ``load``/``exec``/``drop``/``ping``
+    tuples as the pipe protocol, framed and codec-encoded over a socket
+    (``repro.serve.frames``). The connection + handshake happen at
+    construction — a plane pointing at a worker that isn't there fails
+    loudly at build time, not on the first wave. Any socket error, frame
+    error, or timeout afterwards is the death signal: remote workers are
+    never reconnected (the breaker + parent-side fallback own recovery),
+    so a half-delivered wave can never be blindly replayed."""
+
+    kind = "tcp"
+
+    def __init__(self, index: int, host: str, port: int, *,
+                 io_timeout_s: float = 60.0,
+                 max_frame: int = frames.MAX_FRAME):
+        self.host = host
+        self.port = int(port)
+        self.io_timeout_s = float(io_timeout_s)
+        sock = socket.create_connection((host, self.port),
+                                        timeout=self.io_timeout_s)
+        sock.settimeout(self.io_timeout_s)
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self._framer = frames.SocketFramer(sock, max_frame)
+        try:
+            # the worker speaks first: HELLO with its protocol + codecs
+            opcode, body = self._framer.recv()
+            if opcode != frames.OP_HELLO:
+                raise frames.FrameError(
+                    f"expected HELLO, got opcode {opcode}")
+            hello = frames.parse_hello(body)
+            self.protocol = min(frames.PROTOCOL_VERSION,
+                                int(hello.get("protocol", 1)))
+            self.codec = frames.negotiate_codec(
+                hello.get("codecs", ("json",)))
+            self._framer.send(frames.OP_HELLO, frames.hello_ack_body(
+                self.protocol, self.codec))
+        except Exception:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        self._pack, self._unpack = frames.CODECS[self.codec]
+        super().__init__(index)
+
+    def _call(self, op: tuple):
+        try:
+            self._framer.send(frames.OP_MSG, self._pack(op))
+            opcode, body = self._framer.recv()
+            if opcode != frames.OP_MSG:
+                raise frames.FrameError(
+                    f"unexpected opcode {opcode} mid-stream")
+            reply = self._unpack(body)
+        except (OSError, frames.FrameError) as e:
+            # timeout, reset, truncated/oversized frame, undecodable body:
+            # the connection state is unknowable (a late reply could pair
+            # with the wrong request) -> the worker is dead to us
+            raise WorkerDeadError(
+                f"worker {self.index} ({self.host}:{self.port}) "
+                f"connection broke ({type(e).__name__}: {e})") from e
+        tag = reply[0]
+        if tag == "exec_ok":
+            _, preds, busy = reply
+            self.execs += 1
+            self.busy_s += float(busy)
+            return np.asarray(preds, np.float64), float(busy)
+        if tag == "ok":
+            return None
+        raise RuntimeError(f"worker {self.index}: {reply[1]}")
+
+    def prepare_load(self, gen_id: int, sub: ModelBank
+                     ) -> Tuple[tuple, list]:
+        # remote distribution: the whole shard — stacked float64 tensors
+        # included — rides this one op's frame; no segments to own
+        return ("load", gen_id, sub.to_payload()), []
+
+    def kill(self) -> None:
+        try:
+            self._framer.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._framer.sock.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        super().close()
+        try:
+            self._framer.sock.close()
+        except OSError:
+            pass
+
+
+# ----------------------------------------------------------------------
+# worker-side TCP server + loopback launcher
+# ----------------------------------------------------------------------
+class WorkerServer:
+    """The serving half of :class:`_RemoteWorker`: accept parent
+    connections on ``host:port`` and run the framed pipe protocol, one
+    handler thread per connection with its own generation table (a
+    restarted parent can never see a predecessor's banks). In-process for
+    tests and loopback benches, or behind the ``repro.launch.shard_worker``
+    CLI on a real remote host.
+
+    ``protocol``/``codecs`` are configurable so tests can stand up an
+    older, json-only protocol-1 worker and prove the parent negotiates
+    down. The three ``shard.worker.*`` fault sites fire on the reply path
+    of every message: ``slow`` delays the reply (client timeout), ``reset``
+    RST-closes instead of replying, ``frame`` sends a deliberately
+    truncated frame then RST-closes."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 faults: Optional[faults_mod.FaultInjector] = None,
+                 protocol: int = frames.PROTOCOL_VERSION,
+                 codecs: Sequence[str] = frames.CODEC_PREFERENCE,
+                 max_frame: int = frames.MAX_FRAME):
+        self._faults = faults
+        self.protocol = int(protocol)
+        self.codecs = tuple(codecs)
+        self.max_frame = int(max_frame)
+        self.execs = 0
+        self.loads = 0
+        self._lock = threading.Lock()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.host, self.port = self._sock.getsockname()[:2]
+        self._closed = False
+        self._conns: List[socket.socket] = []
+        self._threads: List[threading.Thread] = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True,
+            name=f"shard-server-{self.port}")
+        self._accept_thread.start()
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return          # listener closed
+            with self._lock:
+                if self._closed:
+                    conn.close()
+                    return
+                self._conns.append(conn)
+                t = threading.Thread(target=self._handle, args=(conn,),
+                                     daemon=True,
+                                     name=f"shard-conn-{self.port}")
+                self._threads.append(t)
+            t.start()
+
+    @staticmethod
+    def _rst_close(sock: socket.socket) -> None:
+        """Close with SO_LINGER 0 — the peer sees a hard RST, not an
+        orderly FIN (the 'connection reset' chaos shape)."""
+        try:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                            struct.pack("ii", 1, 0))
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+    def _handle(self, conn: socket.socket) -> None:
+        banks: Dict[int, ModelBank] = {}
+        framer = frames.SocketFramer(conn, self.max_frame)
+        try:
+            framer.send(frames.OP_HELLO,
+                        frames.hello_body(self.protocol, self.codecs))
+            opcode, body = framer.recv()
+            if opcode != frames.OP_HELLO:
+                return
+            ack = frames.parse_hello(body)
+            codec = ack.get("codec")
+            if codec not in self.codecs or codec not in frames.CODECS:
+                return
+            pack, unpack = frames.CODECS[codec]
+            while True:
+                opcode, body = framer.recv()
+                if opcode != frames.OP_MSG:
+                    return
+                reply, last = self._dispatch(banks, unpack(body))
+                # chaos on the reply path (no-ops without an injector)
+                faults_mod.fire(self._faults, faults_mod.SITE_SHARD_SLOW)
+                try:
+                    faults_mod.fire(self._faults,
+                                    faults_mod.SITE_SHARD_RESET)
+                except faults_mod.InjectedFault:
+                    self._rst_close(conn)
+                    return
+                encoded = frames.encode_frame(frames.OP_MSG, pack(reply),
+                                              self.max_frame)
+                if faults_mod.should_drop(self._faults,
+                                          faults_mod.SITE_SHARD_FRAME):
+                    conn.sendall(encoded[:max(5, len(encoded) // 2)])
+                    self._rst_close(conn)
+                    return
+                conn.sendall(encoded)
+                if last:
+                    return
+        except (frames.FrameError, OSError, EOFError):
+            return              # peer gone / bytes unusable: drop the conn
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _dispatch(self, banks: Dict[int, ModelBank], msg: tuple
+                  ) -> Tuple[tuple, bool]:
+        op = msg[0]
+        try:
+            if op == "load":
+                _, gen_id, payload = msg
+                banks[int(gen_id)] = ModelBank.from_payload(payload)
+                with self._lock:
+                    self.loads += 1
+                return ("ok",), False
+            if op == "exec":
+                _, gen_id, X, gids = msg
+                bank = banks[int(gen_id)]
+                # CPU time, same rationale as the pipe workers: each
+                # connection is one thread, so thread_time IS this exec
+                t0 = time.thread_time()
+                preds = bank.execute(np.asarray(X, np.float64),
+                                     np.asarray(gids, np.int64))
+                busy = time.thread_time() - t0
+                with self._lock:
+                    self.execs += 1
+                return ("exec_ok", preds, busy), False
+            if op == "drop":
+                banks.pop(int(msg[1]), None)
+                return ("ok",), False
+            if op == "ping":
+                return ("ok",), False
+            if op == "exit":
+                return ("ok",), True
+            return ("err", f"unknown op {op!r}"), False
+        except Exception as e:   # report, never die on a bad request
+            return ("err", f"{type(e).__name__}: {e}"), False
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            conns = list(self._conns)
+            threads = list(self._threads)
+        try:
+            # close() alone does not wake a blocked accept() on Linux;
+            # shutdown() makes it return immediately
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._accept_thread.join(timeout=5.0)
+        for t in threads:
+            t.join(timeout=5.0)
+
+    def __enter__(self) -> "WorkerServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TcpWorkerPool:
+    """N loopback ``repro.launch.shard_worker`` subprocesses, each on an
+    ephemeral port — the multi-host topology on one machine (real
+    processes, real sockets, real serialization). Context-manage it and
+    hand ``addresses`` to ``ShardPlane(remote=...)``."""
+
+    def __init__(self, procs: List[subprocess.Popen],
+                 addresses: List[str]):
+        self.procs = procs
+        self.addresses = addresses
+
+    def kill(self, index: int) -> None:
+        """Chaos hook: hard-kill one worker process mid-anything."""
+        self.procs[index].kill()
+
+    def close(self) -> None:
+        for p in self.procs:
+            try:
+                p.terminate()
+            except Exception:
+                pass
+        for p in self.procs:
+            try:
+                p.wait(timeout=5.0)
+            except Exception:
+                try:
+                    p.kill()
+                    p.wait(timeout=5.0)
+                except Exception:
+                    pass
+            if p.stdout is not None:
+                try:
+                    p.stdout.close()
+                except Exception:
+                    pass
+
+    def __enter__(self) -> "TcpWorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def launch_tcp_workers(n: int, *, host: str = "127.0.0.1"
+                       ) -> TcpWorkerPool:
+    """Spawn ``n`` shard-worker subprocesses on loopback ephemeral ports
+    and wait for each to announce ``listening HOST:PORT`` on stdout."""
+    import repro
+    env = dict(os.environ)
+    # repro is a namespace package (no __init__), so resolve via __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    procs: List[subprocess.Popen] = []
+    addresses: List[str] = []
+    try:
+        for _ in range(n):
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.shard_worker",
+                 "--host", host, "--port", "0"],
+                stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+                text=True, env=env))
+        for p in procs:
+            line = p.stdout.readline().strip()
+            if not line.startswith("listening "):
+                raise RuntimeError(
+                    f"shard worker failed to start (got {line!r})")
+            addresses.append(line.split(" ", 1)[1])
+    except Exception:
+        TcpWorkerPool(procs, addresses).close()
+        raise
+    return TcpWorkerPool(procs, addresses)
 
 
 # ----------------------------------------------------------------------
@@ -506,24 +901,63 @@ class ShardedBank:
 # ----------------------------------------------------------------------
 # the plane
 # ----------------------------------------------------------------------
+def _parse_addr(addr: Union[str, Tuple[str, int]]) -> Tuple[str, int]:
+    if isinstance(addr, (tuple, list)):
+        return str(addr[0]), int(addr[1])
+    host, _, port = str(addr).rpartition(":")
+    if not host or not port:
+        raise ValueError(f"remote worker address {addr!r} is not "
+                         "'host:port'")
+    return host, int(port)
+
+
 class ShardPlane:
     """N shard workers plus generation lifecycle. One plane outlives many
     bank generations (each ``oracle_refreshed`` swap loads a new one);
     workers outlive generations, and the per-shard breaker state carries
-    across swaps until ``breaker.reset()``."""
+    across swaps until ``breaker.reset()``.
+
+    ``workers`` local workers of ``mode`` come first; each ``remote``
+    address (``"host:port"`` of a :class:`WorkerServer`) appends a TCP
+    worker after them, taking the next shard indices — the partition,
+    scatter/gather, generations, and breaker treat every kind
+    identically."""
 
     def __init__(self, workers: int = 2, mode: str = "spawn",
-                 breaker: Optional[CircuitBreaker] = None):
-        if workers < 1:
-            raise ValueError("workers must be >= 1")
+                 breaker: Optional[CircuitBreaker] = None,
+                 remote: Sequence[Union[str, Tuple[str, int]]] = (),
+                 io_timeout_s: float = 60.0,
+                 max_frame: int = frames.MAX_FRAME):
+        remote = tuple(remote)
+        if workers < 0:
+            raise ValueError("workers must be >= 0")
+        if workers + len(remote) < 1:
+            raise ValueError("need at least one worker, local or remote")
         if mode not in ("spawn", "thread"):
             raise ValueError(f"unknown shard mode {mode!r}")
         self.mode = mode
-        self.n_workers = workers
+        self.remote = tuple(f"{h}:{p}"
+                            for h, p in map(_parse_addr, remote))
         self.breaker = breaker or CircuitBreaker(threshold=3,
                                                  cooldown_s=5.0)
         cls = _ProcessWorker if mode == "spawn" else _ThreadWorker
-        self.workers: List[_BaseWorker] = [cls(i) for i in range(workers)]
+        self.workers: List[_BaseWorker] = []
+        try:
+            for i in range(workers):
+                self.workers.append(cls(i))
+            for j, addr in enumerate(remote):
+                host, port = _parse_addr(addr)
+                self.workers.append(_RemoteWorker(
+                    workers + j, host, port, io_timeout_s=io_timeout_s,
+                    max_frame=max_frame))
+        except Exception:
+            for w in self.workers:   # half-built plane: tear down
+                try:
+                    w.close()
+                except Exception:
+                    pass
+            raise
+        self.n_workers = len(self.workers)
         self._lock = threading.Lock()
         self._gen_seq = 0
         self._gens: Dict[int, _GenState] = {}
@@ -552,12 +986,9 @@ class ShardPlane:
             for w, sub in zip(self.workers, sub_banks):
                 if sub is None or not w.alive:
                     continue
-                if self.mode == "spawn":
-                    spec, segs = _bank_to_spec(sub)
-                    segments.extend(segs)
-                    loads.append((w, w.submit(("load", gen_id, spec))))
-                else:
-                    loads.append((w, w.submit(("load", gen_id, sub))))
+                op, segs = w.prepare_load(gen_id, sub)
+                segments.extend(segs)
+                loads.append((w, w.submit(op)))
             for _, fut in loads:
                 fut.result()
         except Exception:
@@ -630,6 +1061,8 @@ class ShardPlane:
         return {
             "mode": self.mode,
             "workers": self.n_workers,
+            "worker_kinds": [w.kind for w in self.workers],
+            "remote": list(self.remote),
             "alive": self.alive_workers(),
             "generations": gens,
             "loads": self.loads,

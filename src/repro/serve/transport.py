@@ -67,6 +67,7 @@ from repro.api.types import (ApiError, ExecutionError, GridRequest,
                              PredictRequest, PredictResult,
                              UnsupportedRequestError, Workload)
 from repro.serve import faults as faults_mod
+from repro.serve import frames
 from repro.serve.latency_service import LatencyService
 from repro.serve.resilience import LEGACY_RETRY, RetryPolicy
 
@@ -701,63 +702,20 @@ def measure_columnar_from_rows(rows: Sequence[Dict[str, Any]]
 # Every array decodes with one np.frombuffer slice; the only per-row
 # Python work is assembling the calibrator's row dicts.
 
-_PFC_MAGIC = b"PFC1"
-_PFC_NULL_LEN = 0xFFFFFFFF
+# The column primitives (bounds-checked cursor, nullable string packing)
+# live in repro.serve.frames — the shard worker wire protocol reuses the
+# exact same layout for its tensor payloads.
+_PFC_MAGIC = frames.PFC_MAGIC
+_PFC_NULL_LEN = frames.PFC_NULL_LEN
+_pfc_pack_str = frames.pack_str_column
 
 
-def _pfc_pack_str(col: Sequence[Optional[str]]) -> bytes:
-    lens = np.empty(len(col), np.uint32)
-    chunks = []
-    for i, s in enumerate(col):
-        if s is None:
-            lens[i] = _PFC_NULL_LEN
-        else:
-            b = str(s).encode("utf-8")
-            lens[i] = len(b)
-            chunks.append(b)
-    return lens.tobytes() + b"".join(chunks)
-
-
-class _PfcReader:
+class _PfcReader(frames.Reader):
     """Cursor over a binary columnar body; every read is bounds-checked
     so a truncated or lying body raises a typed 400, never an IndexError
     deep inside numpy."""
 
-    def __init__(self, body: bytes):
-        self.body = body
-        self.off = 0
-
-    def take(self, nbytes: int) -> memoryview:
-        end = self.off + nbytes
-        if end > len(self.body):
-            raise MalformedRequestError(
-                f"truncated columnar body: needed {end} bytes, "
-                f"have {len(self.body)}")
-        view = memoryview(self.body)[self.off:end]
-        self.off = end
-        return view
-
-    def array(self, dtype: str, n: int) -> np.ndarray:
-        dt = np.dtype(dtype)
-        return np.frombuffer(self.take(dt.itemsize * n), dt)
-
-    def strings(self, n: int) -> List[Optional[str]]:
-        lens = self.array("<u4", n)
-        total = int(lens[lens != _PFC_NULL_LEN].sum()) if n else 0
-        blob = self.take(total)
-        out: List[Optional[str]] = []
-        pos = 0
-        try:
-            for ln in lens:
-                if ln == _PFC_NULL_LEN:
-                    out.append(None)
-                    continue
-                out.append(bytes(blob[pos:pos + ln]).decode("utf-8"))
-                pos += ln
-        except UnicodeDecodeError as e:
-            raise MalformedRequestError(
-                f"bad utf-8 in columnar string column: {e}") from e
-        return out
+    error = MalformedRequestError
 
 
 def measure_binary_from_rows(rows: Sequence[Dict[str, Any]]) -> bytes:

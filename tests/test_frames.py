@@ -1,0 +1,179 @@
+"""Frame codec edge cases (``repro.serve.frames``): partial reads across
+frame boundaries, oversized-frame rejection, PFC1 tensor round-trip
+bit-identity for float64 shard payloads, and codec negotiation down to an
+older json-only protocol-1 worker."""
+import numpy as np
+import pytest
+
+from repro.serve import frames
+from repro.serve.shard import ShardPlane, WorkerServer
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+def test_decoder_handles_partial_reads_across_boundaries():
+    wire = (frames.encode_frame(frames.OP_HELLO, b"hello-body")
+            + frames.encode_frame(frames.OP_MSG, b"")
+            + frames.encode_frame(frames.OP_MSG, bytes(range(256))))
+    # worst case: the socket delivers one byte at a time
+    dec = frames.FrameDecoder()
+    got = []
+    for i in range(len(wire)):
+        got.extend(dec.feed(wire[i:i + 1]))
+    assert got == [(frames.OP_HELLO, b"hello-body"),
+                   (frames.OP_MSG, b""),
+                   (frames.OP_MSG, bytes(range(256)))]
+    assert dec.buffered == 0
+
+
+def test_decoder_handles_coalesced_and_split_headers():
+    a = frames.encode_frame(1, b"x" * 7)
+    b = frames.encode_frame(2, b"y" * 11)
+    wire = a + b
+    # split inside the second frame's length header
+    cut = len(a) + 2
+    dec = frames.FrameDecoder()
+    first = dec.feed(wire[:cut])
+    assert first == [(1, b"x" * 7)]
+    assert dec.feed(wire[cut:]) == [(2, b"y" * 11)]
+
+
+def test_oversized_frame_rejected_before_buffering():
+    dec = frames.FrameDecoder(max_frame=16)
+    big = frames.encode_frame(1, b"z" * 1000)
+    with pytest.raises(frames.FrameError, match="over max_frame"):
+        dec.feed(big[:8])      # header alone is enough to reject
+    with pytest.raises(frames.FrameError):
+        frames.encode_frame(1, b"z" * 1000, max_frame=16)
+
+
+def test_zero_length_frame_rejected():
+    dec = frames.FrameDecoder()
+    with pytest.raises(frames.FrameError, match="no opcode"):
+        dec.feed(b"\x00\x00\x00\x00")
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+PROTO_MSGS = [
+    ("ping",),
+    ("load", 7, {"pairs": (("T4", "V100"),), "backend": "numpy",
+                 "n": None, "ok": True}),
+    ("exec_ok", np.linspace(0, 1, 17), 0.25),
+    ("err", "ValueError: boom"),
+]
+
+
+@pytest.mark.parametrize("codec", sorted(frames.CODECS))
+@pytest.mark.parametrize("msg", PROTO_MSGS,
+                         ids=[m[0] for m in PROTO_MSGS])
+def test_codec_round_trips_protocol_tuples(codec, msg):
+    pack, unpack = frames.CODECS[codec]
+    out = unpack(pack(msg))
+    assert isinstance(out, tuple) and out[0] == msg[0]
+    for a, b in zip(msg, out):
+        if isinstance(a, np.ndarray):
+            assert a.tobytes() == b.tobytes()
+        else:
+            assert a == b
+
+
+@pytest.mark.parametrize("codec", sorted(frames.CODECS))
+def test_float64_tensors_round_trip_bit_identical(codec):
+    pack, unpack = frames.CODECS[codec]
+    rng = np.random.default_rng(0)
+    # adversarial float64 content: subnormals, infs, huge magnitudes,
+    # negative zero — bit-identity means the BYTES survive, not the values
+    arr = rng.standard_normal((5, 31))
+    value = np.ascontiguousarray(arr[::-1] * 3.7)
+    arr[0, :4] = [np.inf, -np.inf, 5e-324, -0.0]
+    arr[1, 0] = 1e308
+    payload = {"forest": {"thr": arr, "value": value},
+               "lin_coef": arr[:2], "gids": np.arange(31, dtype=np.int64)}
+    out = unpack(pack(payload))
+    for key in ("thr", "value"):
+        got = out["forest"][key]
+        assert got.dtype == np.float64
+        assert got.tobytes() == payload["forest"][key].tobytes()
+    assert out["gids"].dtype == np.int64
+    assert out["lin_coef"].shape == (2, 31)
+
+
+def test_pfc1_truncated_body_raises_frame_error():
+    body = frames.pack_value(("exec_ok", np.arange(64.0), 0.1))
+    for cut in (1, len(body) // 2, len(body) - 1):
+        with pytest.raises(frames.FrameError):
+            frames.unpack_value(body[:cut])
+
+
+def test_pfc1_trailing_garbage_raises():
+    with pytest.raises(frames.FrameError, match="trailing"):
+        frames.unpack_value(frames.pack_value(("ping",)) + b"\x00")
+
+
+def test_pfc1_array_shape_byte_mismatch_raises():
+    body = bytearray(frames.pack_value(np.arange(8.0)))
+    # corrupt the declared byte count (last 4 bytes of the array header)
+    body[-(8 * 8) - 4:-(8 * 8)] = (99).to_bytes(4, "little")
+    with pytest.raises(frames.FrameError, match="does not match shape"):
+        frames.unpack_value(bytes(body))
+
+
+def test_json_codec_requires_string_keys():
+    with pytest.raises(frames.FrameError, match="string dict keys"):
+        frames.json_pack_value({1: "x"})
+
+
+# ---------------------------------------------------------------------------
+# handshake / negotiation
+# ---------------------------------------------------------------------------
+def test_negotiate_prefers_binary_then_falls_back():
+    assert frames.negotiate_codec(["json", "pfc1"]) == "pfc1"
+    assert frames.negotiate_codec(["json"]) == "json"
+    with pytest.raises(frames.FrameError, match="no shared codec"):
+        frames.negotiate_codec(["msgpack"])
+
+
+def test_parse_hello_rejects_non_worker_peers():
+    with pytest.raises(frames.FrameError):
+        frames.parse_hello(b"HTTP/1.1 400 Bad Request")
+    with pytest.raises(frames.FrameError, match="not a shard worker"):
+        frames.parse_hello(b'{"magic": "nope"}')
+
+
+def test_old_protocol1_json_worker_negotiates_down(tiny_bank):
+    """A protocol-1 worker that only speaks the json codec still serves
+    shards for a protocol-2 parent — bit-identically, because the json
+    codec also ships raw array bytes."""
+    bank, X, gids = tiny_bank
+    ref = bank.execute(X, gids)
+    with WorkerServer(protocol=1, codecs=("json",)) as server:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[server.address]) as plane:
+            w = plane.workers[0]
+            assert w.protocol == 1
+            assert w.codec == "json"
+            sharded = plane.load(bank)
+            assert sharded.execute(X, gids).tobytes() == ref.tobytes()
+
+
+@pytest.fixture(scope="module")
+def tiny_bank():
+    from repro import api
+    from repro.core import workloads
+    from repro.core.predictor import ProfetConfig
+
+    ds = workloads.generate(devices=("T4", "V100"),
+                            models=("LeNet5", "AlexNet"))
+    cfg = ProfetConfig(members=("linear", "forest"), n_trees=8, seed=0)
+    oracle = api.LatencyOracle.fit(ds, cfg)
+    bank = oracle.bank
+    rng = np.random.default_rng(2)
+    gids = rng.integers(0, len(bank.pairs), 24).astype(np.int64)
+    cases = oracle.dataset.cases
+    X = np.stack([oracle.feature_matrix(
+        bank.pairs[g][0], [cases[rng.integers(len(cases))]])[0]
+        for g in gids])
+    return bank, X, gids

@@ -14,8 +14,11 @@ from repro.api import planner
 from repro.api.types import PartialExecutionError, ShardExecutionError
 from repro.core import workloads
 from repro.core.predictor import ProfetConfig
-from repro.serve import (BackgroundServer, Client, LatencyService,
-                         ShardPlane, TransportError, synthetic_requests)
+from repro.serve import (BackgroundServer, Client, FaultInjector,
+                         FaultPlan, FaultRule, LatencyService, ShardPlane,
+                         TransportError, WorkerDeadError, WorkerServer,
+                         launch_tcp_workers, synthetic_requests)
+from repro.serve import faults
 
 # float64-only members: sharded answers must be bit-identical
 CFG = ProfetConfig(members=("linear", "forest"), n_trees=15, seed=0)
@@ -352,3 +355,223 @@ def test_plane_construction_failure_degrades_not_crashes(oracle):
         assert all(sr.error is None for sr in srs)
     finally:
         plane.close()
+
+
+# ---------------------------------------------------------------------------
+# TCP workers: remote bank distribution over the framed socket protocol
+# ---------------------------------------------------------------------------
+
+
+def _fault_server(*rules, seed=0, **kw):
+    return WorkerServer(faults=FaultInjector(FaultPlan(rules=tuple(rules),
+                                                       seed=seed)), **kw)
+
+
+def test_tcp_plane_bit_identical(oracle):
+    """Remote-only and mixed local+remote planes answer bit-identically
+    to the single-worker banked path — the shard's float64 tensors ride
+    the wire as raw bytes, so the bytes ARE the bytes."""
+    X, gids = _wave_inputs(oracle, n_rows=64, seed=11)
+    want = oracle.bank.execute(X, gids)
+    with WorkerServer() as s0, WorkerServer() as s1:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[s0.address, s1.address]) as plane:
+            assert plane.summary()["worker_kinds"] == ["tcp", "tcp"]
+            sharded = plane.load(oracle.bank)
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+            assert s0.execs + s1.execs == 2
+        with ShardPlane(workers=1, mode="thread",
+                        remote=[s0.address]) as plane:
+            sharded = plane.load(oracle.bank)
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+            assert plane.summary()["worker_kinds"] == ["thread", "tcp"]
+
+
+def test_tcp_connection_reset_mid_wave_fails_only_riding_rows(oracle):
+    """An injected RST on the exec reply (hit 1: hit 0 is the load) kills
+    exactly that shard's slice: typed partial failure, breaker
+    force-open, later waves bit-identical through the parent fallback."""
+    X, gids = _wave_inputs(oracle, n_rows=50, seed=12)
+    want = oracle.bank.execute(X, gids)
+    with WorkerServer() as s0, \
+            _fault_server(FaultRule(site=faults.SITE_SHARD_RESET,
+                                    kind="error", at=(1,))) as s1:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[s0.address, s1.address]) as plane:
+            sharded = plane.load(oracle.bank)
+            with pytest.raises(PartialExecutionError) as ei:
+                sharded.execute(X, gids)
+            dead_rows = np.isin(gids, [oracle.bank.gid[p]
+                                       for p in sharded.partition[1]])
+            np.testing.assert_array_equal(ei.value.failed_rows, dead_rows)
+            np.testing.assert_array_equal(ei.value.preds[~dead_rows],
+                                          want[~dead_rows])
+            assert plane.breaker.state(("shard", 1)) == "open"
+            assert plane.alive_workers() == 1
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+            assert plane.fallback_rows == int(dead_rows.sum())
+
+
+def test_tcp_truncated_frame_fault_is_worker_death(oracle):
+    """A reply cut mid-frame (then RST) must never decode into a wrong
+    answer — the parent sees unusable bytes and declares the worker
+    dead."""
+    X, gids = _wave_inputs(oracle, n_rows=40, seed=13)
+    want = oracle.bank.execute(X, gids)
+    with WorkerServer() as s0, \
+            _fault_server(FaultRule(site=faults.SITE_SHARD_FRAME,
+                                    kind="drop", at=(1,))) as s1:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[s0.address, s1.address]) as plane:
+            sharded = plane.load(oracle.bank)
+            with pytest.raises(PartialExecutionError):
+                sharded.execute(X, gids)
+            assert not plane.workers[1].alive
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+
+
+def test_tcp_slow_peer_times_out_and_degrades(oracle):
+    """A peer that stalls past io_timeout_s is dead to the parent — a
+    late reply could pair with the wrong request, so the connection is
+    abandoned, the rows fail typed, and the shard falls back."""
+    X, gids = _wave_inputs(oracle, n_rows=40, seed=14)
+    want = oracle.bank.execute(X, gids)
+    with WorkerServer() as s0, \
+            _fault_server(FaultRule(site=faults.SITE_SHARD_SLOW,
+                                    kind="delay", delay_s=2.0,
+                                    at=(1,))) as s1:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[s0.address, s1.address],
+                        io_timeout_s=0.4) as plane:
+            sharded = plane.load(oracle.bank)
+            t0 = time.perf_counter()
+            with pytest.raises(PartialExecutionError):
+                sharded.execute(X, gids)
+            assert time.perf_counter() - t0 < 1.5   # timed out, not 2 s
+            assert not plane.workers[1].alive
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+
+
+def test_tcp_remote_load_failure_aborts_swap_all_or_nothing(
+        oracle, fresh_oracle):
+    """A remote worker that fails the generation load rejects the whole
+    swap: the incumbent generation keeps serving every shard."""
+    X, gids = _wave_inputs(oracle, n_rows=30, seed=15)
+    want = oracle.bank.execute(X, gids)
+    with WorkerServer() as s0, \
+            _fault_server(FaultRule(site=faults.SITE_SHARD_RESET,
+                                    kind="error", at=(1,))) as s1:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[s0.address, s1.address]) as plane:
+            gen1 = plane.load(oracle.bank)
+            with pytest.raises(WorkerDeadError):
+                plane.load(fresh_oracle.bank)   # hit 1 on s1: reset
+            # all-or-nothing: only the incumbent generation exists, and
+            # it still answers (dead shard parent-side, bit-identical)
+            assert plane.summary()["generations"] == [gen1.gen_id]
+            np.testing.assert_array_equal(gen1.execute(X, gids), want)
+
+
+def test_tcp_no_mixed_epochs_under_socket_faults(oracle, fresh_oracle,
+                                                 stream):
+    """The PR 8 zero-mixed-epoch invariant, now with remote workers AND
+    rate-injected socket chaos (resets + stalls): every answered request
+    matches exactly one oracle's bit-exact prediction, and failures are
+    typed slice errors — never a blended or stale value."""
+    s0 = _fault_server(
+        FaultRule(site=faults.SITE_SHARD_RESET, kind="error", rate=0.03),
+        FaultRule(site=faults.SITE_SHARD_SLOW, kind="delay",
+                  delay_s=0.02, rate=0.2), seed=42)
+    s1 = _fault_server(
+        FaultRule(site=faults.SITE_SHARD_FRAME, kind="drop", rate=0.03),
+        seed=7)
+    plane = ShardPlane(workers=1, mode="thread",
+                       remote=[s0.address, s1.address], io_timeout_s=5.0)
+    svc = LatencyService(oracle, max_wave=16, cache_size=0,
+                         shard_plane=plane)
+    want = {}
+    for orc, tag in ((oracle, "e1"), (fresh_oracle, "e2")):
+        for i, res in enumerate(orc.predict_many(stream[:32])):
+            want[(tag, i)] = res.latency_ms
+    epoch_tag = {svc.epoch: "e1"}
+    results = []
+    stop = threading.Event()
+
+    def pump():
+        while not stop.is_set():
+            srs = [(i, svc.submit(r)) for i, r in enumerate(stream[:32])]
+            svc.run()
+            results.extend(srs)
+
+    t = threading.Thread(target=pump)
+    t.start()
+    try:
+        for k in range(4):
+            time.sleep(0.08)
+            orc, tag = ((fresh_oracle, "e2") if k % 2 == 0
+                        else (oracle, "e1"))
+            try:
+                epoch_tag[svc.oracle_refreshed(orc, f"{tag}.{k}")] = tag
+            except (WorkerDeadError, RuntimeError):
+                pass        # swap rejected whole: incumbent must serve on
+    finally:
+        stop.set()
+        t.join()
+        plane.close()
+        s0.close()
+        s1.close()
+    assert len(results) >= 64
+    answered = 0
+    for i, sr in results:
+        if sr.error is not None:
+            assert isinstance(sr.error, ShardExecutionError), sr.error
+            continue
+        answered += 1
+        tag = epoch_tag[sr.result.epoch]
+        assert sr.result.latency_ms == want[(tag, i)], (i, tag)
+    assert answered >= 32
+
+
+def test_tcp_subprocess_workers_end_to_end(oracle):
+    """The real multi-host topology on loopback: shard_worker
+    subprocesses, generation distribution over the wire, a hard process
+    kill mid-service, typed containment, and fallback bit-identity."""
+    X, gids = _wave_inputs(oracle, n_rows=48, seed=16)
+    want = oracle.bank.execute(X, gids)
+    with launch_tcp_workers(2) as pool:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=pool.addresses) as plane:
+            sharded = plane.load(oracle.bank)
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+            pool.kill(1)                    # SIGKILL the worker process
+            pool.procs[1].wait(timeout=5.0)
+            with pytest.raises(PartialExecutionError) as ei:
+                sharded.execute(X, gids)
+            dead_rows = np.isin(gids, [oracle.bank.gid[p]
+                                       for p in sharded.partition[1]])
+            np.testing.assert_array_equal(ei.value.failed_rows, dead_rows)
+            np.testing.assert_array_equal(sharded.execute(X, gids), want)
+            assert plane.alive_workers() == 1
+
+
+def test_http_replay_over_tcp_workers(oracle, stream):
+    """Full stack: HTTP transport -> wave service -> TCP shard plane.
+    Every replayed answer must equal the unsharded oracle's, under the
+    served epoch."""
+    with WorkerServer() as s0, WorkerServer() as s1:
+        plane = ShardPlane(workers=0, mode="thread",
+                           remote=[s0.address, s1.address])
+        svc = LatencyService(oracle, max_wave=32, shard_plane=plane)
+        bg = BackgroundServer(svc, host="127.0.0.1", port=0).start()
+        try:
+            want = [r.latency_ms for r in oracle.predict_many(stream[:40])]
+            with Client(bg.host, bg.port) as c:
+                for i, req in enumerate(stream[:40]):
+                    got = c.predict(req)
+                    assert got["latency_ms"] == want[i]
+                    assert got["epoch"] == svc.epoch
+                h = c.healthz()
+                assert h["status"] == "ok"
+        finally:
+            bg.stop()
+            plane.close()
