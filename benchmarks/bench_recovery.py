@@ -1,0 +1,148 @@
+"""Self-healing recovery: throughput restoration after a SIGKILLed shard
+worker is auto-respawned and adopted.
+
+PR 8/9 gate that worker death is *contained* (typed errors, parent-side
+fallback, zero lost requests). This bench gates that it is also
+*repaired*: with the lifecycle supervisor running, a hard worker kill
+mid-replay must end with the worker re-forked, re-shipped, adopted — and
+the plane back at full multi-worker throughput.
+
+Three phases over one 4-worker spawn plane (the production local mode):
+
+  1. **Clean** — an HTTP replay against the healthy 4-worker service:
+     the baseline requests/s.
+  2. **Kill** — the same replay with one worker SIGKILLed mid-stream;
+     clients carry a retry policy (500/503 are retryable — a mid-wave
+     death surfaces as a typed 500 whose retry answers through the
+     parent fallback), so the gate is ZERO lost requests.
+  3. **Recovered** — wait for the supervisor to adopt a replacement
+     (bounded), then replay again: requests/s must be **>= 0.9x** the
+     clean phase — adoption actually restored the plane, rather than
+     leaving the shard on the single-threaded parent fallback forever.
+
+Every answered request in every phase must match the unsharded oracle
+bit-exactly (the recovery window never blends epochs or rounds).
+
+    PYTHONPATH=src python -m benchmarks.bench_recovery           # full
+    PYTHONPATH=src python -m benchmarks.bench_recovery --smoke   # CI
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from benchmarks.bench_shard import _fit_oracle
+from repro.serve import (BackgroundServer, LatencyService, LifecycleConfig,
+                         RetryPolicy, ShardPlane, replay,
+                         synthetic_requests)
+
+THROUGHPUT_FLOOR = 0.9     # recovered rps >= 0.9x clean rps
+N_WORKERS = 4
+ADOPT_DEADLINE_S = 30.0
+
+RETRY = RetryPolicy(max_attempts=5, base_s=0.02, multiplier=2.0,
+                    max_backoff_s=0.5, jitter=0.0, seed=0,
+                    retry_statuses=frozenset({500, 503}))
+
+
+def _check_bits(rep: dict, want, phase: str) -> None:
+    lost = rep["n"] - rep["ok"]
+    assert lost == 0, (
+        f"{phase}: {lost} lost requests ({rep['errors'][:3]})")
+    for i, r in enumerate(rep["results"]):
+        assert r["latency_ms"] == want[i], (
+            f"{phase}: row {i} diverged from the oracle")
+
+
+def run(smoke: bool = False) -> dict:
+    oracle = _fit_oracle(smoke)
+    oracle.warmup(max_rows=512)
+    n_requests = 6000 if smoke else 20000
+    base = synthetic_requests(oracle, n=500, seed=0)
+    reqs = (base * (n_requests // len(base) + 1))[:n_requests]
+    want_base = [r.latency_ms for r in oracle.predict_many(base)]
+    want = (want_base * (n_requests // len(base) + 1))[:n_requests]
+
+    plane = ShardPlane(workers=N_WORKERS, mode="spawn")
+    svc = LatencyService(
+        oracle, max_wave=64, shard_plane=plane,
+        supervise=LifecycleConfig(lease_interval_s=0.05,
+                                  lease_timeout_s=2.0))
+    bg = BackgroundServer(svc, host="127.0.0.1", port=0).start()
+    try:
+        # phase 1: clean 4-worker baseline (warm, then measure)
+        replay(bg.host, bg.port, reqs[:len(base)], clients=8)
+        clean = replay(bg.host, bg.port, reqs, clients=8)
+        _check_bits(clean, want, "clean")
+
+        # phase 2: SIGKILL one worker mid-replay; retries absorb the
+        # typed mid-wave 500s -> zero lost
+        victim = plane.workers[1]
+        killer = threading.Timer(
+            min(0.2, clean["wall_s"] / 4), victim.kill)
+        killer.start()
+        killed = replay(bg.host, bg.port, reqs, clients=8, retry=RETRY)
+        killer.join()
+        _check_bits(killed, want, "killed")
+
+        # phase 3: bounded wait for adoption, then the restored rate
+        deadline = time.monotonic() + ADOPT_DEADLINE_S
+        while plane.adoptions < 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        adopted = plane.adoptions >= 1 and plane.alive_workers() == N_WORKERS
+        recovered = replay(bg.host, bg.port, reqs, clients=8)
+        _check_bits(recovered, want, "recovered")
+        lifecycle = plane.summary()["lifecycle"]
+    finally:
+        bg.stop()
+        plane.close()
+
+    ratio = recovered["requests_per_s"] / clean["requests_per_s"]
+    out = {"smoke": smoke, "n_requests": n_requests,
+           "workers": N_WORKERS,
+           "clean_rps": clean["requests_per_s"],
+           "killed_rps": killed["requests_per_s"],
+           "recovered_rps": recovered["requests_per_s"],
+           "throughput_ratio": ratio,
+           "throughput_floor": THROUGHPUT_FLOOR,
+           "adopted": adopted,
+           "respawns": lifecycle["respawns"],
+           "lost": 0, "bit_identical": True}
+    from benchmarks import common
+    common.save("recovery", out)
+    return out
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    smoke = "--smoke" in argv
+    t0 = time.perf_counter()
+    r = run(smoke=smoke)
+    wall = time.perf_counter() - t0
+    print(f"recovery: {r['n_requests']} requests x {r['workers']} spawn "
+          f"workers -> clean {r['clean_rps']:.0f} req/s  "
+          f"killed {r['killed_rps']:.0f} req/s (0 lost)  "
+          f"recovered {r['recovered_rps']:.0f} req/s "
+          f"(ratio {r['throughput_ratio']:.2f} >= {THROUGHPUT_FLOOR})  "
+          f"respawns {r['respawns']}")
+    ok = (r["adopted"] and r["lost"] == 0 and r["bit_identical"]
+          and r["throughput_ratio"] >= THROUGHPUT_FLOOR)
+    from benchmarks import common
+    common.save_bench(
+        "recovery", speedup=r["throughput_ratio"],
+        floor=THROUGHPUT_FLOOR, wall_s=wall, passed=ok, smoke=smoke,
+        extra={"workers": r["workers"], "clean_rps": r["clean_rps"],
+               "killed_rps": r["killed_rps"],
+               "recovered_rps": r["recovered_rps"],
+               "adopted": r["adopted"], "respawns": r["respawns"],
+               "lost": r["lost"], "bit_identical": r["bit_identical"]})
+    if not ok:
+        print("FAIL: post-recovery throughput under its floor "
+              "(or adoption/zero-lost gate broken)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

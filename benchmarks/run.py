@@ -32,6 +32,8 @@ BENCHES = [
      "multi-worker sharded wave execution vs single-worker bank"),
     ("multihost", "benchmarks.bench_multihost",
      "TCP-loopback multi-host shard plane vs single-worker bank"),
+    ("recovery", "benchmarks.bench_recovery",
+     "self-healing worker recovery: post-adoption throughput restoration"),
     ("roofline", "benchmarks.bench_roofline", "Roofline table (dry-run)"),
     ("perf", "benchmarks.bench_perf", "Perf before/after (dry-run)"),
     ("serving", "benchmarks.bench_serve:run_engine",

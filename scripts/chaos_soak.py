@@ -1,0 +1,208 @@
+"""Seeded chaos soak for the self-healing serving plane.
+
+Repeatedly SIGKILLs spawn workers, hard-kills TCP shard-worker
+subprocesses, RST-injects the TCP wire, and swaps the serving oracle —
+all while a live pipelined HTTP replay runs with a retry policy — then
+asserts the system healed completely:
+
+  * ZERO lost requests across the whole soak (typed mid-wave 500s retry
+    through the parent fallback);
+  * every answered request matches exactly ONE oracle bit-exactly under
+    its response epoch (no mixed-epoch waves through any recovery
+    window);
+  * at the end every worker slot is live again (each kill was adopted
+    back, not left degraded) and a final clean replay — NO retry —
+    answers everything.
+
+The chaos schedule is drawn from one seed, defaulting to the current
+git SHA's leading hex (so every CI commit soaks a different schedule);
+a failing run prints the seed and is replayed with::
+
+    PYTHONPATH=src python scripts/chaos_soak.py --seed 0x1213432a
+
+Wire-level faults ride the same FaultPlan seed, so the socket chaos is
+scripted too, not just the kill schedule.
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import workloads
+from repro.core.predictor import ProfetConfig
+from repro.serve import (BackgroundServer, LatencyService, LifecycleConfig,
+                         RetryPolicy, ShardPlane, launch_tcp_workers,
+                         replay, synthetic_requests)
+
+RETRY = RetryPolicy(max_attempts=6, base_s=0.02, multiplier=2.0,
+                    max_backoff_s=0.5, jitter=0.0, seed=0,
+                    retry_statuses=frozenset({500, 503}))
+HEAL_DEADLINE_S = 60.0
+
+
+def _git_seed() -> int:
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True).stdout.strip()
+        return int(sha[:8], 16)
+    except (OSError, ValueError):
+        return int(time.time())
+
+
+def _fit(seed: int) -> api.LatencyOracle:
+    ds = workloads.generate(devices=("T4", "V100", "K80"),
+                            models=("LeNet5", "AlexNet", "ResNet18"))
+    cfg = ProfetConfig(members=("linear", "forest"), n_trees=20, seed=seed)
+    return api.LatencyOracle.fit(ds, cfg)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Seeded kill/reset chaos soak (see module docstring).")
+    ap.add_argument("--seed", type=lambda s: int(s, 0), default=None,
+                    help="chaos schedule seed (default: git SHA prefix)")
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="chaos events to inject")
+    ap.add_argument("--requests", type=int, default=400,
+                    help="requests per replay pass during the soak")
+    ap.add_argument("--spawn-workers", type=int, default=2)
+    ap.add_argument("--tcp-workers", type=int, default=2)
+    args = ap.parse_args(argv)
+    seed = args.seed if args.seed is not None else _git_seed()
+    rng = np.random.default_rng(seed)
+    print(f"chaos-soak: seed {seed:#x}  rounds {args.rounds}  "
+          f"workers {args.spawn_workers} spawn + {args.tcp_workers} tcp",
+          flush=True)
+
+    oracle = _fit(0)
+    fresh = _fit(7)
+    oracle.warmup(max_rows=256)
+    reqs = synthetic_requests(oracle, n=args.requests, seed=1)
+    want = {}
+    for orc, tag in ((oracle, "e1"), (fresh, "e2")):
+        for i, res in enumerate(orc.predict_many(reqs)):
+            want[(tag, i)] = res.latency_ms
+
+    pool = launch_tcp_workers(args.tcp_workers)
+    plane = None
+    bg = None
+    violations = []
+    try:
+        plane = ShardPlane(workers=args.spawn_workers, mode="spawn",
+                           remote=pool.addresses)
+        n_workers = plane.n_workers
+        endpoints = {args.spawn_workers + j:
+                     (lambda j=j: pool.respawn(j))
+                     for j in range(args.tcp_workers)}
+        svc = LatencyService(
+            oracle, max_wave=32, cache_size=0, shard_plane=plane,
+            supervise=LifecycleConfig(lease_interval_s=0.05,
+                                      endpoints=endpoints))
+        bg = BackgroundServer(svc, host="127.0.0.1", port=0).start()
+        epoch_tag = {svc.epoch: "e1"}
+        tag_lock = threading.Lock()
+
+        stop = threading.Event()
+        replayed = {"n": 0, "ok": 0}
+
+        def pump():
+            while not stop.is_set():
+                rep = replay(bg.host, bg.port, reqs,
+                             clients=4, retry=RETRY)
+                replayed["n"] += rep["n"]
+                replayed["ok"] += rep["ok"]
+                if rep["ok"] != rep["n"]:
+                    violations.append(
+                        f"lost {rep['n'] - rep['ok']} requests "
+                        f"({rep['errors'][:3]})")
+                with tag_lock:
+                    tags = dict(epoch_tag)
+                for i, r in enumerate(rep["results"]):
+                    if r is None:
+                        continue
+                    w = want[(tags[r["epoch"]], i)]
+                    if r["latency_ms"] != w:
+                        violations.append(
+                            f"row {i} epoch {r['epoch']}: "
+                            f"{r['latency_ms']} != {w}")
+
+        pumper = threading.Thread(target=pump)
+        pumper.start()
+
+        # scripted chaos: every decision comes from the one seeded rng
+        events = []
+        for k in range(args.rounds):
+            time.sleep(float(rng.uniform(0.1, 0.4)))
+            kind = rng.choice(("kill-spawn", "kill-tcp", "swap"))
+            if kind == "kill-spawn":
+                i = int(rng.integers(0, args.spawn_workers))
+                plane.workers[i].kill()
+                events.append(f"kill-spawn:{i}")
+            elif kind == "kill-tcp":
+                j = int(rng.integers(0, args.tcp_workers))
+                pool.kill(j)
+                events.append(f"kill-tcp:{j}")
+            else:
+                orc, tag = ((fresh, "e2") if k % 2 == 0
+                            else (oracle, "e1"))
+                try:
+                    ep = svc.oracle_refreshed(orc, f"{tag}.{k}")
+                    with tag_lock:
+                        epoch_tag[ep] = tag
+                    events.append(f"swap:{tag}")
+                except Exception as e:
+                    # a swap racing a death may be rejected whole — the
+                    # incumbent serves on, which the pump verifies
+                    events.append(f"swap-rejected:{type(e).__name__}")
+        print(f"chaos-soak: events {' '.join(events)}", flush=True)
+
+        stop.set()
+        pumper.join()
+
+        # full recovery: every slot live again within the deadline
+        deadline = time.monotonic() + HEAL_DEADLINE_S
+        while time.monotonic() < deadline:
+            if plane.alive_workers() == n_workers:
+                break
+            time.sleep(0.1)
+        if plane.alive_workers() != n_workers:
+            violations.append(
+                f"only {plane.alive_workers()}/{n_workers} workers "
+                f"recovered within {HEAL_DEADLINE_S}s")
+
+        # final clean pass: no retry crutch, everything answers
+        final = replay(bg.host, bg.port, reqs, clients=4)
+        if final["ok"] != final["n"]:
+            violations.append(
+                f"final clean replay lost {final['n'] - final['ok']}")
+        s = plane.summary()
+        print(f"chaos-soak: {replayed['ok']}/{replayed['n']} soak "
+              f"requests ok  adoptions {s['adoptions']}  "
+              f"respawns {s['lifecycle']['respawns']}  "
+              f"final {final['ok']}/{final['n']}  "
+              f"alive {s['alive']}/{s['workers']}", flush=True)
+    finally:
+        if bg is not None:
+            bg.stop()
+        if plane is not None:
+            plane.close()
+        pool.close()
+
+    if violations:
+        print(f"chaos-soak FAILED (replay with --seed {seed:#x}):",
+              file=sys.stderr)
+        for v in violations[:10]:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"chaos-soak ok (seed {seed:#x})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

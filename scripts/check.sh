@@ -7,13 +7,21 @@
 #   test         the full pytest suite
 #   integration  the multi-worker serving suites under a hard timeout —
 #                the spawn-mode shard tests plus the TCP-loopback frame /
-#                remote-worker tests (tests/test_shard.py,
-#                tests/test_frames.py) with per-test --durations persisted
-#                to results/bench/INTEGRATION_durations.txt, then a strict
-#                TCP-loopback multi-worker HTTP replay (every request must
-#                answer), then scripts/durations_gate.py enforcing a
-#                slowest-test budget so worker-startup or handshake creep
-#                fails loudly instead of slowly rotting CI
+#                remote-worker tests and the worker-lifecycle recovery
+#                suite (tests/test_shard.py, tests/test_frames.py,
+#                tests/test_lifecycle.py) with per-test --durations
+#                persisted to results/bench/INTEGRATION_durations.txt,
+#                then a strict TCP-loopback multi-worker HTTP replay
+#                (every request must answer), then a seeded chaos soak
+#                (scripts/chaos_soak.py: repeated SIGKILL/RST kills +
+#                oracle swaps under live retried replay; the schedule
+#                seed derives from the git SHA so every commit soaks a
+#                different schedule, and a failure prints the seed for
+#                exact replay; its wall time lands in CHECK_stages.json
+#                as its own "chaos-soak" row), then
+#                scripts/durations_gate.py enforcing a slowest-test
+#                budget so worker-startup or handshake creep fails
+#                loudly instead of slowly rotting CI
 #   bench-smoke  the nine floor-gated smoke benchmarks — predict_grid (5x
 #                vectorization floor + loop parity), Profet.fit (speedup
 #                floor + MAPE parity vs the frozen reference path), fused
@@ -32,8 +40,11 @@
 #                single-worker bank, zero-loss mixed replay with
 #                bounded p99), and multi-host sharding (4 TCP-loopback
 #                shard_worker subprocesses: 2.0x critical-path floor,
-#                bit-identity across the wire, zero-loss replay) —
-#                each writing its results/bench/BENCH_*.json trajectory
+#                bit-identity across the wire, zero-loss replay), and
+#                self-healing recovery (SIGKILL a spawn worker mid-replay
+#                under the lifecycle supervisor: zero lost requests, and
+#                post-adoption throughput >= 0.9x the clean 4-worker
+#                rate) — each writing its results/bench/BENCH_*.json trajectory
 #                record, then scripts/bench_report.py --gate turns the
 #                trajectory into a merge gate: any floor failure, or a
 #                >20% speedup regression vs a previous trajectory dropped
@@ -95,11 +106,22 @@ stage_integration() {
     # wedged worker handshake kills the stage instead of hanging CI, and
     # --durations persisted so the slowest-test budget below has data
     timeout 900 python -m pytest -q tests/test_shard.py tests/test_frames.py \
+        tests/test_lifecycle.py \
         --durations=20 2>&1 | tee results/bench/INTEGRATION_durations.txt
     # strict TCP-loopback replay through the real launcher: subprocess
     # workers, HTTP front end, every request must answer (exit 1 if not)
     timeout 300 python -m repro.launch.serve_http \
         --workers 2 --shard-mode tcp --requests 200 --clients 4 --strict
+    # seeded chaos soak: kill/reset storms + swaps under live retried
+    # replay; zero lost + full recovery, schedule replayable by seed.
+    # Timed as its own CHECK_stages.json row.
+    local c0=$SECONDS
+    if timeout 300 python scripts/chaos_soak.py; then
+        record_stage "chaos-soak" "$((SECONDS - c0))" ok
+    else
+        record_stage "chaos-soak" "$((SECONDS - c0))" fail
+        return 1
+    fi
     python scripts/durations_gate.py results/bench/INTEGRATION_durations.txt \
         --budget-s 20
 }
@@ -114,6 +136,7 @@ stage_bench_smoke() {
     python -m benchmarks.bench_faults --smoke
     python -m benchmarks.bench_shard --smoke
     python -m benchmarks.bench_multihost --smoke
+    python -m benchmarks.bench_recovery --smoke
     # merge gate over the trajectory: floors + >20% regressions vs a
     # previous artifact under results/bench/prev (when one is present);
     # also prints the trajectory table

@@ -73,6 +73,15 @@ def main(argv=None):
                     help="run as a shard WORKER on this address instead "
                          "of serving HTTP (shorthand for "
                          "repro.launch.shard_worker)")
+    ap.add_argument("--worker-token", default=None,
+                    help="pre-shared token for the authenticated worker "
+                         "handshake (defaults to $PROFET_WORKER_TOKEN); "
+                         "applied to launched workers and required of "
+                         "--remote-worker endpoints")
+    ap.add_argument("--no-supervise", action="store_true",
+                    help="disable the worker lifecycle supervisor "
+                         "(leases + automatic respawn of dead shard "
+                         "workers)")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero if any replay request failed "
                          "(CI integration gate)")
@@ -89,15 +98,24 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    import os
+    token = args.worker_token if args.worker_token is not None \
+        else os.environ.get("PROFET_WORKER_TOKEN")
+    if not token:
+        token = None
+
     if args.worker_listen:
         # run as the remote half: one TCP shard worker, nothing else
         from repro.launch.shard_worker import main as worker_main
         host, _, port = args.worker_listen.rpartition(":")
-        return worker_main(["--host", host or "127.0.0.1",
-                            "--port", port])
+        cmd = ["--host", host or "127.0.0.1", "--port", port]
+        if token is not None:
+            cmd += ["--token", token]
+        return worker_main(cmd)
 
     from repro.serve import (BackgroundServer, Client, LatencyService,
-                             ShardPlane, launch_tcp_workers, replay,
+                             LifecycleConfig, ShardPlane,
+                             launch_tcp_workers, replay,
                              synthetic_requests)
 
     oracle = _fit_oracle(args.full, pathlib.Path(args.cache),
@@ -108,7 +126,7 @@ def main(argv=None):
     local_workers = args.workers
     if args.shard_mode == "tcp" and args.workers > 0:
         # multi-host topology on one machine: loopback subprocess workers
-        pool = launch_tcp_workers(args.workers)
+        pool = launch_tcp_workers(args.workers, token=token)
         remote = pool.addresses + remote
         local_workers = 0
     if local_workers > 0 or remote:
@@ -116,16 +134,27 @@ def main(argv=None):
             plane = ShardPlane(
                 workers=local_workers,
                 mode=args.shard_mode if args.shard_mode != "tcp" else "spawn",
-                remote=remote)
+                remote=remote, worker_token=token)
         except Exception as e:
             # an unreachable remote (or any boot failure) degrades to
             # unsharded serving, mirroring the service-level contract
             print(f"shard plane unavailable ({type(e).__name__}: {e}); "
                   "serving unsharded", file=sys.stderr)
             plane = None
+    supervise = False
+    if plane is not None and not args.no_supervise:
+        # self-healing: lease every worker, respawn the dead. Pool-backed
+        # TCP workers re-launch through the pool (new ephemeral port);
+        # pure --remote-worker endpoints are re-dialed at their address.
+        endpoints = {}
+        if pool is not None:
+            endpoints = {
+                i: (lambda i=i: pool.respawn(i))
+                for i in range(len(pool.addresses))}
+        supervise = LifecycleConfig(endpoints=endpoints or None)
     service = LatencyService(oracle, max_wave=args.wave,
                              cache_size=args.cache_size,
-                             shard_plane=plane)
+                             shard_plane=plane, supervise=supervise)
     bg = BackgroundServer(service, host=args.host, port=args.port,
                           max_queue=args.max_queue).start()
     shard_note = (f"  shards: {plane.n_workers} ({args.shard_mode}"
@@ -180,7 +209,8 @@ def main(argv=None):
             ps = plane.summary()
             print(f"shards: {ps['alive']}/{ps['workers']} alive  "
                   f"{ps['slices']} slices  "
-                  f"{ps['fallback_rows']} fallback rows")
+                  f"{ps['fallback_rows']} fallback rows  "
+                  f"{ps['adoptions']} adoptions")
         with Client(bg.host, bg.port) as c:
             h = c.healthz()
             print(f"healthz: {h['status']}  epoch {h['epoch']}  "

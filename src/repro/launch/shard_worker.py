@@ -16,6 +16,7 @@ with the connection — so restarting one is always safe.
 from __future__ import annotations
 
 import argparse
+import os
 import signal
 import sys
 import threading
@@ -34,9 +35,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="bind port; 0 picks an ephemeral port")
     ap.add_argument("--max-frame", type=int, default=frames.MAX_FRAME,
                     help="per-frame size ceiling in bytes")
+    ap.add_argument("--token", default=None,
+                    help="pre-shared handshake token; a parent whose "
+                         "HELLO ack fails the constant-time compare is "
+                         "closed before any load is processed (defaults "
+                         "to $PROFET_WORKER_TOKEN; empty = no auth)")
     args = ap.parse_args(argv)
+    token = args.token if args.token is not None \
+        else os.environ.get("PROFET_WORKER_TOKEN")
+    if not token:                 # empty string disables auth too
+        token = None
 
-    server = WorkerServer(args.host, args.port, max_frame=args.max_frame)
+    server = WorkerServer(args.host, args.port, max_frame=args.max_frame,
+                          token=token)
     print(f"listening {server.host}:{server.port}", flush=True)
 
     stop = threading.Event()

@@ -21,8 +21,15 @@
     ``launch_tcp_workers`` spins up a loopback pool), and
     ``ShardedBank`` scatters a wave's rows by (anchor, target) group
     and gathers them back bit-identically;
+  - ``lifecycle``: self-healing worker supervision over the shard
+    plane — heartbeat leases (missed lease -> suspect -> parent-side
+    routing), automatic respawn/reconnect with backoff, and re-ship +
+    adoption that preserves the no-mixed-epoch and bit-identity
+    invariants (``WorkerSupervisor`` / ``LifecycleConfig``);
   - ``frames``: the length-prefixed binary framing + codecs the TCP
-    worker wire and the columnar ``/measure`` body share;
+    worker wire and the columnar ``/measure`` body share (with
+    negotiated per-frame deflate compression and the authenticated
+    HELLO extension);
   - ``Engine``: the token-serving engine for the model zoo
     (``repro.serve.engine``; imported lazily — it pulls in jax + the model
     stack).
@@ -32,19 +39,21 @@ from repro.serve.faults import (FaultInjector, FaultPlan, FaultRule,
                                 InjectedFault)
 from repro.serve.latency_service import (LatencyService, ServiceRequest,
                                          synthetic_requests)
+from repro.serve.lifecycle import LifecycleConfig, WorkerSupervisor
 from repro.serve.resilience import CircuitBreaker, RetryPolicy
 from repro.serve.shard import (ShardedBank, ShardPlane, TcpWorkerPool,
-                               WorkerDeadError, WorkerServer,
-                               launch_tcp_workers)
+                               WorkerAuthError, WorkerDeadError,
+                               WorkerServer, launch_tcp_workers)
 from repro.serve.transport import (BackgroundServer, Client, TransportError,
                                    TransportServer, replay)
 
 __all__ = ["BackgroundServer", "CircuitBreaker", "Client", "Engine",
            "FaultInjector", "FaultPlan", "FaultRule", "InjectedFault",
-           "LatencyService", "RetryPolicy", "ServiceRequest",
-           "ServiceStats", "ShardPlane", "ShardedBank", "TcpWorkerPool",
-           "TransportError", "TransportServer", "WorkerDeadError",
-           "WorkerServer", "launch_tcp_workers", "replay",
+           "LatencyService", "LifecycleConfig", "RetryPolicy",
+           "ServiceRequest", "ServiceStats", "ShardPlane", "ShardedBank",
+           "TcpWorkerPool", "TransportError", "TransportServer",
+           "WorkerAuthError", "WorkerDeadError", "WorkerServer",
+           "WorkerSupervisor", "launch_tcp_workers", "replay",
            "synthetic_requests"]
 
 

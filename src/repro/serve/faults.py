@@ -58,10 +58,13 @@ SITE_CANARY = "calibrate.canary"    # shadow canary verdict
 SITE_SHARD_SLOW = "shard.worker.slow"    # delay before replying (slow peer)
 SITE_SHARD_RESET = "shard.worker.reset"  # error -> RST-close the connection
 SITE_SHARD_FRAME = "shard.worker.frame"  # drop -> truncate the reply frame
+# Worker lifecycle faults (see repro.serve.lifecycle.WorkerSupervisor):
+SITE_SHARD_LEASE = "shard.worker.lease"    # error -> a lease ping is lost
+SITE_RESPAWN_FAIL = "shard.respawn.fail"   # error -> a respawn attempt dies
 
 SITES = (SITE_PLAN, SITE_EXECUTE, SITE_WARMUP, SITE_PUMP, SITE_RESPONSE,
          SITE_REFIT, SITE_CANARY, SITE_SHARD_SLOW, SITE_SHARD_RESET,
-         SITE_SHARD_FRAME)
+         SITE_SHARD_FRAME, SITE_SHARD_LEASE, SITE_RESPAWN_FAIL)
 
 
 class InjectedFault(RuntimeError):

@@ -41,6 +41,27 @@ with ``{"magic", "protocol": min(ours, theirs), "codec": choice}``, and
 both sides speak that codec for every subsequent ``OP_MSG`` frame. A
 protocol-1 worker that only offers ``json`` therefore keeps working
 against a protocol-2 parent (test-enforced in ``tests/test_frames.py``).
+
+Two optional HELLO extensions (both additive — absent fields negotiate
+to "off", so old peers keep working):
+
+- **Auth.** A worker configured with a pre-shared token advertises
+  ``"auth": true``; the parent's ack must then carry ``"token": ...``,
+  which the worker compares constant-time (``hmac.compare_digest``)
+  before any other frame is processed — a wrong or missing token closes
+  the connection before a single ``load`` can burn CPU. A parent holding
+  a token symmetrically refuses a worker that does not advertise auth.
+- **Compression.** The worker offers ``"compress": ["deflate"]``; the
+  parent picks one in its ack (``"compress": "deflate"``). Once
+  negotiated, either side may send :data:`OP_MSG_DEFLATE` frames whose
+  body is the zlib-deflated codec payload (:func:`pack_msg` only
+  bothers above :data:`COMPRESS_THRESHOLD` and keeps the smaller
+  encoding). Decompression is bomb-guarded: the inflated size may not
+  exceed ``max_frame``. Compression wraps the *encoded* codec body, so
+  float64 tensors still round-trip bit-identically. The shard wire only
+  deflates the bulk ``load`` frames (one generation ship per swap) —
+  per-wave ``exec`` tensors are near-incompressible float64 and paying
+  zlib for them on the critical path sinks the multihost scaling floor.
 """
 from __future__ import annotations
 
@@ -48,6 +69,7 @@ import base64
 import json
 import socket
 import struct
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -58,14 +80,23 @@ MAGIC = "PFW1"
 PROTOCOL_VERSION = 2
 #: Codec preference order (first shared entry wins the negotiation).
 CODEC_PREFERENCE = ("pfc1", "json")
+#: Frame-compression preference order (empty overlap = no compression).
+COMPRESS_PREFERENCE = ("deflate",)
 
 OP_HELLO = 1
 OP_MSG = 2
+#: An OP_MSG whose body is zlib-deflated; only valid after both sides
+#: negotiated ``"deflate"`` in the HELLO exchange.
+OP_MSG_DEFLATE = 3
 
 #: Default per-frame size ceiling. A generation load ships a whole bank
 #: shard in one frame, so the default is generous; tests shrink it to
 #: exercise the rejection path.
 MAX_FRAME = 1 << 30
+
+#: Bodies at or under this many bytes are never compressed — the zlib
+#: round-trip costs more than the wire saves on small control replies.
+COMPRESS_THRESHOLD = 1 << 14
 
 _LEN = struct.Struct("<I")
 
@@ -158,6 +189,45 @@ def encode_frame(opcode: int, body: bytes,
         raise FrameError(
             f"frame of {n} bytes exceeds max_frame={max_frame}")
     return _LEN.pack(n) + bytes([opcode]) + body
+
+
+def pack_msg(body: bytes, *, compress: bool = False,
+             threshold: int = COMPRESS_THRESHOLD,
+             max_frame: int = MAX_FRAME) -> bytes:
+    """Encode one protocol message as a wire frame, deflating the body
+    when compression is negotiated, the body clears ``threshold``, and
+    deflate actually wins (an incompressible body stays OP_MSG — the
+    receiver never inflates bytes that grew on the way in)."""
+    if compress and len(body) > threshold:
+        z = zlib.compress(body, 6)
+        if len(z) < len(body):
+            return encode_frame(OP_MSG_DEFLATE, z, max_frame)
+    return encode_frame(OP_MSG, body, max_frame)
+
+
+def open_msg(opcode: int, body: bytes, *, compressed_ok: bool = True,
+             max_frame: int = MAX_FRAME) -> bytes:
+    """Return the plain codec body of a received protocol message frame.
+    Inflation is bomb-guarded: a deflated body may not expand past
+    ``max_frame`` (the same ceiling the framing enforces), so a lying
+    peer cannot balloon memory through the compression side door."""
+    if opcode == OP_MSG:
+        return body
+    if opcode != OP_MSG_DEFLATE:
+        raise FrameError(f"unexpected opcode {opcode} mid-stream")
+    if not compressed_ok:
+        raise FrameError(
+            "peer sent a deflate frame without negotiating compression")
+    d = zlib.decompressobj()
+    try:
+        out = d.decompress(body, max_frame)
+    except zlib.error as e:
+        raise FrameError(f"bad deflate body: {e}") from e
+    if d.unconsumed_tail:
+        raise FrameError(
+            f"deflated body inflates past max_frame={max_frame}; "
+            "rejecting")
+    return out
 
 
 class FrameDecoder:
@@ -413,16 +483,33 @@ CODECS: Dict[str, Tuple[Callable[[Any], bytes],
 # ----------------------------------------------------------------------
 # handshake
 # ----------------------------------------------------------------------
-def hello_body(protocol: int, codecs: Sequence[str]) -> bytes:
+def hello_body(protocol: int, codecs: Sequence[str], *,
+               auth: bool = False,
+               compress: Sequence[str] = ()) -> bytes:
     """The worker's HELLO: always plain JSON so any protocol version can
-    read it before a codec is negotiated."""
-    return json.dumps({"magic": MAGIC, "protocol": int(protocol),
-                       "codecs": list(codecs)}).encode("utf-8")
+    read it before a codec is negotiated. ``auth`` advertises that the
+    worker holds a pre-shared token (the token itself never rides the
+    worker's HELLO — it is sent to *any* connecting peer); ``compress``
+    lists the frame compressions the worker accepts."""
+    d: Dict[str, Any] = {"magic": MAGIC, "protocol": int(protocol),
+                         "codecs": list(codecs)}
+    if auth:
+        d["auth"] = True
+    if compress:
+        d["compress"] = list(compress)
+    return json.dumps(d).encode("utf-8")
 
 
-def hello_ack_body(protocol: int, codec: str) -> bytes:
-    return json.dumps({"magic": MAGIC, "protocol": int(protocol),
-                       "codec": codec}).encode("utf-8")
+def hello_ack_body(protocol: int, codec: str, *,
+                   token: Optional[str] = None,
+                   compress: Optional[str] = None) -> bytes:
+    d: Dict[str, Any] = {"magic": MAGIC, "protocol": int(protocol),
+                         "codec": codec}
+    if token is not None:
+        d["token"] = str(token)
+    if compress is not None:
+        d["compress"] = str(compress)
+    return json.dumps(d).encode("utf-8")
 
 
 def parse_hello(body: bytes) -> Dict[str, Any]:
@@ -447,3 +534,16 @@ def negotiate_codec(offered: Sequence[str],
     raise FrameError(
         f"no shared codec with peer (they offer {sorted(offered)}, "
         f"we speak {list(preference)})")
+
+
+def negotiate_compress(offered: Sequence[str],
+                       preference: Sequence[str] = COMPRESS_PREFERENCE
+                       ) -> Optional[str]:
+    """First compression in OUR preference order the peer offers, or
+    ``None`` — unlike codecs, no overlap just means uncompressed frames
+    (every peer speaks those)."""
+    offered = set(offered)
+    for name in preference:
+        if name in offered:
+            return name
+    return None

@@ -91,7 +91,7 @@ class LatencyService:
                  cache_size: int = 4096, epoch: Optional[str] = None,
                  warmup: bool = True, warmup_rows: Optional[int] = None,
                  faults=None, breaker: Optional[CircuitBreaker] = None,
-                 shard_plane=None):
+                 shard_plane=None, supervise=False):
         self.oracle = oracle
         self.max_wave = int(max_wave)
         self.cache_size = int(cache_size)
@@ -161,6 +161,19 @@ class LatencyService:
                     self.stats.degraded_reason = (
                         f"shard-plane load failed at construction "
                         f"({type(e).__name__}: {e}); serving unsharded")
+        # self-healing supervision (repro.serve.lifecycle): leases every
+        # worker and respawns/re-adopts dead ones. supervise=True uses
+        # defaults, or pass a LifecycleConfig. The supervisor attaches to
+        # the plane (plane.close() stops it) and is exposed here for
+        # transport telemetry.
+        self.supervisor = None
+        if self.shard_plane is not None and supervise:
+            from repro.serve.lifecycle import (LifecycleConfig,
+                                               WorkerSupervisor)
+            cfg = supervise if isinstance(supervise, LifecycleConfig) \
+                else None
+            self.supervisor = WorkerSupervisor(
+                self.shard_plane, config=cfg, faults=faults).start()
 
     def _load_generation(self, oracle: LatencyOracle):
         """Split-and-load ``oracle``'s bank onto the shard plane; returns

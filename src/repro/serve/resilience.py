@@ -146,6 +146,15 @@ class CircuitBreaker:
             st.probing = False
             st.open_until = float("inf")
 
+    def heal(self, key) -> None:
+        """Forget one key entirely — even a :meth:`force_open` quarantine.
+        The shard plane calls this when a *recovered* worker is adopted:
+        the replacement process/connection has no shared fate with the
+        one that died, so its reputation starts clean (unlike
+        ``record_success``, which only a successful probe should earn)."""
+        with self._lock:
+            self._pairs.pop(key, None)
+
     def state(self, key) -> str:
         with self._lock:
             st = self._pairs.get(key)

@@ -61,6 +61,8 @@ slice failures go through the normal closed/open/half-open breaker.
 """
 from __future__ import annotations
 
+import atexit
+import hmac
 import os
 import queue
 import socket
@@ -70,7 +72,7 @@ import sys
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -88,7 +90,16 @@ _SHM_ARRAYS = ("feat", "thr", "left", "right", "value")
 class WorkerDeadError(RuntimeError):
     """The shard worker's process (or thread persona) is gone — pipe
     broke, process killed, or an injected test death. Never probed again:
-    the plane force-opens the shard's breaker key."""
+    the plane force-opens the shard's breaker key (until the lifecycle
+    supervisor adopts a replacement, which heals exactly that key)."""
+
+
+class WorkerAuthError(RuntimeError):
+    """The PFW1 handshake could not be authenticated: the worker
+    requires a pre-shared token the parent does not hold, the parent
+    holds one the worker does not enforce, or the worker rejected the
+    token we sent. Raised at connection time — an unauthenticated peer
+    is never adopted into the plane."""
 
 
 # ----------------------------------------------------------------------
@@ -246,6 +257,10 @@ class _BaseWorker:
     def __init__(self, index: int):
         self.index = index
         self.alive = True
+        # set by the lifecycle supervisor on a missed lease: waves route
+        # this shard's rows parent-side until a lease renews (or the
+        # worker is declared dead and replaced)
+        self.suspect = False
         self.death_reason: Optional[str] = None
         self.execs = 0
         self.busy_s = 0.0
@@ -363,6 +378,12 @@ class _ProcessWorker(_BaseWorker):
             self._conn.close()
         except Exception:
             pass
+        try:
+            # release the Process object's sentinel fd — repeated
+            # kill/respawn cycles must not accumulate pipe fds
+            self._proc.close()
+        except Exception:
+            pass
 
 
 class _ThreadWorker(_BaseWorker):
@@ -434,10 +455,13 @@ class _RemoteWorker(_BaseWorker):
 
     def __init__(self, index: int, host: str, port: int, *,
                  io_timeout_s: float = 60.0,
-                 max_frame: int = frames.MAX_FRAME):
+                 max_frame: int = frames.MAX_FRAME,
+                 token: Optional[str] = None):
         self.host = host
         self.port = int(port)
         self.io_timeout_s = float(io_timeout_s)
+        self.token = token
+        self.max_frame = int(max_frame)
         sock = socket.create_connection((host, self.port),
                                         timeout=self.io_timeout_s)
         sock.settimeout(self.io_timeout_s)
@@ -453,29 +477,70 @@ class _RemoteWorker(_BaseWorker):
                 raise frames.FrameError(
                     f"expected HELLO, got opcode {opcode}")
             hello = frames.parse_hello(body)
+            wants_auth = bool(hello.get("auth"))
+            if wants_auth and token is None:
+                raise WorkerAuthError(
+                    f"worker {host}:{port} requires a pre-shared token "
+                    "(--worker-token / PROFET_WORKER_TOKEN)")
+            if token is not None and not wants_auth:
+                # an impostor on the worker's port would happily skip the
+                # check — refuse to adopt a peer that won't authenticate
+                raise WorkerAuthError(
+                    f"worker {host}:{port} does not enforce auth but "
+                    "this plane holds a token; refusing the peer")
             self.protocol = min(frames.PROTOCOL_VERSION,
                                 int(hello.get("protocol", 1)))
             self.codec = frames.negotiate_codec(
                 hello.get("codecs", ("json",)))
+            self.compress = frames.negotiate_compress(
+                hello.get("compress", ()))
             self._framer.send(frames.OP_HELLO, frames.hello_ack_body(
-                self.protocol, self.codec))
-        except Exception:
+                self.protocol, self.codec, token=token,
+                compress=self.compress))
+            self._pack, self._unpack = frames.CODECS[self.codec]
+            if wants_auth:
+                # round-trip a ping so a rejected token fails HERE, not
+                # on the first wave: the worker closes without replying
+                # when the constant-time compare fails
+                reply = self._roundtrip(("ping",))
+                if reply != ("ok",):
+                    raise WorkerAuthError(
+                        f"worker {host}:{port} rejected the handshake "
+                        f"probe ({reply!r})")
+        except Exception as e:
             try:
                 sock.close()
             except OSError:
                 pass
+            if isinstance(e, (OSError, frames.FrameError)) \
+                    and token is not None:
+                # the worker's auth rejection is a silent close
+                raise WorkerAuthError(
+                    f"worker {host}:{port} closed during the "
+                    f"authenticated handshake ({type(e).__name__}: {e})"
+                ) from e
             raise
-        self._pack, self._unpack = frames.CODECS[self.codec]
         super().__init__(index)
+
+    def _roundtrip(self, op: tuple):
+        """One request/reply on the framer (pre-dispatcher handshake
+        use; ``_call`` is the dispatcher-thread path). Only the bulk
+        ``load`` frames (one generation ship per swap) are deflated:
+        per-wave ``exec`` tensors are effectively incompressible float64
+        noise, and paying zlib for them on the parent's critical path
+        measurably sinks the multihost scaling floor."""
+        self._framer.sock.sendall(frames.pack_msg(
+            self._pack(op),
+            compress=self.compress is not None and op[0] == "load",
+            max_frame=self.max_frame))
+        opcode, body = self._framer.recv()
+        return self._unpack(frames.open_msg(
+            opcode, body, compressed_ok=self.compress is not None,
+            max_frame=self.max_frame))
 
     def _call(self, op: tuple):
         try:
-            self._framer.send(frames.OP_MSG, self._pack(op))
-            opcode, body = self._framer.recv()
-            if opcode != frames.OP_MSG:
-                raise frames.FrameError(
-                    f"unexpected opcode {opcode} mid-stream")
-            reply = self._unpack(body)
+            reply = self._roundtrip(op)
         except (OSError, frames.FrameError) as e:
             # timeout, reset, truncated/oversized frame, undecodable body:
             # the connection state is unknowable (a late reply could pair
@@ -533,19 +598,30 @@ class WorkerServer:
     down. The three ``shard.worker.*`` fault sites fire on the reply path
     of every message: ``slow`` delays the reply (client timeout), ``reset``
     RST-closes instead of replying, ``frame`` sends a deliberately
-    truncated frame then RST-closes."""
+    truncated frame then RST-closes.
+
+    ``token`` arms the authenticated handshake: the HELLO advertises
+    ``auth``, and a parent ack whose ``token`` fails the constant-time
+    compare is closed before any ``load`` is processed
+    (``auth_rejects`` counts them). ``compress`` lists the frame
+    compressions offered in the HELLO (deflate by default)."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  faults: Optional[faults_mod.FaultInjector] = None,
                  protocol: int = frames.PROTOCOL_VERSION,
                  codecs: Sequence[str] = frames.CODEC_PREFERENCE,
-                 max_frame: int = frames.MAX_FRAME):
+                 max_frame: int = frames.MAX_FRAME,
+                 token: Optional[str] = None,
+                 compress: Sequence[str] = frames.COMPRESS_PREFERENCE):
         self._faults = faults
         self.protocol = int(protocol)
         self.codecs = tuple(codecs)
         self.max_frame = int(max_frame)
+        self.token = token
+        self.compress = tuple(compress)
         self.execs = 0
         self.loads = 0
+        self.auth_rejects = 0
         self._lock = threading.Lock()
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -600,20 +676,34 @@ class WorkerServer:
         framer = frames.SocketFramer(conn, self.max_frame)
         try:
             framer.send(frames.OP_HELLO,
-                        frames.hello_body(self.protocol, self.codecs))
+                        frames.hello_body(self.protocol, self.codecs,
+                                          auth=self.token is not None,
+                                          compress=self.compress))
             opcode, body = framer.recv()
             if opcode != frames.OP_HELLO:
                 return
             ack = frames.parse_hello(body)
+            if self.token is not None and not hmac.compare_digest(
+                    self.token, str(ack.get("token", ""))):
+                # wrong or missing token: close before a single further
+                # frame is read — no load can ever burn CPU here
+                with self._lock:
+                    self.auth_rejects += 1
+                return
             codec = ack.get("codec")
             if codec not in self.codecs or codec not in frames.CODECS:
                 return
+            compress = ack.get("compress")
+            if compress is not None and compress not in self.compress:
+                return              # parent picked something we never offered
+            deflate = compress is not None
             pack, unpack = frames.CODECS[codec]
             while True:
                 opcode, body = framer.recv()
-                if opcode != frames.OP_MSG:
-                    return
-                reply, last = self._dispatch(banks, unpack(body))
+                msg = unpack(frames.open_msg(
+                    opcode, body, compressed_ok=deflate,
+                    max_frame=self.max_frame))
+                reply, last = self._dispatch(banks, msg)
                 # chaos on the reply path (no-ops without an injector)
                 faults_mod.fire(self._faults, faults_mod.SITE_SHARD_SLOW)
                 try:
@@ -622,8 +712,11 @@ class WorkerServer:
                 except faults_mod.InjectedFault:
                     self._rst_close(conn)
                     return
-                encoded = frames.encode_frame(frames.OP_MSG, pack(reply),
-                                              self.max_frame)
+                # mirror the parent's policy: only bulk-transfer replies
+                # may deflate; exec_ok tensors stay raw off the hot path
+                encoded = frames.pack_msg(
+                    pack(reply), compress=deflate and msg[0] == "load",
+                    max_frame=self.max_frame)
                 if faults_mod.should_drop(self._faults,
                                           faults_mod.SITE_SHARD_FRAME):
                     conn.sendall(encoded[:max(5, len(encoded) // 2)])
@@ -710,37 +803,72 @@ class TcpWorkerPool:
     """N loopback ``repro.launch.shard_worker`` subprocesses, each on an
     ephemeral port — the multi-host topology on one machine (real
     processes, real sockets, real serialization). Context-manage it and
-    hand ``addresses`` to ``ShardPlane(remote=...)``."""
+    hand ``addresses`` to ``ShardPlane(remote=...)``.
+
+    ``respawn(i)`` relaunches one dead subprocess (new ephemeral port)
+    and returns the new address — the lifecycle supervisor's reconnect
+    hook. The pool registers an ``atexit`` reaper so an abnormal parent
+    exit (uncaught exception past the context manager) never leaves
+    orphan worker subprocesses behind; a normal ``close`` unregisters
+    it."""
 
     def __init__(self, procs: List[subprocess.Popen],
-                 addresses: List[str]):
+                 addresses: List[str],
+                 launcher: Optional[Callable[[], subprocess.Popen]] = None):
         self.procs = procs
         self.addresses = addresses
+        self._launcher = launcher
+        self._closed = False
+        atexit.register(self.close)
 
     def kill(self, index: int) -> None:
         """Chaos hook: hard-kill one worker process mid-anything."""
         self.procs[index].kill()
 
+    @staticmethod
+    def _reap(p: subprocess.Popen) -> None:
+        try:
+            p.terminate()
+        except Exception:
+            pass
+        try:
+            p.wait(timeout=5.0)
+        except Exception:
+            try:
+                p.kill()
+                p.wait(timeout=5.0)
+            except Exception:
+                pass
+        if p.stdout is not None:
+            try:
+                p.stdout.close()
+            except Exception:
+                pass
+
+    def respawn(self, index: int) -> str:
+        """Reap the dead subprocess at ``index``, launch a fresh one,
+        and return its (new) ``host:port``."""
+        if self._launcher is None:
+            raise RuntimeError("pool was built without a launcher")
+        self._reap(self.procs[index])
+        p = self._launcher()
+        addr = _read_worker_address(p)
+        self.procs[index] = p
+        self.addresses[index] = addr
+        return addr
+
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        atexit.unregister(self.close)
         for p in self.procs:
             try:
                 p.terminate()
             except Exception:
                 pass
         for p in self.procs:
-            try:
-                p.wait(timeout=5.0)
-            except Exception:
-                try:
-                    p.kill()
-                    p.wait(timeout=5.0)
-                except Exception:
-                    pass
-            if p.stdout is not None:
-                try:
-                    p.stdout.close()
-                except Exception:
-                    pass
+            self._reap(p)
 
     def __enter__(self) -> "TcpWorkerPool":
         return self
@@ -749,49 +877,77 @@ class TcpWorkerPool:
         self.close()
 
 
-def launch_tcp_workers(n: int, *, host: str = "127.0.0.1"
-                       ) -> TcpWorkerPool:
+def _read_worker_address(p: subprocess.Popen) -> str:
+    line = p.stdout.readline().strip()
+    if not line.startswith("listening "):
+        raise RuntimeError(
+            f"shard worker failed to start (got {line!r})")
+    return line.split(" ", 1)[1]
+
+
+def launch_tcp_workers(n: int, *, host: str = "127.0.0.1",
+                       token: Optional[str] = None) -> TcpWorkerPool:
     """Spawn ``n`` shard-worker subprocesses on loopback ephemeral ports
-    and wait for each to announce ``listening HOST:PORT`` on stdout."""
+    and wait for each to announce ``listening HOST:PORT`` on stdout.
+    ``token`` arms the authenticated handshake on every worker (passed
+    via the environment, not argv — invisible to ``ps``)."""
     import repro
     env = dict(os.environ)
     # repro is a namespace package (no __init__), so resolve via __path__
     src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
     env["PYTHONPATH"] = src + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if token is not None:
+        env["PROFET_WORKER_TOKEN"] = token
+    else:
+        env.pop("PROFET_WORKER_TOKEN", None)
+
+    def launch() -> subprocess.Popen:
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.shard_worker",
+             "--host", host, "--port", "0"],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+            text=True, env=env)
+
     procs: List[subprocess.Popen] = []
     addresses: List[str] = []
     try:
         for _ in range(n):
-            procs.append(subprocess.Popen(
-                [sys.executable, "-m", "repro.launch.shard_worker",
-                 "--host", host, "--port", "0"],
-                stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
-                text=True, env=env))
+            procs.append(launch())
         for p in procs:
-            line = p.stdout.readline().strip()
-            if not line.startswith("listening "):
-                raise RuntimeError(
-                    f"shard worker failed to start (got {line!r})")
-            addresses.append(line.split(" ", 1)[1])
+            addresses.append(_read_worker_address(p))
     except Exception:
         TcpWorkerPool(procs, addresses).close()
         raise
-    return TcpWorkerPool(procs, addresses)
+    return TcpWorkerPool(procs, addresses, launcher=launch)
 
 
 # ----------------------------------------------------------------------
 # generations + the sharded-bank facade
 # ----------------------------------------------------------------------
 class _GenState:
-    """Refcounted lifetime of one loaded bank generation."""
+    """Refcounted lifetime of one loaded bank generation. Keeps the full
+    bank + partition by reference so the lifecycle supervisor can re-ship
+    a recovered worker's shard of any generation that is still live."""
 
-    def __init__(self, gen_id: int, segments: list):
+    def __init__(self, gen_id: int, segments: list,
+                 bank: Optional[ModelBank] = None,
+                 partition: Optional[tuple] = None):
         self.gen_id = gen_id
         self.segments = segments     # parent-held shm (spawn mode)
+        self.bank = bank
+        self.partition = partition
         self.active = 0              # waves currently executing on it
         self.retired = False
         self.dropped = False
+
+    def sub_bank(self, index: int) -> Optional[ModelBank]:
+        """This generation's shard for worker ``index`` (None when the
+        partition assigned it no pairs)."""
+        if self.bank is None or self.partition is None:
+            return None
+        subs = self.bank.split(self.partition)
+        return subs[index] if index < len(subs) else None
 
 
 class ShardedBank:
@@ -854,7 +1010,11 @@ class ShardedBank:
         for s in np.unique(shard):
             rows = np.nonzero(shard == s)[0]
             w = plane.workers[s]
-            if not w.alive or not plane.breaker.allow(("shard", int(s))):
+            if not w.alive or w.suspect \
+                    or not plane.breaker.allow(("shard", int(s))):
+                # dead, lease-suspect, or quarantined: the parent answers
+                # this slice — no wave ever rides a worker whose lease
+                # has lapsed
                 fallback_rows.append(rows)
                 continue
             pending.append((int(s), rows, w.submit(
@@ -927,7 +1087,8 @@ class ShardPlane:
                  breaker: Optional[CircuitBreaker] = None,
                  remote: Sequence[Union[str, Tuple[str, int]]] = (),
                  io_timeout_s: float = 60.0,
-                 max_frame: int = frames.MAX_FRAME):
+                 max_frame: int = frames.MAX_FRAME,
+                 worker_token: Optional[str] = None):
         remote = tuple(remote)
         if workers < 0:
             raise ValueError("workers must be >= 0")
@@ -940,6 +1101,9 @@ class ShardPlane:
                             for h, p in map(_parse_addr, remote))
         self.breaker = breaker or CircuitBreaker(threshold=3,
                                                  cooldown_s=5.0)
+        self._io_timeout_s = float(io_timeout_s)
+        self._max_frame = int(max_frame)
+        self._worker_token = worker_token
         cls = _ProcessWorker if mode == "spawn" else _ThreadWorker
         self.workers: List[_BaseWorker] = []
         try:
@@ -949,7 +1113,7 @@ class ShardPlane:
                 host, port = _parse_addr(addr)
                 self.workers.append(_RemoteWorker(
                     workers + j, host, port, io_timeout_s=io_timeout_s,
-                    max_frame=max_frame))
+                    max_frame=max_frame, token=worker_token))
         except Exception:
             for w in self.workers:   # half-built plane: tear down
                 try:
@@ -959,6 +1123,11 @@ class ShardPlane:
             raise
         self.n_workers = len(self.workers)
         self._lock = threading.Lock()
+        # serializes generation loads against lifecycle adoptions: a
+        # recovering worker must hold every generation that is live at
+        # the instant it is adopted (no mixed-epoch waves), so re-ship +
+        # adopt and load() never interleave
+        self._swap_lock = threading.Lock()
         self._gen_seq = 0
         self._gens: Dict[int, _GenState] = {}
         self.loads = 0
@@ -966,6 +1135,9 @@ class ShardPlane:
         self.slices = 0
         self.slice_errors = 0
         self.fallback_rows = 0
+        self.adoptions = 0
+        #: set by repro.serve.lifecycle.WorkerSupervisor when attached
+        self.supervisor = None
         self._closed = False
 
     # -- generation lifecycle ------------------------------------------
@@ -975,38 +1147,39 @@ class ShardPlane:
         shared segments, and re-raises — the caller's swap aborts with
         the incumbent generation untouched. Dead workers are skipped
         (their pairs serve through the parent-side fallback)."""
-        partition = partition_pairs(bank.pairs, self.n_workers)
-        sub_banks = bank.split(partition)
-        with self._lock:
-            self._gen_seq += 1
-            gen_id = self._gen_seq
-        segments: list = []
-        loads: List[Tuple[_BaseWorker, Future]] = []
-        try:
-            for w, sub in zip(self.workers, sub_banks):
-                if sub is None or not w.alive:
-                    continue
-                op, segs = w.prepare_load(gen_id, sub)
-                segments.extend(segs)
-                loads.append((w, w.submit(op)))
-            for _, fut in loads:
-                fut.result()
-        except Exception:
-            for _, fut in loads:       # settle the rest before dropping
-                try:
+        with self._swap_lock:
+            partition = partition_pairs(bank.pairs, self.n_workers)
+            sub_banks = bank.split(partition)
+            with self._lock:
+                self._gen_seq += 1
+                gen_id = self._gen_seq
+            segments: list = []
+            loads: List[Tuple[_BaseWorker, Future]] = []
+            try:
+                for w, sub in zip(self.workers, sub_banks):
+                    if sub is None or not w.alive:
+                        continue
+                    op, segs = w.prepare_load(gen_id, sub)
+                    segments.extend(segs)
+                    loads.append((w, w.submit(op)))
+                for _, fut in loads:
                     fut.result()
-                except Exception:
-                    pass
-            for w, _ in loads:
-                if w.alive:
-                    w.submit(("drop", gen_id))
-            _release_segments(segments, unlink=True)
-            raise
-        gen = _GenState(gen_id, segments)
-        with self._lock:
-            self._gens[gen_id] = gen
-            self.loads += 1
-        return ShardedBank(self, gen, bank, partition)
+            except Exception:
+                for _, fut in loads:   # settle the rest before dropping
+                    try:
+                        fut.result()
+                    except Exception:
+                        pass
+                for w, _ in loads:
+                    if w.alive:
+                        w.submit(("drop", gen_id))
+                _release_segments(segments, unlink=True)
+                raise
+            gen = _GenState(gen_id, segments, bank, partition)
+            with self._lock:
+                self._gens[gen_id] = gen
+                self.loads += 1
+            return ShardedBank(self, gen, bank, partition)
 
     def acquire(self, sharded: ShardedBank) -> None:
         with self._lock:
@@ -1047,6 +1220,61 @@ class ShardPlane:
         with self._lock:
             self._gens.pop(gen.gen_id, None)
 
+    # -- recovery (driven by repro.serve.lifecycle) --------------------
+    def live_generations(self) -> List[_GenState]:
+        """Generations a recovering worker must hold before adoption
+        (everything loaded and not retired)."""
+        with self._lock:
+            return [g for g in self._gens.values() if not g.retired]
+
+    def build_worker(self, index: int,
+                     address: Optional[str] = None) -> _BaseWorker:
+        """Construct a *replacement* worker of the same kind as slot
+        ``index`` — a fresh process / persona / connection, never a
+        resurrection of the old channel (a late reply on a dead socket
+        could mispair with the wrong request). TCP replacements re-dial
+        the old endpoint unless ``address`` overrides it (a respawned
+        ``TcpWorkerPool`` subprocess lands on a new ephemeral port)."""
+        old = self.workers[index]
+        if old.kind == "spawn":
+            return _ProcessWorker(index)
+        if old.kind == "thread":
+            return _ThreadWorker(index)
+        if address is not None:
+            host, port = _parse_addr(address)
+        else:
+            host, port = old.host, old.port
+        return _RemoteWorker(index, host, port,
+                             io_timeout_s=self._io_timeout_s,
+                             max_frame=self._max_frame,
+                             token=self._worker_token)
+
+    def adopt_worker(self, index: int, new: _BaseWorker) -> None:
+        """Atomically swap ``new`` into slot ``index`` and heal that
+        shard's breaker key: the next wave routes the shard's rows off
+        the parent fallback path and onto the replacement. The caller
+        (the supervisor) must have re-shipped every live generation
+        first, under ``_swap_lock``. The old worker object is closed —
+        its dispatcher thread joined, its process reaped, its fds
+        released — so kill/respawn cycles cannot leak."""
+        with self._lock:
+            old = self.workers[index]
+            self.workers[index] = new
+            self.adoptions += 1
+        new.suspect = False
+        self.breaker.heal(("shard", index))
+        if new.kind == "tcp":
+            addr = f"{new.host}:{new.port}"
+            n_local = self.n_workers - len(self.remote)
+            r = index - n_local
+            if 0 <= r < len(self.remote):
+                self.remote = (self.remote[:r] + (addr,)
+                               + self.remote[r + 1:])
+        try:
+            old.close()
+        except Exception:
+            pass
+
     # -- control -------------------------------------------------------
     def kill_worker(self, index: int) -> None:
         """Test/chaos hook: hard-kill one worker."""
@@ -1058,7 +1286,7 @@ class ShardPlane:
     def summary(self) -> dict:
         with self._lock:
             gens = sorted(self._gens)
-        return {
+        out = {
             "mode": self.mode,
             "workers": self.n_workers,
             "worker_kinds": [w.kind for w in self.workers],
@@ -1070,8 +1298,13 @@ class ShardPlane:
             "slices": self.slices,
             "slice_errors": self.slice_errors,
             "fallback_rows": self.fallback_rows,
+            "adoptions": self.adoptions,
+            "auth": self._worker_token is not None,
             "breaker_open": [list(k) for k in self.breaker.open_keys()],
         }
+        if self.supervisor is not None:
+            out["lifecycle"] = self.supervisor.summary()
+        return out
 
     def close(self) -> None:
         """Tear the plane down: exit workers, join threads/processes,
@@ -1079,6 +1312,11 @@ class ShardPlane:
         if self._closed:
             return
         self._closed = True
+        if self.supervisor is not None:
+            try:
+                self.supervisor.stop()
+            except Exception:
+                pass
         for w in self.workers:
             try:
                 w.close()

@@ -463,6 +463,16 @@ class TransportServer:
                 reasons.append(
                     f"{dead}/{plane.n_workers} shard workers dead; their "
                     "slices serve through the single-worker fallback")
+            sup = getattr(plane, "supervisor", None)
+            if sup is not None:
+                states = sup.summary()["states"]
+                unhealthy = {s: n for s, n in states.items()
+                             if s not in ("live", "adopted") and n}
+                if unhealthy:
+                    reasons.append(
+                        "worker lifecycle: " + ", ".join(
+                            f"{n} {s}" for s, n in sorted(
+                                unhealthy.items())))
         return ("degraded" if reasons else "ok"), reasons
 
     async def _dispatch(self, method: str, path: str,
@@ -473,15 +483,25 @@ class TransportServer:
                 if method != "GET":
                     return 405, _method_not_allowed(method)
                 status, reasons = self._health_status()
-                return 200, {"ok": True, "status": status,
-                             "reasons": reasons,
-                             "protocol": PROTOCOL,
-                             "epoch": self.service.epoch,
-                             "pairs": len(self.service.oracle.pairs()),
-                             "pending": len(self._futs),
-                             "paused": self._paused,
-                             "pump_crashes":
-                                 self.service.stats.pump_crashes}
+                out = {"ok": True, "status": status,
+                       "reasons": reasons,
+                       "protocol": PROTOCOL,
+                       "epoch": self.service.epoch,
+                       "pairs": len(self.service.oracle.pairs()),
+                       "pending": len(self._futs),
+                       "paused": self._paused,
+                       "pump_crashes":
+                           self.service.stats.pump_crashes}
+                plane = getattr(self.service, "shard_plane", None)
+                sup = getattr(plane, "supervisor", None)
+                if sup is not None:
+                    # per-worker lifecycle: state + lease age + respawns
+                    out["workers"] = [
+                        {"state": w["state"],
+                         "lease_age_s": w["lease_age_s"],
+                         "respawns": w["respawns"]}
+                        for w in sup.summary()["workers"]]
+                return 200, out
             if path == "/statsz":
                 if method != "GET":
                     return 405, _method_not_allowed(method)
@@ -1184,7 +1204,8 @@ def request_to_dict(req: PredictRequest) -> Dict[str, Any]:
 
 def replay(host: str, port: int, requests: Sequence[PredictRequest],
            clients: int = 8, measure_fn=None,
-           measure_every: int = 32) -> Dict[str, Any]:
+           measure_every: int = 32,
+           retry: Optional[RetryPolicy] = None) -> Dict[str, Any]:
     """Client-replay load generator: partition ``requests`` round-robin
     over ``clients`` threads (one keep-alive connection each) and fire them
     concurrently. Returns wall time, per-request client-side latencies, the
@@ -1237,7 +1258,7 @@ def replay(host: str, port: int, requests: Sequence[PredictRequest],
 
     def worker(offset: int) -> None:
         rows: List[Dict[str, Any]] = []
-        with Client(host, port) as c:
+        with Client(host, port, retry=retry) as c:
             for i in range(offset, len(requests), clients):
                 t0 = time.perf_counter()
                 try:

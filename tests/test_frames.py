@@ -1,7 +1,9 @@
 """Frame codec edge cases (``repro.serve.frames``): partial reads across
 frame boundaries, oversized-frame rejection, PFC1 tensor round-trip
-bit-identity for float64 shard payloads, and codec negotiation down to an
-older json-only protocol-1 worker."""
+bit-identity for float64 shard payloads, codec negotiation down to an
+older json-only protocol-1 worker, and negotiated deflate frame
+compression (threshold behavior, bomb-guarded inflation, bit-identity
+through the compressed wire)."""
 import numpy as np
 import pytest
 
@@ -141,6 +143,114 @@ def test_parse_hello_rejects_non_worker_peers():
         frames.parse_hello(b"HTTP/1.1 400 Bad Request")
     with pytest.raises(frames.FrameError, match="not a shard worker"):
         frames.parse_hello(b'{"magic": "nope"}')
+
+
+# ---------------------------------------------------------------------------
+# negotiated deflate frame compression
+# ---------------------------------------------------------------------------
+def test_pack_msg_compresses_large_bodies_and_round_trips():
+    body = frames.pack_value({"thr": np.zeros((64, 512)),
+                              "gids": np.arange(4096, dtype=np.int64)})
+    assert len(body) > frames.COMPRESS_THRESHOLD
+    wire = frames.pack_msg(body, compress=True)
+    dec = frames.FrameDecoder()
+    [(opcode, payload)] = dec.feed(wire)
+    assert opcode == frames.OP_MSG_DEFLATE
+    assert len(wire) < len(body)                 # actually smaller
+    assert frames.open_msg(opcode, payload) == body
+
+
+def test_pack_msg_float64_bit_identity_through_deflate():
+    """Compression wraps the ENCODED codec body, so adversarial float64
+    content (subnormals, infs, -0.0) survives bit-exactly."""
+    arr = np.random.default_rng(0).standard_normal((96, 64))
+    arr[0, :4] = [np.inf, -np.inf, 5e-324, -0.0]
+    body = frames.pack_value({"forest": {"thr": arr}})
+    [(opcode, payload)] = frames.FrameDecoder().feed(
+        frames.pack_msg(body, compress=True))
+    out = frames.unpack_value(frames.open_msg(opcode, payload))
+    assert out["forest"]["thr"].tobytes() == arr.tobytes()
+
+
+def test_pack_msg_below_threshold_or_incompressible_stays_plain():
+    small = frames.pack_value(("ping",))
+    [(opcode, _)] = frames.FrameDecoder().feed(
+        frames.pack_msg(small, compress=True))
+    assert opcode == frames.OP_MSG               # under the threshold
+    incompressible = np.random.default_rng(1).bytes(
+        frames.COMPRESS_THRESHOLD + 1024)
+    [(opcode, payload)] = frames.FrameDecoder().feed(
+        frames.pack_msg(incompressible, compress=True))
+    assert opcode == frames.OP_MSG               # zlib did not win
+    assert payload == incompressible
+    # compress=False never emits a deflate frame regardless of size
+    big = b"a" * (frames.COMPRESS_THRESHOLD + 1024)
+    [(opcode, _)] = frames.FrameDecoder().feed(
+        frames.pack_msg(big, compress=False))
+    assert opcode == frames.OP_MSG
+
+
+def test_open_msg_rejects_unnegotiated_deflate():
+    wire = frames.pack_msg(b"x" * (frames.COMPRESS_THRESHOLD + 1024),
+                           compress=True)
+    [(opcode, payload)] = frames.FrameDecoder().feed(wire)
+    assert opcode == frames.OP_MSG_DEFLATE
+    with pytest.raises(frames.FrameError, match="without negotiating"):
+        frames.open_msg(opcode, payload, compressed_ok=False)
+
+
+def test_open_msg_bomb_guard_caps_inflation():
+    """A tiny deflate body that inflates past max_frame is rejected
+    without materializing the bomb."""
+    import zlib
+    bomb = zlib.compress(b"\x00" * (1 << 22), 9)   # 4 MiB -> ~4 KiB
+    with pytest.raises(frames.FrameError, match="inflates past"):
+        frames.open_msg(frames.OP_MSG_DEFLATE, bomb, max_frame=1 << 16)
+    with pytest.raises(frames.FrameError, match="bad deflate"):
+        frames.open_msg(frames.OP_MSG_DEFLATE, b"not-deflate-bytes")
+
+
+def test_negotiate_compress_intersects_preference():
+    assert frames.negotiate_compress(["deflate"]) == "deflate"
+    assert frames.negotiate_compress(["zstd", "deflate"]) == "deflate"
+    assert frames.negotiate_compress(["zstd"]) is None
+    assert frames.negotiate_compress([]) is None
+
+
+def test_hello_bodies_carry_auth_and_compress_fields():
+    hello = frames.parse_hello(frames.hello_body(
+        2, ("pfc1", "json"), auth=True, compress=("deflate",)))
+    assert hello["auth"] is True
+    assert list(hello["compress"]) == ["deflate"]
+    # absent when unarmed: old peers never see unknown-looking fields
+    plain = frames.parse_hello(frames.hello_body(2, ("pfc1",)))
+    assert "auth" not in plain and "compress" not in plain
+    ack = frames.parse_hello(frames.hello_ack_body(
+        2, "pfc1", token="tok", compress="deflate"))
+    assert ack["token"] == "tok" and ack["compress"] == "deflate"
+    plain_ack = frames.parse_hello(frames.hello_ack_body(2, "pfc1"))
+    assert "token" not in plain_ack and "compress" not in plain_ack
+
+
+def test_compressed_tcp_worker_end_to_end_bit_identical(tiny_bank):
+    """Full wire path with negotiated deflate: the bank payload ships
+    compressed (it is far over the threshold) and every exec answers
+    bit-identically to the local bank."""
+    bank, X, gids = tiny_bank
+    ref = bank.execute(X, gids)
+    with WorkerServer() as server:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[server.address]) as plane:
+            assert plane.workers[0].compress == "deflate"
+            sharded = plane.load(bank)
+            assert sharded.execute(X, gids).tobytes() == ref.tobytes()
+    # a server that offers no compression negotiates down to plain frames
+    with WorkerServer(compress=()) as server:
+        with ShardPlane(workers=0, mode="thread",
+                        remote=[server.address]) as plane:
+            assert plane.workers[0].compress is None
+            sharded = plane.load(bank)
+            assert sharded.execute(X, gids).tobytes() == ref.tobytes()
 
 
 def test_old_protocol1_json_worker_negotiates_down(tiny_bank):
